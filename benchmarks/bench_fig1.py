@@ -1,0 +1,71 @@
+"""Figure 1 (paper §7.2): depth-2 predicate expressions.
+
+1a: total runtime (plan + execute) per algorithm vs #atoms — shows the
+    TDACB-class optimal planner's exponential planning blow-up.
+1b: runtime without the optimal planner — ShallowFish/DeepFish vs NoOrOpt.
+1c: number of evaluations — ShallowFish == optimal at depth 2 (Thm 5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.columnar import make_forest_table, random_tree
+
+from .common import aggregate, csv_line, run_suite
+
+N_ATOMS = (4, 6, 8, 10, 12, 14, 16)
+N_QUERIES = 20
+OPTIMAL_MAX_N = 12
+
+
+def run(table=None, n_queries: int = N_QUERIES, seed: int = 0,
+        varying_cost: bool = False):
+    table = table if table is not None else make_forest_table(200_000, 12)
+    rng = np.random.default_rng(seed)
+    lines = []
+    all_rows = []
+    for n in N_ATOMS:
+        queries = [random_tree(table, n, 2, rng, varying_cost)
+                   for _ in range(n_queries)]
+        rows = run_suite(table, queries,
+                         ["shallowfish", "deepfish", "nooropt", "optimal"],
+                         optimal_max_n=OPTIMAL_MAX_N)
+        all_rows += rows
+        agg = aggregate(rows)
+        sf_ev = np.mean([r.evals for r in agg[("shallowfish", n)]])
+        for algo in ("shallowfish", "deepfish", "nooropt", "optimal"):
+            if (algo, n) not in agg:
+                continue
+            rs = agg[(algo, n)]
+            tot_us = np.mean([r.total_s for r in rs]) * 1e6
+            plan_us = np.mean([r.plan_s for r in rs]) * 1e6
+            ev = np.mean([r.evals for r in rs])
+            tag = "uc" if not varying_cost else "vc"
+            lines.append(csv_line(f"fig1a_{tag}_runtime_{algo}_n{n}", tot_us,
+                                  f"plan_us={plan_us:.1f}"))
+            lines.append(csv_line(f"fig1c_{tag}_evals_{algo}_n{n}", ev,
+                                  f"vs_sf={ev / sf_ev:.4f}"))
+    return lines, all_rows
+
+
+def main():
+    lines, rows = run()
+    for l in lines:
+        print(l)
+    # headline claims
+    agg = aggregate(rows, key=lambda r: r.algo)
+    sf = np.mean([r.evals for r in agg["shallowfish"]])
+    no = np.mean([r.evals for r in agg["nooropt"]])
+    print(csv_line("fig1_headline_sf_vs_nooropt_evals", 0.0,
+                   f"speedup={no / sf:.3f}x"))
+    opt_rows = [r for r in agg.get("optimal", []) if r.n_atoms >= 10]
+    sf_plan = np.mean([r.plan_s for r in agg["shallowfish"]]) * 1e6
+    if opt_rows:
+        opt_plan = np.mean([r.plan_s for r in opt_rows]) * 1e6
+        print(csv_line("fig1_headline_planning_us_sf", sf_plan,
+                       f"optimal_n>=10_us={opt_plan:.0f} "
+                       f"ratio={opt_plan / sf_plan:.0f}x"))
+
+
+if __name__ == "__main__":
+    main()

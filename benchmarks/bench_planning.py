@@ -1,0 +1,42 @@
+"""Planning-time scaling: ShallowFish O(n log n) / DeepFish O(n^2-ish) vs
+the TDACB-class optimal subset-DP O(2^n · n) — the paper's Fig 1a blow-up,
+isolated from execution."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.columnar import make_forest_table, random_tree
+from repro.core import PerAtomCostModel, deepfish, optimal_plan, shallowfish
+
+from .common import csv_line
+
+
+def run(table=None, seed: int = 2):
+    table = table if table is not None else make_forest_table(50_000, 12)
+    rng = np.random.default_rng(seed)
+    model = PerAtomCostModel()
+    lines = []
+    for n in (6, 8, 10, 12, 14, 16):
+        trees = [random_tree(table, n, 3, rng) for _ in range(3)]
+        for name, planner, cap in (("shallowfish", shallowfish, 99),
+                                   ("deepfish", deepfish, 99),
+                                   ("optimal", optimal_plan, 16)):
+            if n > cap:
+                continue
+            t0 = time.perf_counter()
+            for t in trees:
+                planner(t, model)
+            dt = (time.perf_counter() - t0) / len(trees)
+            lines.append(csv_line(f"planning_{name}_n{n}", dt * 1e6, ""))
+    return lines
+
+
+def main():
+    for l in run():
+        print(l)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Shared benchmark harness: run query suites through the four algorithms
+on the columnar engine, timing plan+execution and counting evaluations
+(the paper's two metrics, §7)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.columnar import BitmapBackend, make_forest_table, random_tree
+from repro.core import (PerAtomCostModel, deepfish, execute_plan, nooropt,
+                        optimal_plan, shallowfish)
+
+PLANNERS = {
+    "shallowfish": shallowfish,
+    "deepfish": deepfish,
+    "nooropt": nooropt,
+    "optimal": optimal_plan,      # TDACB-class subset-DP (exponential)
+}
+
+
+@dataclass
+class Row:
+    algo: str
+    n_atoms: int
+    depth: int
+    plan_s: float
+    exec_s: float
+    evals: float
+    weighted: float
+
+    @property
+    def total_s(self):
+        return self.plan_s + self.exec_s
+
+
+def run_suite(table, queries, algos, optimal_max_n: int = 12) -> List[Row]:
+    model = PerAtomCostModel()
+    rows: List[Row] = []
+    for tree in queries:
+        for algo in algos:
+            if algo == "optimal" and tree.n > optimal_max_n:
+                continue
+            planner = PLANNERS[algo]
+            t0 = time.perf_counter()
+            plan = planner(tree, model, total_records=table.n_records)
+            t1 = time.perf_counter()
+            be = BitmapBackend(table)
+            execute_plan(plan, be)
+            t2 = time.perf_counter()
+            rows.append(Row(algo, tree.n, tree.depth, t1 - t0, t2 - t1,
+                            be.stats.records_evaluated,
+                            be.stats.weighted_cost))
+    return rows
+
+
+def aggregate(rows: List[Row], key=lambda r: (r.algo, r.n_atoms)):
+    out: Dict = {}
+    for r in rows:
+        out.setdefault(key(r), []).append(r)
+    return out
+
+
+def csv_line(name: str, us_per_call: float, derived) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

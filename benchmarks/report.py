@@ -1,0 +1,100 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONL
+records (experiments/dryrun_single.jsonl + dryrun_multi.jsonl)."""
+from __future__ import annotations
+
+import json
+import sys
+from collections import OrderedDict
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path):
+    recs = {}
+    try:
+        for line in open(path):
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r.get("tag", ""))] = r
+    except FileNotFoundError:
+        pass
+    return recs
+
+
+def gb(x):
+    return f"{x / 1e9:.2f}"
+
+
+def dryrun_table(single, multi):
+    lines = [
+        "| arch | shape | 16x16 | bytes/dev (GB) | HLO flops/dev | "
+        "2x16x16 | bytes/dev (GB) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    archs = OrderedDict()
+    for (a, s, t), r in single.items():
+        if not t:
+            archs.setdefault(a, {})[s] = r
+    for a, shapes in archs.items():
+        for s in SHAPE_ORDER:
+            r = shapes.get(s)
+            if r is None:
+                continue
+            m = multi.get((a, s, ""))
+            if r["status"] == "skipped":
+                lines.append(f"| {a} | {s} | skip (full-attn @500k) | — | — "
+                             f"| skip | — |")
+                continue
+            mem = r.get("memory", {})
+            ca = r.get("cost_analysis", {})
+            st1 = "OK" if r["status"] == "ok" else "ERR"
+            st2 = ("OK" if (m or {}).get("status") == "ok"
+                   else ("skip" if (m or {}).get("status") == "skipped"
+                         else "ERR" if m else "—"))
+            mem2 = (m or {}).get("memory", {})
+            lines.append(
+                f"| {a} | {s} | {st1} | {gb(mem.get('total_bytes', 0))} | "
+                f"{ca.get('flops', 0):.3e} | {st2} | "
+                f"{gb(mem2.get('total_bytes', 0)) if mem2 else '—'} |")
+    return "\n".join(lines)
+
+
+def roofline_table(single):
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+        "| coll GB/dev | MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, t), r in sorted(single.items(),
+                               key=lambda kv: (kv[0][0],
+                                               SHAPE_ORDER.index(kv[0][1]))):
+        if t:
+            continue
+        rl = r.get("roofline")
+        if not rl:
+            continue
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / dom if dom else 0.0
+        lines.append(
+            f"| {a} | {s} | {rl['compute_s']:.3f} | {rl['memory_s']:.3f} | "
+            f"{rl['collective_s']:.3f} | {rl['bottleneck']} | "
+            f"{rl['coll_bytes_per_dev'] / 1e9:.1f} | "
+            f"{rl['model_flops']:.2e} | {rl['useful_ratio']:.3f} | "
+            f"{frac:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    single = load("experiments/dryrun_single.jsonl")
+    # corrected re-runs override earlier records (MoE flops surrogate +
+    # microbatch-scale fix; see EXPERIMENTS §Roofline methodology)
+    for key, rec in load("experiments/dryrun_fix1.jsonl").items():
+        single[key] = rec
+    multi = load("experiments/dryrun_multi.jsonl")
+    print("## Dry-run matrix\n")
+    print(dryrun_table(single, multi))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(single))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Uses the numpy oracle engine (the
+JAX/Pallas engines are validated for correctness in tests; interpret-mode
+Pallas is not meaningful to time on CPU).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.columnar import make_forest_table
+
+
+def main() -> None:
+    t0 = time.time()
+    print("# forest-style table: 200k records x 144 attrs "
+          "(paper uses 5.8M; scaled for CPU CI, distributions identical)")
+    table = make_forest_table(200_000, 12)
+    from . import bench_fig1, bench_fig2, bench_planning
+
+    print("# --- Figure 1: depth-2 (uniform cost) ---")
+    lines, _ = bench_fig1.run(table)
+    for l in lines:
+        print(l)
+    print("# --- Figure 1 (varying cost) ---")
+    lines, _ = bench_fig1.run(table, varying_cost=True, n_queries=10)
+    for l in lines:
+        print(l)
+    print("# --- Figure 2: depth-3 ---")
+    for l in bench_fig2.run(table, depth=3):
+        print(l)
+    print("# --- Figure 2: depth-4 ---")
+    for l in bench_fig2.run(table, depth=4, n_queries=10):
+        print(l)
+    print("# --- Planning-time scaling (Fig 1a isolation) ---")
+    for l in bench_planning.run(table):
+        print(l)
+    print(f"# total bench time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Serving driver: predicate-routed batched generation.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Incoming requests carry metadata columns; an admission/routing predicate
+(planned by the paper's engine) selects which requests this replica serves,
+then the batched engine prefills + greedy-decodes them.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Atom
+from repro.models import api
+from repro.models.config import LMConfig
+from repro.serve import RequestRouter, ServeEngine
+
+CFG = LMConfig(
+    name="serve-demo-25m", family="dense", n_layers=6, d_model=384,
+    n_heads=6, n_kv_heads=2, head_dim=64, d_ff=1536, vocab=32768,
+    max_seq=512, remat=False)
+
+BATCH = 4
+PROMPT_LEN = 32
+GEN = 16
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n_req = 64
+    requests = {
+        "tier": rng.choice(3, n_req).astype(np.int32),        # 2 = pro
+        "prompt_tokens": rng.integers(8, 4096, n_req).astype(np.int32),
+        "flagged": rng.choice(2, n_req, p=[.9, .1]).astype(np.int32),
+        "lang_id": rng.choice(4, n_req).astype(np.int32),
+    }
+    # admission predicate: pro users always; others only short, clean, lang 0
+    expr = ((Atom("tier", "eq", 2)
+             | (Atom("prompt_tokens", "lt", 512) & Atom("lang_id", "eq", 0)))
+            & Atom("flagged", "eq", 0))
+    admit = RequestRouter(expr).admit(requests)
+    print(f"router admitted {admit.sum()}/{n_req} requests")
+
+    params = api.init(CFG, jax.random.PRNGKey(0))
+    engine = ServeEngine(CFG, params, batch_size=BATCH, max_seq=CFG.max_seq)
+
+    admitted = np.nonzero(admit)[0][:BATCH]
+    prompts = rng.integers(0, CFG.vocab, (BATCH, PROMPT_LEN)).astype(np.int32)
+    t0 = time.time()
+    out = engine.generate(prompts, n_steps=GEN)
+    dt = time.time() - t0
+    print(f"served batch of {BATCH} (requests {admitted.tolist()}), "
+          f"{GEN} tokens each in {dt:.2f}s "
+          f"({BATCH * GEN / dt:.1f} tok/s on CPU)")
+    print("sample continuation token ids:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

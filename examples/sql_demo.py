@@ -1,0 +1,41 @@
+"""SQL demo: parse a SELECT with a disjunctive WHERE, plan, execute,
+project the selected columns.
+
+    PYTHONPATH=src python examples/sql_demo.py
+"""
+import numpy as np
+
+from repro.columnar import BitmapBackend, make_forest_table, unpack_bits
+from repro.columnar.sql import parse_select
+from repro.columnar.table import annotate_selectivities
+from repro.core import PerAtomCostModel, deepfish, execute_plan, normalize
+
+table = make_forest_table(100_000, n_dup=2)
+
+SQL = """
+SELECT elevation_0, slope_0, wilderness_0
+FROM forest
+WHERE (slope_0 < 12 AND elevation_0 > 2900)
+   OR (wilderness_0 = 3 AND NOT (h_dist_road_0 < 800))
+"""
+
+cols, table_name, expr = parse_select(SQL)
+tree = normalize(expr)
+annotate_selectivities(tree, table)
+print("parsed predicate tree:")
+print(tree.pretty())
+
+plan = deepfish(tree, PerAtomCostModel(), total_records=table.n_records)
+print("\n" + plan.describe())
+
+backend = BitmapBackend(table)
+bitmap = execute_plan(plan, backend)
+mask = unpack_bits(bitmap, table.n_records)
+ids = np.nonzero(mask)[0]
+print(f"\nselected {len(ids):,} / {table.n_records:,} records "
+      f"({backend.stats.records_evaluated:.0f} atom evaluations)")
+print("\nfirst rows of the projection:")
+header = " | ".join(f"{c:>14s}" for c in cols)
+print(header)
+for i in ids[:5]:
+    print(" | ".join(f"{table[c][i]:>14.1f}" for c in cols))

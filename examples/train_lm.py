@@ -1,0 +1,93 @@
+"""End-to-end training driver: predicate-filtered data pipeline -> LM
+training with checkpointing, fault tolerance and straggler monitoring.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 40          # quick
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+The data pipeline is fronted by the paper's engine: a depth-3 quality
+filter over corpus-metadata columns is planned by DeepFish and executed on
+packed bitmaps before any token is synthesized.
+"""
+import argparse
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.data import (PredicateFilteredDataset, default_quality_filter,
+                        make_corpus_metadata)
+from repro.models import api
+from repro.models.config import LMConfig
+from repro.runtime import StragglerWatchdog, TrainLoop
+from repro.train import make_train_step
+
+PRESETS = {
+    # ~25M params: CPU-friendly demo
+    "tiny": dict(cfg=LMConfig(
+        name="demo-25m", family="dense", n_layers=6, d_model=384,
+        n_heads=6, n_kv_heads=2, head_dim=64, d_ff=1536, vocab=32768,
+        max_seq=512, microbatch=1, remat=False),
+        batch=4, seq=128),
+    # ~107M params: the "train a ~100M model" driver configuration
+    "100m": dict(cfg=LMConfig(
+        name="demo-107m", family="dense", n_layers=10, d_model=640,
+        n_heads=10, n_kv_heads=2, head_dim=64, d_ff=2560, vocab=32768,
+        max_seq=1024, microbatch=1, remat=False),
+        batch=8, seq=256),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="tiny")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    preset = PRESETS[args.preset]
+    cfg: LMConfig = preset["cfg"]
+    print(f"model: {cfg.name} ({api.n_params(cfg):,} params)")
+
+    # --- data plane: the paper's engine filters the corpus -----------------
+    meta = make_corpus_metadata(100_000)
+    ds = PredicateFilteredDataset(meta, default_quality_filter(),
+                                  seq_len=preset["seq"],
+                                  global_batch=preset["batch"],
+                                  vocab=cfg.vocab, seed=0)
+    print("predicate filter:", ds.filter_stats)
+
+    # --- train loop with fault tolerance -----------------------------------
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, lr=args.lr))
+    # init_state lives on the un-jitted factory
+    raw_step = make_train_step(cfg, lr=args.lr)
+    opt_state = raw_step.init_state(params)
+
+    loop = TrainLoop(
+        step_fn=lambda p, s, b: step_fn(p, s, b),
+        data_fn=ds,
+        ckpt=CheckpointManager(args.ckpt_dir, keep=2),
+        ckpt_every=args.ckpt_every,
+        watchdog=StragglerWatchdog())
+
+    t0 = time.time()
+    params, opt_state, history = loop.run(params, opt_state, args.steps)
+    dt = time.time() - t0
+    k = max(1, min(5, len(history) // 3))
+    first = np.mean([h["loss"] for h in history[:k]])
+    last = np.mean([h["loss"] for h in history[-k:]])
+    print(f"\n{len(history)} steps in {dt:.1f}s "
+          f"({dt / max(len(history), 1):.2f}s/step)")
+    print(f"loss: {first:.4f} -> {last:.4f}")
+    print(f"stragglers flagged: {len(loop.watchdog.flagged_steps)}")
+    assert last < first, "loss did not improve"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Sharded, atomic, async checkpointing + elastic restore.
+
+Layout: one ``.npz`` per checkpoint (key = "/"-joined pytree path) plus a
+``manifest.json`` (step, shapes, dtypes, mesh signature).  Writes go to a
+temp dir then ``os.rename`` — a crash mid-write never corrupts the latest
+checkpoint.  ``AsyncCheckpointer`` offloads serialization to a thread (the
+step loop never blocks on I/O).  ``restore`` device_puts onto ANY mesh via
+NamedShardings — elastic re-sharding across different topologies is free
+because arrays are stored unsharded (host gathers; fine for host-RAM-sized
+states, documented as the aggregation point for multi-host).
+"""
+from .manager import (CheckpointManager, AsyncCheckpointer, save_pytree,
+                      load_pytree, latest_step)
+
+__all__ = ["CheckpointManager", "AsyncCheckpointer", "save_pytree",
+           "load_pytree", "latest_step"]

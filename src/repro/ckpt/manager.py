@@ -1,0 +1,201 @@
+"""Checkpoint manager implementation (see package docstring)."""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_name(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _name(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    return str(entry)
+
+
+def _unflatten(flat: Dict[str, Any]):
+    """Rebuild nested dicts (lists were saved as dict-of-index)."""
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        cur = root
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = val
+    return root
+
+
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _encode(a: np.ndarray):
+    """npz cannot store ml_dtypes natively; view them as unsigned ints."""
+    name = a.dtype.name
+    if name in _VIEW_AS:
+        return a.view(_VIEW_AS[name]), name
+    return a, name
+
+
+def _decode(a: np.ndarray, dtype_name: str):
+    if dtype_name in _VIEW_AS and a.dtype == _VIEW_AS[dtype_name]:
+        import ml_dtypes
+        return a.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return a
+
+
+def save_pytree(tree, directory: str, step: int, extra: Optional[dict] = None):
+    """Atomic save: write to <dir>/.tmp-<step>, rename to <dir>/step_<step>."""
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f".tmp-{step}-{os.getpid()}")
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    encoded = {}
+    dtypes = {}
+    for k, a in arrays.items():
+        enc, name = _encode(a)
+        encoded[k] = enc
+        dtypes[k] = name
+    np.savez(os.path.join(tmp, "state.npz"), **encoded)
+    manifest = {
+        "step": step,
+        "keys": {k: {"shape": list(a.shape), "dtype": dtypes[k]}
+                 for k, a in arrays.items()},
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_pytree(directory: str, step: Optional[int] = None,
+                shardings=None):
+    """Load a checkpoint; optionally device_put with ``shardings`` (a pytree
+    of NamedShardings matching the saved structure) — this is the elastic
+    restore path (any mesh/topology)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "state.npz"))
+    flat = {k: _decode(data[k], manifest["keys"][k]["dtype"])
+            for k in data.files}
+    tree = _unflatten(flat)
+    if shardings is not None:
+        flat_sh = _flatten(shardings)
+        flat_t = _flatten(tree)
+        out = {k: jax.device_put(v, flat_sh[k]) if k in flat_sh else v
+               for k, v in flat_t.items()}
+        tree = _unflatten(out)
+    return tree, manifest
+
+
+class AsyncCheckpointer:
+    """Background-thread writer; ``save`` returns immediately."""
+
+    def __init__(self):
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            tree, directory, step, extra = item
+            try:
+                save_pytree(tree, directory, step, extra)
+            except BaseException as e:   # surfaced on next wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, tree, directory: str, step: int,
+             extra: Optional[dict] = None):
+        # materialize to host now so the step loop can mutate devices freely
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._q.put((host, directory, step, extra))
+
+    def wait(self):
+        self._q.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join()
+
+
+class CheckpointManager:
+    """Keep-last-N policy over save_pytree/load_pytree, optionally async."""
+
+    def __init__(self, directory: str, keep: int = 3, use_async: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_ckpt = AsyncCheckpointer() if use_async else None
+
+    def save(self, tree, step: int, extra: Optional[dict] = None):
+        if self.async_ckpt:
+            self.async_ckpt.save(tree, self.directory, step, extra)
+        else:
+            save_pytree(tree, self.directory, step, extra)
+        self._gc()
+
+    def restore(self, step: Optional[int] = None, shardings=None):
+        if self.async_ckpt:
+            self.async_ckpt.wait()
+        return load_pytree(self.directory, step, shardings)
+
+    def wait(self):
+        if self.async_ckpt:
+            self.async_ckpt.wait()
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

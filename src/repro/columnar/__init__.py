@@ -1,0 +1,18 @@
+"""Column-store substrate: packed bitmaps, columnar tables, synthetic data,
+selectivity stats, and plan executors (numpy oracle / JAX block engine /
+Pallas kernel engine)."""
+from .bitmap import (pack_bits, unpack_bits, popcount, bitmap_and, bitmap_or,
+                     bitmap_andnot, bitmap_full, bitmap_empty, WORD)
+from .table import Table, annotate_selectivities, empirical_selectivity
+from .forest import make_forest_table
+from .executor import BitmapBackend, JaxBlockBackend, run_query
+from .queries import random_tree, random_query_suite
+
+__all__ = [
+    "pack_bits", "unpack_bits", "popcount", "bitmap_and", "bitmap_or",
+    "bitmap_andnot", "bitmap_full", "bitmap_empty", "WORD",
+    "Table", "annotate_selectivities", "empirical_selectivity",
+    "make_forest_table",
+    "BitmapBackend", "JaxBlockBackend", "run_query",
+    "random_tree", "random_query_suite",
+]

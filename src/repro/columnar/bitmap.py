@@ -1,0 +1,63 @@
+"""Packed record-id bitmaps (numpy reference implementation).
+
+Record sets are ``uint32`` arrays, 32 records per word, LSB-first.  These are
+the column store's "lightweight index structures" (paper §2.1); set ops are
+word-wise logical ops.  The JAX/Pallas mirrors live in ``repro.kernels``
+(ref.py / ops.py); tests assert equivalence against this module.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+WORD = 32
+
+
+def n_words(n_records: int) -> int:
+    return (n_records + WORD - 1) // WORD
+
+
+def pack_bits(mask: np.ndarray) -> np.ndarray:
+    """bool[n] -> uint32[ceil(n/32)], LSB-first within each word."""
+    mask = np.asarray(mask, dtype=bool)
+    n = mask.shape[0]
+    pad = (-n) % WORD
+    if pad:
+        mask = np.concatenate([mask, np.zeros(pad, dtype=bool)])
+    b = np.packbits(mask.reshape(-1, WORD), axis=1, bitorder="little")
+    return b.view(np.uint32).reshape(-1).copy()
+
+
+def unpack_bits(words: np.ndarray, n_records: int) -> np.ndarray:
+    """uint32[w] -> bool[n_records]."""
+    b = np.unpackbits(words.view(np.uint8), bitorder="little")
+    return b[:n_records].astype(bool)
+
+
+def popcount(words: np.ndarray) -> int:
+    return int(np.unpackbits(words.view(np.uint8), bitorder="little").sum())
+
+
+def bitmap_full(n_records: int) -> np.ndarray:
+    w = n_words(n_records)
+    out = np.full(w, 0xFFFFFFFF, dtype=np.uint32)
+    rem = n_records % WORD
+    if rem:
+        out[-1] = np.uint32((1 << rem) - 1)
+    return out
+
+
+def bitmap_empty(n_records: int) -> np.ndarray:
+    return np.zeros(n_words(n_records), dtype=np.uint32)
+
+
+def bitmap_and(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return a & b
+
+
+def bitmap_or(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return a | b
+
+
+def bitmap_andnot(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """a \\ b."""
+    return a & ~b

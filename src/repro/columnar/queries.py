@@ -1,0 +1,103 @@
+"""Random predicate-expression generator (paper §7.1).
+
+Trees have a fixed depth (2/3/4), root randomly AND/OR, 2-5 children per
+inner node, children may terminate early as leaves (unbalanced trees).
+Quantitative atoms are ``col < c`` with c drawn so selectivity is one of
+{0.1, ..., 0.9} (from the realized column quantiles); qualitative atoms are
+``col == v``.  Variable-cost experiments draw per-atom cost factors from
+[1, 10] (the paper's 1-10ns sleep per record).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from ..core.predicate import And, Atom, Node, Or, PredicateTree, normalize
+from .table import Table
+
+_SELS = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+
+
+def _make_atom(table: Table, rng: np.random.Generator,
+               varying_cost: bool, used: set) -> Atom:
+    cols = table.column_names
+    for _ in range(64):
+        name = cols[rng.integers(len(cols))]
+        col = table.columns[name]
+        cost = float(rng.uniform(1.0, 10.0)) if varying_cost else 1.0
+        if np.issubdtype(col.dtype, np.number) and len(np.unique(col[:200])) > 16:
+            gamma = float(rng.choice(_SELS))
+            value = table.value_at_selectivity(name, gamma)
+            atom = Atom(name, "lt", value, selectivity=gamma, cost_factor=cost)
+        else:
+            vals = np.unique(col)
+            v = vals[rng.integers(len(vals))]
+            atom = Atom(name, "eq", v, cost_factor=cost)
+            atom.selectivity = table.estimate_selectivity(atom)
+        key = (atom.column, atom.op, atom.value)
+        if key not in used:           # the paper assumes unique atoms (§2.3)
+            used.add(key)
+            return atom
+    raise RuntimeError("could not draw a unique atom; too few columns")
+
+
+def _partition(rng: np.random.Generator, quota: int, cap: int):
+    """Split quota into 2..5 parts, each 1..cap (cap = subtree capacity)."""
+    kmin = max(2, -(-quota // cap))
+    kmax = min(5, quota)
+    k = int(rng.integers(kmin, kmax + 1)) if kmax > kmin else kmin
+    parts = [1] * k
+    rem = quota - k
+    while rem > 0:
+        j = int(rng.integers(k))
+        if parts[j] < cap:
+            parts[j] += 1
+            rem -= 1
+    return parts
+
+
+def _build(table: Table, rng: np.random.Generator, quota: int, level: int,
+           depth: int, kind: type, varying_cost: bool, used: set) -> Node:
+    """Build a node with exactly ``quota`` atom descendants."""
+    if quota == 1:
+        return _make_atom(table, rng, varying_cost, used)
+    if level > depth:
+        raise AssertionError("partition exceeded subtree capacity")
+    # capacity of each child subtree: 5 atoms per remaining inner level
+    cap = 5 ** (depth - level) if depth > level else 1
+    if level == depth:
+        # children must all be leaves
+        children = [_make_atom(table, rng, varying_cost, used)
+                    for _ in range(quota)]
+        return kind(children)
+    parts = _partition(rng, quota, cap)
+    sub = Or if kind is And else And
+    children = [
+        _build(table, rng, int(p), level + 1, depth, sub, varying_cost, used)
+        for p in parts
+    ]
+    return kind(children)
+
+
+def random_tree(table: Table, n_atoms: int, depth: int,
+                rng: Optional[np.random.Generator] = None,
+                varying_cost: bool = False, max_tries: int = 200) -> PredicateTree:
+    """Random normalized predicate tree with ``n_atoms`` atoms, exact depth."""
+    rng = rng or np.random.default_rng(0)
+    if n_atoms < 2 ** (depth - 1):
+        raise ValueError(f"cannot reach depth {depth} with {n_atoms} atoms")
+    for _ in range(max_tries):
+        kind = And if rng.random() < 0.5 else Or
+        root = _build(table, rng, n_atoms, 1, depth, kind, varying_cost, set())
+        tree = normalize(root)
+        if tree.depth == depth and tree.n == n_atoms:
+            return tree
+    raise RuntimeError(f"failed to build depth-{depth} tree with {n_atoms} atoms")
+
+
+def random_query_suite(table: Table, n_queries: int, n_atoms: int, depth: int,
+                       seed: int = 0, varying_cost: bool = False) -> List[PredicateTree]:
+    rng = np.random.default_rng(seed)
+    return [random_tree(table, n_atoms, depth, rng, varying_cost)
+            for _ in range(n_queries)]

@@ -1,0 +1,177 @@
+"""Columnar tables + column statistics.
+
+A :class:`Table` stores each attribute as a separate numpy array (the
+column-store layout, paper §2.1) plus lazily computed per-column stats
+(quantile sketch, distinct values) from which atom selectivities are
+estimated — the paper's footnote 14 assumption, made concrete.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from ..core.predicate import Atom, Node, PredicateTree
+
+_QUANTILE_GRID = 512
+
+
+@dataclass
+class ColumnStats:
+    quantiles: Optional[np.ndarray] = None      # numeric columns
+    value_freqs: Optional[Dict[Any, float]] = None  # categorical columns
+
+
+class Table:
+    """Dict of equal-length columns + stats + predicate-atom evaluation."""
+
+    def __init__(self, columns: Dict[str, np.ndarray]):
+        if not columns:
+            raise ValueError("empty table")
+        lens = {len(v) for v in columns.values()}
+        if len(lens) != 1:
+            raise ValueError("ragged columns")
+        self.columns = columns
+        self.n_records = lens.pop()
+        self._stats: Dict[str, ColumnStats] = {}
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.columns[name]
+
+    @property
+    def column_names(self):
+        return list(self.columns)
+
+    # -- statistics ----------------------------------------------------------
+    def stats(self, name: str) -> ColumnStats:
+        st = self._stats.get(name)
+        if st is None:
+            col = self.columns[name]
+            if np.issubdtype(col.dtype, np.number):
+                qs = np.quantile(col, np.linspace(0.0, 1.0, _QUANTILE_GRID))
+                st = ColumnStats(quantiles=qs)
+            else:
+                vals, counts = np.unique(col, return_counts=True)
+                st = ColumnStats(value_freqs={v: c / self.n_records
+                                              for v, c in zip(vals, counts)})
+            self._stats[name] = st
+        return st
+
+    def value_at_selectivity(self, name: str, gamma: float) -> float:
+        """Constant c such that (col < c) has selectivity ~= gamma."""
+        return float(np.interp(gamma, np.linspace(0, 1, _QUANTILE_GRID),
+                               self.stats(name).quantiles))
+
+    def estimate_selectivity(self, atom: Atom) -> float:
+        """Selectivity from column stats (no data scan)."""
+        col = atom.column
+        st = self.stats(col)
+        if st.quantiles is not None:
+            grid = np.linspace(0.0, 1.0, _QUANTILE_GRID)
+            cdf = float(np.interp(atom.value, st.quantiles, grid))
+            if atom.op == "lt" or atom.op == "le":
+                g = cdf
+            elif atom.op == "gt" or atom.op == "ge":
+                g = 1.0 - cdf
+            elif atom.op == "eq":
+                g = 1.0 / max(len(np.unique(st.quantiles)), 2)
+            elif atom.op == "ne":
+                g = 1.0 - 1.0 / max(len(np.unique(st.quantiles)), 2)
+            else:
+                g = 0.5
+        else:
+            freqs = st.value_freqs
+            if atom.op == "eq":
+                g = freqs.get(atom.value, 0.0)
+            elif atom.op == "ne":
+                g = 1.0 - freqs.get(atom.value, 0.0)
+            elif atom.op == "in":
+                g = sum(freqs.get(v, 0.0) for v in atom.value)
+            elif atom.op == "not_in":
+                g = 1.0 - sum(freqs.get(v, 0.0) for v in atom.value)
+            else:
+                g = 0.5
+        return float(min(max(g, 1e-6), 1.0 - 1e-6))
+
+    # -- atom evaluation (the costed action) ----------------------------------
+    def eval_atom(self, atom: Atom, idx: Optional[np.ndarray] = None) -> np.ndarray:
+        """Evaluate ``atom`` on records ``idx`` (all records if None).
+
+        This is the executor primitive: it *fetches* only the requested
+        records from the column (gather) and applies the comparison —
+        cost proportional to count(D), as the paper's cost model assumes.
+        """
+        col = self.columns[atom.column]
+        vals = col if idx is None else col[idx]
+        return _apply_op(atom, vals)
+
+
+def _apply_op(atom: Atom, vals: np.ndarray) -> np.ndarray:
+    op, v = atom.op, atom.value
+    if op == "lt":
+        return vals < v
+    if op == "le":
+        return vals <= v
+    if op == "gt":
+        return vals > v
+    if op == "ge":
+        return vals >= v
+    if op == "eq":
+        return vals == v
+    if op == "ne":
+        return vals != v
+    if op == "in":
+        return np.isin(vals, np.asarray(list(v)))
+    if op == "not_in":
+        return ~np.isin(vals, np.asarray(list(v)))
+    if op == "like":
+        pat = re.compile(_like_to_regex(v), re.IGNORECASE)
+        return np.fromiter((bool(pat.fullmatch(str(x))) for x in vals),
+                           dtype=bool, count=len(vals))
+    if op == "not_like":
+        pat = re.compile(_like_to_regex(v), re.IGNORECASE)
+        return np.fromiter((not pat.fullmatch(str(x)) for x in vals),
+                           dtype=bool, count=len(vals))
+    if op == "udf":
+        return np.asarray(atom.fn(vals), dtype=bool)
+    if op == "not_udf":
+        return ~np.asarray(atom.fn(vals), dtype=bool)
+    raise ValueError(f"unknown op {op}")
+
+
+def _like_to_regex(pattern: str) -> str:
+    out = []
+    for ch in pattern:
+        if ch == "%":
+            out.append(".*")
+        elif ch == "_":
+            out.append(".")
+        else:
+            out.append(re.escape(ch))
+    return "".join(out)
+
+
+def empirical_selectivity(table: Table, atom: Atom,
+                          sample: int = 65536, seed: int = 0) -> float:
+    """Measured selectivity on a uniform sample (planner statistics)."""
+    n = table.n_records
+    if n <= sample:
+        idx = None
+    else:
+        idx = np.random.default_rng(seed).choice(n, size=sample, replace=False)
+    hits = table.eval_atom(atom, idx)
+    g = float(hits.mean())
+    return min(max(g, 1e-6), 1.0 - 1e-6)
+
+
+def annotate_selectivities(tree: PredicateTree, table: Table,
+                           empirical: bool = False, sample: int = 65536) -> PredicateTree:
+    """Fill atom selectivities from table stats (in place; returns tree)."""
+    for atom in tree.atoms:
+        if empirical:
+            atom.selectivity = empirical_selectivity(table, atom, sample)
+        else:
+            atom.selectivity = table.estimate_selectivity(atom)
+    return tree

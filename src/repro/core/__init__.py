@@ -1,0 +1,35 @@
+"""The paper's contribution: predicate-evaluation planning for column stores.
+
+Public API:
+    Atom, And, Or, Not, normalize      — predicate expression IR
+    CostModel family                   — §2.4 cost models (+ TPU block model)
+    shallowfish / deepfish / optimal_plan / nooropt — planners -> Plan
+    execute_plan                       — run a Plan on any SetBackend
+    BestDMachine                       — Algorithms 1+2 (BestD + Update)
+"""
+from .predicate import Atom, And, Or, Not, Node, PredicateTree, normalize, tree_copy
+from .cost import (CostModel, MemoryCostModel, HddCostModel, PerAtomCostModel,
+                   BlockCostModel, check_triangle)
+from .sets import SetBackend, VertexBackend, Stats
+from .bestd import BestDMachine
+from .orderp import orderp, orderp_with_cost
+from .estimate import EstimatorState, plan_cost, step_fractions
+from .plan import Plan, execute_plan, execute_bestd, finalize_plan
+from .shallowfish import shallowfish, shallowfish_execute
+from .deepfish import deepfish, one_lookahead_order
+from .optimal import optimal_plan, optimal_bruteforce
+from .nooropt import nooropt, nooropt_execute
+
+__all__ = [
+    "Atom", "And", "Or", "Not", "Node", "PredicateTree", "normalize", "tree_copy",
+    "CostModel", "MemoryCostModel", "HddCostModel", "PerAtomCostModel",
+    "BlockCostModel", "check_triangle",
+    "SetBackend", "VertexBackend", "Stats", "BestDMachine",
+    "orderp", "orderp_with_cost",
+    "EstimatorState", "plan_cost", "step_fractions",
+    "Plan", "execute_plan", "execute_bestd", "finalize_plan",
+    "shallowfish", "shallowfish_execute",
+    "deepfish", "one_lookahead_order",
+    "optimal_plan", "optimal_bruteforce",
+    "nooropt", "nooropt_execute",
+]

@@ -1,0 +1,140 @@
+"""BestD + Update (paper Algorithms 1 & 2) as a backend-generic machine.
+
+For any atom ordering, ``BestDMachine`` maintains the Xi / Delta+ / Delta-
+maps and produces the provably optimal record set D_i for every step
+(Theorem 5); executing all steps leaves Xi[root] == psi*(D) (Theorem 4).
+
+Algorithm 1 is implemented as an equivalent top-down walk over the atom's
+lineage Omega(i): at each AND ancestor intersect complete siblings' Xi and
+subtract negatively determinable siblings' Delta-; at each OR ancestor
+subtract complete siblings' Xi and positively determinable siblings' Delta+.
+(The paper's mutual recursion builds exactly this as it unwinds from l=0.)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .predicate import And, Atom, Node, Or, PredicateTree
+from .sets import SetBackend
+
+
+class BestDMachine:
+    def __init__(self, tree: PredicateTree, backend: SetBackend):
+        self.tree = tree
+        self.backend = backend
+        self.applied: frozenset = frozenset()
+        self.xi: Dict[int, object] = {}
+        self.dplus: Dict[int, object] = {}
+        self.dminus: Dict[int, object] = {}
+        self.step_sets: List[object] = []
+        self.order: List[int] = []
+
+    # -- Delta accessors with the paper's conventions ------------------------
+    def _dplus(self, node: Node):
+        return self.dplus.get(id(node), self.backend.empty())
+
+    def _dminus(self, node: Node):
+        return self.dminus.get(id(node), self.backend.empty())
+
+    # -- Algorithm 1 ----------------------------------------------------------
+    def bestd_region(self, aid: int, levels: Optional[int] = None):
+        """BestD walk over the first ``levels`` inner nodes of Omega(aid).
+
+        ``levels=None`` -> full walk (all strict ancestors): the paper's
+        BestD(i, |Omega(i)|-1).  ``levels=j`` -> the paper's Z = BestD(i, j)
+        used by Update for the node at 0-based lineage position j.
+        """
+        tree, be = self.tree, self.backend
+        lineage = tree.lineage(aid)
+        n_inner = len(lineage) - 1
+        if levels is None:
+            levels = n_inner
+        x = be.full()
+        for l in range(levels):
+            node, path_child = lineage[l], lineage[l + 1]
+            if isinstance(node, And):
+                for c in node.children:
+                    if c is path_child:
+                        continue
+                    if tree.complete(c, self.applied):
+                        x = be.inter(x, self.xi[id(c)])
+                    elif tree.determ_neg(c, self.applied):
+                        x = be.diff(x, self._dminus(c))
+            else:  # Or
+                removed = be.empty()
+                for c in node.children:
+                    if c is path_child:
+                        continue
+                    if tree.complete(c, self.applied):
+                        removed = be.union(removed, self.xi[id(c)])
+                    elif tree.determ_pos(c, self.applied):
+                        removed = be.union(removed, self._dplus(c))
+                x = be.diff(x, removed)
+        return x
+
+    # -- Algorithm 2's UPDATE --------------------------------------------------
+    def apply_step(self, aid: int):
+        """Apply atom ``aid`` on BestD's D_i; run Update.  Returns (D_i, sat)."""
+        tree, be = self.tree, self.backend
+        atom = tree.atoms[aid]
+        d_i = self.bestd_region(aid)
+        sat = be.apply_atom(atom, d_i)
+        self.step_sets.append(d_i)
+        self.order.append(aid)
+
+        self.xi[id(atom)] = sat
+        self.dplus[id(atom)] = sat
+        self.dminus[id(atom)] = be.diff(d_i, sat)
+
+        applied2 = self.applied | {aid}
+        lineage = tree.lineage(aid)
+        inner = lineage[:-1]
+        for j in range(len(inner) - 1, -1, -1):
+            node = inner[j]
+            z = self.bestd_region(aid, j)
+            is_and = isinstance(node, And)
+            if tree.complete(node, applied2) and id(node) not in self.xi:
+                acc = None
+                for c in node.children:
+                    v = self.xi[id(c)]
+                    acc = v if acc is None else (be.inter(acc, v) if is_and
+                                                 else be.union(acc, v))
+                self.xi[id(node)] = be.inter(acc, z)
+            if tree.determ_pos(node, applied2):
+                acc = None
+                for c in node.children:
+                    if is_and:
+                        v = self._dplus(c)
+                        acc = v if acc is None else be.inter(acc, v)
+                    else:
+                        if tree.determ_pos(c, applied2) or tree.complete(c, applied2):
+                            v = self._dplus(c)
+                            acc = v if acc is None else be.union(acc, v)
+                if acc is not None:
+                    self.dplus[id(node)] = be.inter(acc, z)
+            if tree.determ_neg(node, applied2):
+                acc = None
+                for c in node.children:
+                    if is_and:
+                        if tree.determ_neg(c, applied2) or tree.complete(c, applied2):
+                            v = self._dminus(c)
+                            acc = v if acc is None else be.union(acc, v)
+                    else:
+                        v = self._dminus(c)
+                        acc = v if acc is None else be.inter(acc, v)
+                if acc is not None:
+                    self.dminus[id(node)] = be.inter(acc, z)
+        self.applied = applied2
+        return d_i, sat
+
+    def run(self, order: Sequence[int]):
+        """Execute a full ordering; return Xi[root] (== psi*(D), Thm 4)."""
+        for aid in order:
+            self.apply_step(aid)
+        return self.result()
+
+    def result(self):
+        rid = id(self.tree.root)
+        if rid not in self.xi:
+            raise RuntimeError("plan incomplete: root not complete yet")
+        return self.xi[rid]

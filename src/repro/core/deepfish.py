@@ -1,0 +1,77 @@
+"""DeepFish (paper §5.3, Algorithm 3).
+
+OrderP's depth-first assumption breaks at depth >= 3: a node can be
+*determinable but not complete* (Lemma 1 fails), and exploiting that requires
+interleaving subtrees.  ``OneLookaheadP`` greedily picks the unapplied atom
+with the best (drop in remaining cost) / (cost of applying) ratio, where
+"remaining cost" prices every unapplied atom at its current BestD set.
+DeepFish is the hybrid: it prices both the OneLookaheadP plan and the
+ShallowFish plan and returns the cheaper one.
+
+Planning happens on the analytic estimator (expected record fractions under
+the product measure) — execution always uses BestD on real sets, which is
+optimal for *any* ordering (Theorem 5), so a mis-estimate can only cost
+ordering quality, never correctness.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+from .cost import CostModel, MemoryCostModel
+from .estimate import EstimatorState
+from .plan import Plan, finalize_plan
+from .predicate import PredicateTree
+from .shallowfish import shallowfish
+
+
+def _remain_cost(tree: PredicateTree, st: EstimatorState, model: CostModel,
+                 total: float) -> float:
+    """REMAINCOST: price every unapplied atom at its current BestD set."""
+    s = 0.0
+    for atom in tree.atoms:
+        if atom.aid in st.applied:
+            continue
+        s += model.atom_cost(atom, st.bestd_fraction(atom.aid) * total)
+    return s
+
+
+def one_lookahead_order(tree: PredicateTree, model: CostModel,
+                        total: float = 1.0) -> List[int]:
+    """The OneLookaheadP ordering (greedy benefit/cost, one-step lookahead)."""
+    st = EstimatorState(tree)
+    order: List[int] = []
+    remaining = set(range(tree.n))
+    while remaining:
+        orig_cost = _remain_cost(tree, st, model, total)
+        best_aid, best_ratio, best_state = None, -1.0, None
+        for aid in sorted(remaining):
+            atom = tree.atoms[aid]
+            frac = st.bestd_fraction(aid)
+            c_apply = model.atom_cost(atom, frac * total)
+            st2 = st.apply(aid)
+            new_cost = _remain_cost(tree, st2, model, total)
+            ratio = (orig_cost - new_cost) / c_apply if c_apply > 0 else float("inf")
+            if ratio > best_ratio:
+                best_aid, best_ratio, best_state = aid, ratio, st2
+        order.append(best_aid)
+        remaining.remove(best_aid)
+        st = best_state
+    return order
+
+
+def deepfish(tree: PredicateTree, model: Optional[CostModel] = None,
+             total_records: float = 1.0) -> Plan:
+    """Hybrid planner: min(OneLookaheadP+BestD, ShallowFish) by priced cost."""
+    model = model or MemoryCostModel()
+    t0 = time.perf_counter()
+    la_order = one_lookahead_order(tree, model, total_records)
+    la_plan = finalize_plan(tree, la_order, "deepfish", model, t0, total_records)
+    sf_plan = shallowfish(tree, model, total_records)
+    if sf_plan.est_cost <= la_plan.est_cost:
+        chosen = Plan(tree=tree, order=sf_plan.order, planner="deepfish",
+                      est_cost=sf_plan.est_cost, est_fracs=sf_plan.est_fracs)
+        chosen.plan_time_s = time.perf_counter() - t0
+        return chosen
+    la_plan.plan_time_s = time.perf_counter() - t0
+    return la_plan

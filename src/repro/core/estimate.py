@@ -1,0 +1,151 @@
+"""Analytic plan-cost estimator (the planner's oracle for count(D_i)).
+
+BestD's step-i record set is, along P_i's lineage (Alg. 1):
+
+  * at an AND ancestor: intersect Xi of complete siblings, subtract
+    Delta^- of negatively determinable siblings;
+  * at an OR ancestor:  subtract Xi of complete siblings and Delta^+ of
+    positively determinable siblings.
+
+Because the children of any node have *disjoint atom supports*, the measures
+of these events compose exactly under the product measure defined by per-atom
+selectivities gamma_i.  Writing
+
+  dt(node) = P(node is determined TRUE  by the applied atoms)
+  df(node) = P(node is determined FALSE by the applied atoms)
+
+(Lemma 14's characterization of Delta^+/Delta^-), BestD's expected fraction is
+
+  frac(P_i | applied) = prod over lineage levels l, siblings s of the path
+                        child at Omega_l(i):
+                            (1 - df(s))  if Omega_l(i) is AND
+                            (1 - dt(s))  if Omega_l(i) is OR
+
+which covers complete siblings too (complete => dt = gamma, df = 1-gamma).
+This reproduces the paper's Example 1 numbers exactly (see tests) and is the
+same independence assumption OrderP already makes; the *executor* never uses
+it (it operates on real bitmaps).
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+
+from .cost import CostModel
+from .predicate import And, Atom, Node, Or, PredicateTree
+
+
+class EstimatorState:
+    """dt/df state for a given applied-atom set, updatable incrementally."""
+
+    __slots__ = ("tree", "applied", "_dt", "_df")
+
+    def __init__(self, tree: PredicateTree, applied: Iterable[int] = ()):
+        self.tree = tree
+        self.applied: frozenset = frozenset(applied)
+        self._dt: Dict[int, float] = {}
+        self._df: Dict[int, float] = {}
+        self._recompute(tree.root)
+
+    def copy(self) -> "EstimatorState":
+        st = object.__new__(EstimatorState)
+        st.tree = self.tree
+        st.applied = self.applied
+        st._dt = dict(self._dt)
+        st._df = dict(self._df)
+        return st
+
+    def _recompute(self, node: Node) -> Tuple[float, float]:
+        if isinstance(node, Atom):
+            if node.aid in self.applied:
+                dt, df = node.selectivity, 1.0 - node.selectivity
+            else:
+                dt, df = 0.0, 0.0
+        elif isinstance(node, And):
+            dt, df = 1.0, 1.0
+            for c in node.children:
+                cdt, cdf = self._recompute(c)
+                dt *= cdt
+                df *= (1.0 - cdf)
+            df = 1.0 - df
+        else:  # Or
+            dt, df = 1.0, 1.0
+            for c in node.children:
+                cdt, cdf = self._recompute(c)
+                dt *= (1.0 - cdt)
+                df *= cdf
+            dt = 1.0 - dt
+        self._dt[id(node)] = dt
+        self._df[id(node)] = df
+        return dt, df
+
+    def dt(self, node: Node) -> float:
+        return self._dt[id(node)]
+
+    def df(self, node: Node) -> float:
+        return self._df[id(node)]
+
+    def apply(self, aid: int) -> "EstimatorState":
+        """Return a new state with atom ``aid`` applied (lineage-local update)."""
+        st = self.copy()
+        st.applied = self.applied | {aid}
+        atom = st.tree.atoms[aid]
+        st._dt[id(atom)] = atom.selectivity
+        st._df[id(atom)] = 1.0 - atom.selectivity
+        # refresh ancestors bottom-up; children other than on-path keep values
+        for anc in reversed(st.tree.lineage(aid)[:-1]):
+            if isinstance(anc, And):
+                dt = 1.0
+                ndf = 1.0
+                for c in anc.children:
+                    dt *= st._dt[id(c)]
+                    ndf *= (1.0 - st._df[id(c)])
+                st._dt[id(anc)], st._df[id(anc)] = dt, 1.0 - ndf
+            else:
+                ndt = 1.0
+                df = 1.0
+                for c in anc.children:
+                    ndt *= (1.0 - st._dt[id(c)])
+                    df *= st._df[id(c)]
+                st._dt[id(anc)], st._df[id(anc)] = 1.0 - ndt, df
+        return st
+
+    # ------------------------------------------------------------------
+    def bestd_fraction(self, aid: int) -> float:
+        """Expected fraction of records in BestD's D_i for atom ``aid``."""
+        frac = 1.0
+        lineage = self.tree.lineage(aid)
+        for l in range(len(lineage) - 1):
+            node = lineage[l]
+            path_child = lineage[l + 1]
+            is_and = isinstance(node, And)
+            for c in node.children:
+                if c is path_child:
+                    continue
+                frac *= (1.0 - self.df(c)) if is_and else (1.0 - self.dt(c))
+        return frac
+
+    def root_fraction(self) -> Tuple[float, float]:
+        """(P(root determined true), P(root determined false))."""
+        return self.dt(self.tree.root), self.df(self.tree.root)
+
+
+def plan_cost(tree: PredicateTree, order: Sequence[int], model: CostModel,
+              total_records: float = 1.0) -> float:
+    """Expected cost of applying atoms in ``order`` with BestD record sets."""
+    st = EstimatorState(tree)
+    cost = 0.0
+    for aid in order:
+        frac = st.bestd_fraction(aid)
+        cost += model.atom_cost(tree.atoms[aid], frac * total_records)
+        st = st.apply(aid)
+    return cost
+
+
+def step_fractions(tree: PredicateTree, order: Sequence[int]) -> List[float]:
+    """Per-step expected BestD fractions (diagnostics / benchmarks)."""
+    st = EstimatorState(tree)
+    out = []
+    for aid in order:
+        out.append(st.bestd_fraction(aid))
+        st = st.apply(aid)
+    return out

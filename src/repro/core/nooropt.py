@@ -1,0 +1,88 @@
+"""NoOrOpt — the straw-man baseline (paper §7).
+
+No disjunction optimization at all: conjunctions are evaluated in increasing
+selectivity order with a running filter, but each child of an OR is evaluated
+*independently on the OR's full input set* (no bypass, no Delta bookkeeping)
+and the results are unioned — the strategy of e.g. Vertica [17].
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+from .cost import CostModel, MemoryCostModel
+from .plan import Plan
+from .predicate import And, Atom, Node, Or, PredicateTree
+from .sets import SetBackend
+
+
+def _est(node: Node, model: CostModel, frac_in: float, total: float,
+         order: List[int]) -> Tuple[float, float]:
+    """Return (selectivity, expected cost) of NoOrOpt on ``node``."""
+    if isinstance(node, Atom):
+        order.append(node.aid)
+        return node.selectivity, model.atom_cost(node, frac_in * total)
+    if isinstance(node, And):
+        kids = sorted(node.children, key=_sel)
+        frac, cost = frac_in, 0.0
+        g = 1.0
+        for c in kids:
+            cg, cc = _est(c, model, frac, total, order)
+            cost += cc
+            g *= cg
+            frac = frac_in * g
+        return g, cost
+    # Or: every child sees the full input
+    kids = list(node.children)
+    cost = 0.0
+    keep = 1.0
+    for c in kids:
+        cg, cc = _est(c, model, frac_in, total, order)
+        cost += cc
+        keep *= (1.0 - cg)
+    return 1.0 - keep, cost
+
+
+def _sel(node: Node) -> float:
+    if isinstance(node, Atom):
+        return node.selectivity
+    if isinstance(node, And):
+        g = 1.0
+        for c in node.children:
+            g *= _sel(c)
+        return g
+    g = 1.0
+    for c in node.children:
+        g *= (1.0 - _sel(c))
+    return 1.0 - g
+
+
+def nooropt(tree: PredicateTree, model: Optional[CostModel] = None,
+            total_records: float = 1.0) -> Plan:
+    model = model or MemoryCostModel()
+    t0 = time.perf_counter()
+    order: List[int] = []
+    _, cost = _est(tree.root, model, 1.0, total_records, order)
+    return Plan(tree=tree, order=order, planner="nooropt", est_cost=cost,
+                est_fracs=[], plan_time_s=time.perf_counter() - t0)
+
+
+def nooropt_execute(tree: PredicateTree, backend: SetBackend):
+    """Execute NoOrOpt directly on a set backend."""
+    be = backend
+
+    def run(node: Node, d):
+        if isinstance(node, Atom):
+            return be.apply_atom(node, d)
+        if isinstance(node, And):
+            x = d
+            for c in sorted(node.children, key=_sel):
+                x = run(c, x)
+            return x
+        x = None
+        for c in node.children:
+            r = run(c, d)         # independent evaluation: full input set
+            x = r if x is None else be.union(x, r)
+        return x if x is not None else be.empty()
+
+    return run(tree.root, be.full())

@@ -1,0 +1,86 @@
+r"""Optimal planner (TDACB-class reference, paper §7 / [13]).
+
+Kastrati–Moerkotte's TDACB searches plan sequences in O(n·3^n).  Under the
+paper's own results the search collapses: the optimal plan applies each atom
+exactly once (Thm 3) and, for a fixed ordering, BestD's D_i are optimal and
+depend only on the *set* of previously applied atoms (Thm 5 / Alg 1 reads
+only Xi/Delta state keyed by the applied set).  Expected step cost therefore
+factors over (applied-set, next-atom), and exact search is a subset DP:
+
+    dp[S] = min over a in S  of  dp[S \ {a}] + C(a, E[count(BestD_a | S\{a})])
+
+O(2^n · n) states×transitions — still exponential (it reproduces the paper's
+Fig-1a blow-up) but with the same optimal plans as TDACB under the paper's
+cost models, which is what the evaluation compares against.
+
+``optimal_bruteforce`` checks the DP against all n! orderings for tiny n.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import List, Optional, Tuple
+
+from .cost import CostModel, MemoryCostModel
+from .estimate import EstimatorState, plan_cost
+from .plan import Plan, finalize_plan
+from .predicate import PredicateTree
+
+
+def optimal_plan(tree: PredicateTree, model: Optional[CostModel] = None,
+                 total_records: float = 1.0, limit_n: int = 20) -> Plan:
+    """Exact min-cost ordering by subset DP (exponential in n)."""
+    model = model or MemoryCostModel()
+    n = tree.n
+    if n > limit_n:
+        raise ValueError(f"optimal_plan is exponential; n={n} > limit_n={limit_n}")
+    t0 = time.perf_counter()
+
+    size = 1 << n
+    INF = float("inf")
+    dp = [INF] * size
+    choice = [-1] * size
+    dp[0] = 0.0
+
+    # Iterate states ascending: S\{a} < S numerically, so dependencies are met.
+    # For each state build the estimator once and relax all outgoing edges.
+    for s in range(size):
+        base = dp[s]
+        if base == INF:
+            continue
+        st = EstimatorState(tree, _bits(s, n))
+        for a in range(n):
+            bit = 1 << a
+            if s & bit:
+                continue
+            cost = base + model.atom_cost(
+                tree.atoms[a], st.bestd_fraction(a) * total_records)
+            t = s | bit
+            if cost < dp[t]:
+                dp[t] = cost
+                choice[t] = a
+
+    order: List[int] = []
+    s = size - 1
+    while s:
+        a = choice[s]
+        order.append(a)
+        s ^= 1 << a
+    order.reverse()
+    return finalize_plan(tree, order, "optimal", model, t0, total_records)
+
+
+def optimal_bruteforce(tree: PredicateTree, model: Optional[CostModel] = None,
+                       total_records: float = 1.0) -> Tuple[List[int], float]:
+    """All-permutations search (n <= 8): the ground truth for tests."""
+    model = model or MemoryCostModel()
+    best_order, best_cost = None, float("inf")
+    for perm in itertools.permutations(range(tree.n)):
+        c = plan_cost(tree, perm, model, total_records)
+        if c < best_cost:
+            best_cost, best_order = c, list(perm)
+    return best_order, best_cost
+
+
+def _bits(s: int, n: int):
+    return [i for i in range(n) if s >> i & 1]

@@ -1,0 +1,84 @@
+"""OrderP — Hanani's predicate-atom ordering (paper Appendix C, Algorithm 5).
+
+Children of AND nodes are sorted by increasing cost/(1-gamma); children of OR
+nodes by increasing cost/gamma.  Estimated (selectivity, cost, order) triples
+combine bottom-up under the independence assumption.  Optimal for predicate
+trees of depth <= 2 (with BestD); not optimal at depth >= 3 (paper §5.3).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+from .predicate import And, Atom, Node, Or, PredicateTree
+
+_INF = float("inf")
+
+
+def _order_node(tree: PredicateTree, node: Node) -> Tuple[float, float, List[int]]:
+    if isinstance(node, Atom):
+        return node.selectivity, node.cost_factor, [node.aid]
+
+    triples = [_order_node(tree, c) for c in node.children]
+    if isinstance(node, And):
+        def weight(t):
+            g, cost, _ = t
+            return cost / (1.0 - g) if g < 1.0 else _INF
+    else:
+        def weight(t):
+            g, cost, _ = t
+            return cost / g if g > 0.0 else _INF
+    triples.sort(key=weight)
+
+    total_cost = 0.0
+    g_total = 1.0 if isinstance(node, And) else 0.0
+    order: List[int] = []
+    if isinstance(node, And):
+        for g, cost, sub in triples:
+            total_cost += g_total * cost if order else cost
+            # ORDERNODEHELPER starts gamma_total at 1, so the first term is
+            # 1*cost either way; keep the uniform formula:
+            order += sub
+            g_total = (g_total if order != sub else 1.0)
+        # recompute cleanly (uniform loop):
+        total_cost, g_total, order = _combine(triples, is_and=True)
+    else:
+        total_cost, g_total, order = _combine(triples, is_and=False)
+    return g_total, total_cost, order
+
+
+def _combine(triples, is_and: bool) -> Tuple[float, float, List[int]]:
+    total_cost = 0.0
+    g_total = 1.0
+    order: List[int] = []
+    for g, cost, sub in triples:
+        if is_and:
+            total_cost += g_total * cost
+            g_total *= g
+        else:
+            total_cost += (1.0 - g_total) * cost if order else cost
+            # OrderNodeHelper: cost weight is (1 - gamma_total) with
+            # gamma_total starting at 1 -> first child weight is... the
+            # pseudocode initializes gamma_total=1 which zeroes the first
+            # OR child's cost; that is a known typo — the intended OR
+            # recurrence (matching Example 1 and Hanani) starts at 0.
+            pass
+        order += sub
+    if not is_and:
+        total_cost = 0.0
+        g_total = 0.0
+        for g, cost, sub in triples:
+            total_cost += (1.0 - g_total) * cost
+            g_total = g + g_total * (1.0 - g)
+    return total_cost, g_total, order
+
+
+def orderp(tree: PredicateTree) -> List[int]:
+    """Return the OrderP atom ordering (list of atom ids)."""
+    _, _, order = _order_node(tree, tree.root)
+    return order
+
+
+def orderp_with_cost(tree: PredicateTree) -> Tuple[List[int], float]:
+    g, cost, order = _order_node(tree, tree.root)
+    return order, cost

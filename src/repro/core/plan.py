@@ -1,0 +1,91 @@
+"""Plan IR: the output of every planner and the input of every executor.
+
+A :class:`Plan` is the paper's sequence of steps ``[(P_1, D_1), ...]`` in
+compressed form: because BestD (Theorem 5) derives the optimal ``D_i`` from
+the ordering alone, a plan needs only the atom ordering plus bookkeeping of
+the planner's own cost estimates.  ``NoOrOpt`` plans carry no ordering-wide
+guarantee and are executed by their own recursive executor.
+
+Executors are generic over :class:`~repro.core.sets.SetBackend`, so the same
+plan runs on vertex sets (proof/test objects), numpy record bitmaps and the
+JAX/Pallas columnar engines.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from .bestd import BestDMachine
+from .cost import CostModel
+from .estimate import EstimatorState, plan_cost, step_fractions
+from .predicate import And, Atom, Node, Or, PredicateTree
+from .sets import SetBackend
+
+
+@dataclass
+class Plan:
+    """A predicate-evaluation plan.
+
+    Attributes
+    ----------
+    tree:       the normalized predicate tree this plan evaluates
+    order:      atom ids in application order (empty for ``nooropt``)
+    planner:    producing algorithm name
+    est_cost:   planner's expected cost (cost-model units)
+    est_fracs:  expected count(D_i)/|R| per step
+    plan_time_s: wall time spent planning
+    """
+
+    tree: PredicateTree
+    order: List[int]
+    planner: str
+    est_cost: float = 0.0
+    est_fracs: List[float] = field(default_factory=list)
+    plan_time_s: float = 0.0
+
+    @property
+    def n(self) -> int:
+        return self.tree.n
+
+    def describe(self) -> str:
+        names = [self.tree.atoms[a].name for a in self.order]
+        lines = [f"Plan[{self.planner}] est_cost={self.est_cost:.4f} "
+                 f"plan_time={self.plan_time_s * 1e3:.3f}ms"]
+        for i, (nm, fr) in enumerate(zip(names, self.est_fracs or [float('nan')] * len(names))):
+            lines.append(f"  step {i + 1}: apply {nm:<28s} E[frac]={fr:.4f}")
+        return "\n".join(lines)
+
+
+def execute_bestd(tree: PredicateTree, order: Sequence[int], backend: SetBackend):
+    """Run a BestD-driven plan (ShallowFish / DeepFish / optimal orders)."""
+    machine = BestDMachine(tree, backend)
+    return machine.run(order)
+
+
+def execute_plan(plan: Plan, backend: SetBackend):
+    """Dispatch a plan to its executor; returns the satisfying set."""
+    if plan.planner == "nooropt":
+        from .nooropt import nooropt_execute
+        return nooropt_execute(plan.tree, backend)
+    if plan.planner == "shallowfish":
+        # use the optimized single-traversal executor (Algorithm 4); it is
+        # equivalent to BestD for the depth-first orders OrderP emits.
+        from .shallowfish import shallowfish_execute
+        return shallowfish_execute(plan.tree, backend, plan.order)
+    return execute_bestd(plan.tree, plan.order, backend)
+
+
+def finalize_plan(tree: PredicateTree, order: Sequence[int], planner: str,
+                  model: CostModel, t0: float,
+                  total_records: float = 1.0) -> Plan:
+    """Attach cost estimates + timing to a finished ordering."""
+    order = list(order)
+    return Plan(
+        tree=tree,
+        order=order,
+        planner=planner,
+        est_cost=plan_cost(tree, order, model, total_records),
+        est_fracs=step_fractions(tree, order),
+        plan_time_s=time.perf_counter() - t0,
+    )

@@ -1,0 +1,269 @@
+"""Predicate expression IR.
+
+The paper (§3) assumes a *normalized predicate tree*:
+  (1) node types are AND / OR / Atom,
+  (2) atoms are leaves,
+  (3) AND and OR strictly interleave level-by-level,
+and the input boolean formula is in negation normal form with negative
+literals folded into (flipped) atoms.
+
+``normalize`` performs NNF push-down, negation folding, same-type collapse
+and single-child elision, then assigns stable atom ids (tree order) and
+caches per-atom lineages (the paper's Omega(i)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Optional, Sequence, Tuple, Union
+
+# ---------------------------------------------------------------------------
+# Comparison operators for predicate atoms
+# ---------------------------------------------------------------------------
+
+_NEGATION = {
+    "lt": "ge", "ge": "lt", "le": "gt", "gt": "le",
+    "eq": "ne", "ne": "eq", "in": "not_in", "not_in": "in",
+    "like": "not_like", "not_like": "like", "udf": "not_udf", "not_udf": "udf",
+}
+
+OPS = tuple(_NEGATION)
+
+
+@dataclass(eq=False)
+class Node:
+    """Base class for predicate-tree nodes."""
+
+    def __and__(self, other: "Node") -> "And":
+        return And([self, other])
+
+    def __or__(self, other: "Node") -> "Or":
+        return Or([self, other])
+
+    def __invert__(self) -> "Not":
+        return Not(self)
+
+    # Filled in by normalize() for nodes inside a PredicateTree
+    @property
+    def is_atom(self) -> bool:
+        return isinstance(self, Atom)
+
+
+@dataclass(eq=False)
+class Atom(Node):
+    """A predicate atom: ``column OP value``.
+
+    ``selectivity`` is the estimated fraction of records satisfying the atom
+    (paper's gamma_i); ``cost_factor`` is the per-record evaluation cost
+    (paper's F_O).  ``fn`` optionally carries a user-defined predicate.
+    """
+
+    column: str
+    op: str = "lt"
+    value: Any = None
+    selectivity: float = 0.5
+    cost_factor: float = 1.0
+    name: Optional[str] = None
+    fn: Optional[Callable] = None
+    aid: int = -1           # stable id assigned by normalize()
+
+    def __post_init__(self):
+        if self.op not in _NEGATION:
+            raise ValueError(f"unknown op {self.op!r}")
+        if not (0.0 <= self.selectivity <= 1.0):
+            raise ValueError("selectivity must be in [0, 1]")
+        if self.name is None:
+            self.name = f"{self.column}_{self.op}_{self.value}"
+
+    def negate(self) -> "Atom":
+        return dataclasses.replace(
+            self, op=_NEGATION[self.op], selectivity=1.0 - self.selectivity,
+            name=f"not_{self.name}", aid=-1)
+
+    def __repr__(self):  # pragma: no cover - debug nicety
+        return f"Atom({self.name!r}, g={self.selectivity:.3f}, F={self.cost_factor:g}, aid={self.aid})"
+
+
+@dataclass(eq=False)
+class And(Node):
+    children: list = field(default_factory=list)
+
+    def __repr__(self):  # pragma: no cover
+        return "And(" + ", ".join(map(repr, self.children)) + ")"
+
+
+@dataclass(eq=False)
+class Or(Node):
+    children: list = field(default_factory=list)
+
+    def __repr__(self):  # pragma: no cover
+        return "Or(" + ", ".join(map(repr, self.children)) + ")"
+
+
+@dataclass(eq=False)
+class Not(Node):
+    child: Node = None
+
+
+Inner = Union[And, Or]
+
+
+def _push_not(node: Node, negate: bool) -> Node:
+    """NNF: push negations down to leaves, folding them into atoms."""
+    if isinstance(node, Not):
+        return _push_not(node.child, not negate)
+    if isinstance(node, Atom):
+        return node.negate() if negate else node
+    if isinstance(node, And):
+        ch = [_push_not(c, negate) for c in node.children]
+        return Or(ch) if negate else And(ch)
+    if isinstance(node, Or):
+        ch = [_push_not(c, negate) for c in node.children]
+        return And(ch) if negate else Or(ch)
+    raise TypeError(f"unknown node {node!r}")
+
+
+def _collapse(node: Node) -> Node:
+    """Merge same-type nested nodes and elide single-child inner nodes."""
+    if isinstance(node, Atom):
+        return node
+    assert isinstance(node, (And, Or))
+    kind = type(node)
+    new_children = []
+    for c in node.children:
+        c = _collapse(c)
+        if isinstance(c, kind):
+            new_children.extend(c.children)
+        else:
+            new_children.append(c)
+    if len(new_children) == 1:
+        return new_children[0]
+    out = kind(new_children)
+    return out
+
+
+class PredicateTree:
+    """A normalized predicate tree with cached structural queries.
+
+    Attributes
+    ----------
+    root: Node            normalized root
+    atoms: list[Atom]     atoms in tree (left-to-right) order; atoms[i].aid == i
+    parent: dict          node -> parent node (root -> None)
+    omega: list[list]     omega[aid] = lineage [root, ..., parent, atom]
+    """
+
+    def __init__(self, root: Node):
+        self.root = root
+        self.atoms: list[Atom] = []
+        self.parent: dict[int, Optional[Node]] = {}
+        self._children_atoms: dict[int, frozenset] = {}
+        self._level: dict[int, int] = {}
+        self._index(root, None, 1)
+        self.omega: list[list[Node]] = []
+        for a in self.atoms:
+            lin = [a]
+            cur = self.parent[id(a)]
+            while cur is not None:
+                lin.append(cur)
+                cur = self.parent[id(cur)]
+            self.omega.append(list(reversed(lin)))
+        self.n = len(self.atoms)
+
+    def _index(self, node: Node, parent: Optional[Node], level: int) -> frozenset:
+        self.parent[id(node)] = parent
+        self._level[id(node)] = level
+        if isinstance(node, Atom):
+            node.aid = len(self.atoms)
+            self.atoms.append(node)
+            sub = frozenset([node.aid])
+        else:
+            sub = frozenset()
+            for c in node.children:
+                sub |= self._index(c, node, level + 1)
+        self._children_atoms[id(node)] = sub
+        return sub
+
+    # -- structural queries --------------------------------------------------
+    def atom_ids(self, node: Node) -> frozenset:
+        """Set of atom ids in the subtree rooted at ``node``."""
+        return self._children_atoms[id(node)]
+
+    def level(self, node: Node) -> int:
+        """Level L_lambda (root = 1)."""
+        return self._level[id(node)]
+
+    @property
+    def depth(self) -> int:
+        return max(self._level[id(a)] for a in self.atoms) - 1 if self.atoms else 0
+
+    def lineage(self, aid: int) -> list:
+        """Omega(i): [root, ..., atom]."""
+        return self.omega[aid]
+
+    # -- completeness / determinability (Definitions 1-3) --------------------
+    def complete(self, node: Node, applied: frozenset) -> bool:
+        return self.atom_ids(node) <= applied
+
+    def determ_pos(self, node: Node, applied: frozenset) -> bool:
+        if isinstance(node, Atom):
+            return node.aid in applied
+        if isinstance(node, And):
+            return all(self.determ_pos(c, applied) for c in node.children)
+        return any(self.determ_pos(c, applied) for c in node.children)
+
+    def determ_neg(self, node: Node, applied: frozenset) -> bool:
+        if isinstance(node, Atom):
+            return node.aid in applied
+        if isinstance(node, And):
+            return any(self.determ_neg(c, applied) for c in node.children)
+        return all(self.determ_neg(c, applied) for c in node.children)
+
+    # -- evaluation -----------------------------------------------------------
+    def evaluate_vertex(self, vertex: Sequence[int], node: Optional[Node] = None) -> bool:
+        """lambda[v]: evaluate subtree against an n-length 0/1 vertex."""
+        node = self.root if node is None else node
+        if isinstance(node, Atom):
+            return bool(vertex[node.aid])
+        if isinstance(node, And):
+            return all(self.evaluate_vertex(vertex, c) for c in node.children)
+        return any(self.evaluate_vertex(vertex, c) for c in node.children)
+
+    def satisfying_vertices(self) -> list:
+        """psi*(D) by brute force — for tests; O(2^n)."""
+        out = []
+        for bits in itertools.product((0, 1), repeat=self.n):
+            if self.evaluate_vertex(bits):
+                out.append(bits)
+        return out
+
+    def pretty(self, node: Optional[Node] = None, indent: int = 0) -> str:
+        node = self.root if node is None else node
+        pad = "  " * indent
+        if isinstance(node, Atom):
+            return f"{pad}{node.name} (g={node.selectivity:.3f}, F={node.cost_factor:g})"
+        tag = "AND" if isinstance(node, And) else "OR"
+        lines = [f"{pad}{tag}"]
+        for c in node.children:
+            lines.append(self.pretty(c, indent + 1))
+        return "\n".join(lines)
+
+
+def normalize(expr: Node) -> PredicateTree:
+    """NNF + negation folding + collapse + indexing -> PredicateTree."""
+    root = _push_not(expr, False)
+    root = _collapse(root)
+    if isinstance(root, Atom):
+        root = And([root])  # keep a uniform inner-node root
+    return PredicateTree(root)
+
+
+def tree_copy(expr: Node) -> Node:
+    """Deep copy of an expression (atoms copied so aids stay independent)."""
+    if isinstance(expr, Atom):
+        return dataclasses.replace(expr, aid=-1)
+    if isinstance(expr, Not):
+        return Not(tree_copy(expr.child))
+    kind = type(expr)
+    return kind([tree_copy(c) for c in expr.children])

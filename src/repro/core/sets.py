@@ -1,0 +1,120 @@
+"""Set backends for the BestD/Update machine.
+
+The machine (bestd.py) is generic over a ``SetBackend``: the same code runs
+on *vertex sets* (the paper's formal objects, for proofs/tests) and on
+*record bitmaps* (the real column-store executor, columnar/executor.py).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, Optional, Sequence, Tuple
+
+from .predicate import Atom, PredicateTree
+
+
+class SetBackend:
+    """Interface; concrete backends define the set representation S."""
+
+    def full(self):
+        raise NotImplementedError
+
+    def empty(self):
+        raise NotImplementedError
+
+    def inter(self, a, b):
+        raise NotImplementedError
+
+    def union(self, a, b):
+        raise NotImplementedError
+
+    def diff(self, a, b):
+        raise NotImplementedError
+
+    def apply_atom(self, atom: Atom, d):
+        """Return the subset of ``d`` satisfying ``atom`` (a *costed* action)."""
+        raise NotImplementedError
+
+    def count(self, d) -> float:
+        raise NotImplementedError
+
+    def is_empty(self, d) -> bool:
+        return self.count(d) == 0
+
+
+@dataclass
+class Stats:
+    """Action accounting: the paper's two metrics (§7) live here."""
+
+    atom_applications: int = 0
+    records_evaluated: float = 0.0   # sum of count(D_i): "number of evaluations"
+    weighted_cost: float = 0.0       # sum of F_i * count(D_i)
+    setops: int = 0
+    setop_records: float = 0.0
+
+    def reset(self):
+        self.atom_applications = 0
+        self.records_evaluated = 0.0
+        self.weighted_cost = 0.0
+        self.setops = 0
+        self.setop_records = 0.0
+
+
+class VertexBackend(SetBackend):
+    """Explicit vertex sets over {0,1}^n (paper §3).  n <= 20.
+
+    ``weights`` maps each vertex to the fraction of records it represents;
+    by default the product measure from atom selectivities (independence),
+    but any empirical joint distribution may be supplied — BestD itself is
+    independence-free.
+    """
+
+    def __init__(self, tree: PredicateTree,
+                 weights: Optional[Dict[Tuple[int, ...], float]] = None,
+                 total_records: float = 1.0):
+        if tree.n > 20:
+            raise ValueError("VertexBackend is for small n (<= 20)")
+        self.tree = tree
+        self.total = total_records
+        self._all = frozenset(itertools.product((0, 1), repeat=tree.n))
+        if weights is None:
+            weights = {}
+            gam = [a.selectivity for a in tree.atoms]
+            for v in self._all:
+                w = 1.0
+                for i, b in enumerate(v):
+                    w *= gam[i] if b else (1.0 - gam[i])
+                weights[v] = w
+        self.weights = weights
+        self.stats = Stats()
+
+    def full(self) -> FrozenSet:
+        return self._all
+
+    def empty(self) -> FrozenSet:
+        return frozenset()
+
+    def inter(self, a, b):
+        self.stats.setops += 1
+        self.stats.setop_records += self.count(a)
+        return a & b
+
+    def union(self, a, b):
+        self.stats.setops += 1
+        self.stats.setop_records += self.count(a) + self.count(b)
+        return a | b
+
+    def diff(self, a, b):
+        self.stats.setops += 1
+        self.stats.setop_records += self.count(a)
+        return a - b
+
+    def apply_atom(self, atom: Atom, d):
+        self.stats.atom_applications += 1
+        cnt = self.count(d)
+        self.stats.records_evaluated += cnt
+        self.stats.weighted_cost += atom.cost_factor * cnt
+        return frozenset(v for v in d if v[atom.aid] == 1)
+
+    def count(self, d) -> float:
+        return self.total * sum(self.weights[v] for v in d)

@@ -1,0 +1,88 @@
+"""ShallowFish (paper §5.2, Algorithms 2 & 4).
+
+``shallowfish``          — the planner: OrderP ordering + BestD record sets.
+                            Provably optimal for predicate trees of depth <= 2
+                            (Theorems 4/5 + Lemma 1); correct at any depth.
+``shallowfish_execute``  — the optimized O(n log n) single-traversal executor
+                            (Algorithm 4).  Valid for *depth-first contiguous*
+                            orders (every order OrderP emits): under such
+                            orders a sibling is never partially applied, so
+                            determinability-without-completeness (the only
+                            thing Algorithm 4 cannot express) never arises and
+                            it applies atoms to exactly BestD's D_i sets.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+from .bestd import BestDMachine
+from .cost import CostModel, MemoryCostModel
+from .orderp import orderp
+from .plan import Plan, finalize_plan
+from .predicate import And, Atom, Node, Or, PredicateTree
+from .sets import SetBackend
+
+
+def shallowfish(tree: PredicateTree, model: Optional[CostModel] = None,
+                total_records: float = 1.0) -> Plan:
+    """Plan: OrderP ordering; BestD supplies the D_i at execution."""
+    model = model or MemoryCostModel()
+    t0 = time.perf_counter()
+    order = orderp(tree)
+    return finalize_plan(tree, order, "shallowfish", model, t0, total_records)
+
+
+def _is_depth_first(tree: PredicateTree, order: Sequence[int]) -> bool:
+    """True iff every subtree's atoms appear contiguously in ``order``."""
+    pos = {aid: i for i, aid in enumerate(order)}
+
+    def check(node: Node) -> bool:
+        ids = sorted(pos[a] for a in tree.atom_ids(node))
+        if ids and ids != list(range(ids[0], ids[0] + len(ids))):
+            return False
+        if isinstance(node, Atom):
+            return True
+        return all(check(c) for c in node.children)
+
+    return check(tree.root)
+
+
+def shallowfish_execute(tree: PredicateTree, backend: SetBackend,
+                        order: Optional[Sequence[int]] = None):
+    """Optimized ShallowFish (Algorithm 4): one ordered tree traversal.
+
+    ``order`` defaults to OrderP's.  Orders that are not depth-first
+    contiguous fall back to the BestD machine (same results, more set ops).
+    """
+    if order is None:
+        order = orderp(tree)
+    if not _is_depth_first(tree, order):
+        return BestDMachine(tree, backend).run(order)
+
+    pos = {aid: i for i, aid in enumerate(order)}
+
+    def child_key(tree_: PredicateTree, c: Node):
+        return min(pos[a] for a in tree_.atom_ids(c))
+
+    be = backend
+
+    def process(node: Node, d):
+        if isinstance(node, Atom):
+            return be.apply_atom(node, d)
+        children = sorted(node.children, key=lambda c: child_key(tree, c))
+        if isinstance(node, And):
+            x = d
+            for c in children:
+                x = process(c, x)
+            return x
+        # OR: bypass — each child sees only records no earlier child accepted
+        x = None
+        y = d
+        for c in children:
+            inp = y if x is None else be.diff(y, x)
+            r = process(c, inp)
+            x = r if x is None else be.union(x, r)
+        return x if x is not None else be.empty()
+
+    return process(tree.root, be.full())

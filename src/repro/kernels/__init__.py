@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+predicate_scan.py — fused masked predicate application over column blocks
+                    (scalar-prefetched popcounts, pl.when block skipping)
+bitmap_ops.py     — fused packed-bitmap set ops + popcount
+ops.py            — jit'd wrappers (host-side relayout + prefetch)
+ref.py            — pure-jnp oracles the tests sweep against
+"""
+from . import ops, ref
+from .bitmap_ops import AND, ANDNOT, OR, bitmap_setop
+from .fused_chain import fused_chain_scan
+from .predicate_scan import predicate_scan
+
+__all__ = ["ops", "ref", "AND", "OR", "ANDNOT", "bitmap_setop",
+           "predicate_scan", "fused_chain_scan"]

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``predicate_blocks`` matches the signature of ``ref.predicate_blocks_ref``
+(record-major column blocks) and handles the bit-major relayout + popcount
+prefetch on the host side of the pallas_call; XLA fuses the relayout into
+the surrounding graph.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitmap_ops import AND, ANDNOT, OR, bitmap_setop
+from .fused_chain import fused_chain_scan
+from .predicate_scan import predicate_scan
+
+
+@functools.partial(jax.jit, static_argnames=("opcode", "interpret"))
+def predicate_blocks(col: jnp.ndarray, bits: jnp.ndarray, value,
+                     opcode: int, interpret: bool = False) -> jnp.ndarray:
+    """Fused (col OP value) ∧ bits over blocked columns via the Pallas kernel.
+
+    col:  f32[N, B] record-major blocks;  bits: u32[N, W], W = B // 32.
+    """
+    n, b = col.shape
+    w = b // 32
+    # record-major (N, B) -> bit-major (N, 32, W): record r = w*32 + b
+    col_bm = col.reshape(n, w, 32).transpose(0, 2, 1)
+    pops = ref.popcount_ref(bits)                    # i32[N]
+    val = jnp.asarray([value], dtype=col.dtype)
+    return predicate_scan(col_bm, bits, pops.astype(jnp.int32), val, opcode,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("opcode", "interpret"))
+def bitmap_op(a: jnp.ndarray, b: jnp.ndarray, opcode: int,
+              interpret: bool = False):
+    """Fused set op + per-row popcount. a, b: u32[N, W]."""
+    out, pops = bitmap_setop(a, b, opcode, interpret=interpret)
+    return out, pops[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("opcodes", "conj", "interpret"))
+def fused_chain_blocks(cols: jnp.ndarray, bits: jnp.ndarray, values,
+                       opcodes, conj: bool = True,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Fused K-atom chain via the Pallas kernel.
+
+    cols: f32[K, N, B] record-major; bits: u32[N, W]; values: f32[K].
+    """
+    k, n, b = cols.shape
+    w = b // 32
+    cols_bm = cols.reshape(k, n, w, 32).transpose(1, 0, 3, 2)  # (N,K,32,W)
+    pops = ref.popcount_ref(bits).astype(jnp.int32)
+    vals = jnp.asarray(values, dtype=cols.dtype)
+    return fused_chain_scan(cols_bm, bits, pops, vals, tuple(opcodes),
+                            conj=conj, interpret=interpret)

@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 host placeholder devices.
+
+Per cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. jits the cell's step function (train_step / prefill / serve_step) with
+     explicit in/out shardings from the logical-axis rules,
+  3. ``.lower(**input_specs).compile()`` — success is the deliverable,
+  4. records memory_analysis() (bytes/device) and cost_analysis(),
+  5. (optionally, --roofline) compiles the small unrolled analysis variants
+     and solves/extrapolates the roofline terms (see launch.roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--roofline]
+Results are appended as JSON lines under experiments/.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, get_config
+from ..models import SHAPES, api, supports_shape
+from ..models.config import LMConfig, ShapeCell
+from ..sharding import DEFAULT_RULES, named_sharding, use_mesh
+from ..train import make_train_step, opt_state_pspecs
+from .mesh import make_production_mesh
+from .roofline import (Measurement, analysis_variants, measure_compiled,
+                       roofline_terms, solve_units)
+from .specs import input_shardings, input_specs
+
+jnp_int = jnp.int32
+
+
+def _ns(mesh, spec_tree, shape_tree):
+    """PartitionSpec tree -> NamedSharding tree (paired with abstract vals)."""
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                        or type(x).__name__ == "PartitionSpec")
+
+
+def build_step(cfg: LMConfig, cell: ShapeCell, mesh):
+    """Returns (jitted fn, example abstract args tuple)."""
+    from ..models.common import param_pspecs
+    from ..models import api as mapi
+
+    pparams = mapi.abstract(cfg)
+    pspec = mapi.pspecs(cfg, mesh)
+    params_sh = _ns(mesh, pspec, pparams)
+
+    if cell.kind == "train":
+        step = make_train_step(cfg, params_pspecs=pspec)
+        opt_abs = jax.eval_shape(step.init_state, pparams)
+        opt_spec = opt_state_pspecs(cfg, pspec)
+        opt_sh = _ns(mesh, opt_spec, opt_abs)
+        batch_abs = input_specs(cfg, cell)["batch"]
+        batch_sh = input_shardings(cfg, cell, mesh)["batch"]
+        fn = jax.jit(step,
+                     in_shardings=(params_sh, opt_sh, batch_sh),
+                     donate_argnums=(0, 1))
+        return fn, (pparams, opt_abs, batch_abs)
+
+    if cell.kind == "prefill":
+        batch_abs = input_specs(cfg, cell)["batch"]
+        batch_sh = input_shardings(cfg, cell, mesh)["batch"]
+        fn = jax.jit(lambda p, b: mapi.prefill(cfg, p, b),
+                     in_shardings=(params_sh, batch_sh))
+        return fn, (pparams, batch_abs)
+
+    # decode
+    spec = input_specs(cfg, cell)
+    shards = input_shardings(cfg, cell, mesh)
+    cache_sh = _ns(mesh, shards["cache"], spec["cache"])
+    fn = jax.jit(lambda p, t, c, i: mapi.decode(cfg, p, t, c, i),
+                 in_shardings=(params_sh, shards["token"], cache_sh,
+                               shards["index"]),
+                 donate_argnums=(2,))
+    return fn, (pparams, spec["token"], spec["cache"], spec["index"])
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, do_roofline: bool,
+             cfg_override=None, tag: str = ""):
+    cfg = cfg_override or get_config(arch)
+    cell = SHAPES[shape]
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16", "tag": tag,
+           "status": "skipped", "time_s": 0.0}
+    if not supports_shape(cfg, shape):
+        rec["reason"] = ("pure full-attention arch: no sub-quadratic "
+                         "long-context path (DESIGN §Arch-applicability)")
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rules = {}
+    if cfg.ep_over_data:
+        rules["experts"] = ("model", "data")
+    if not cfg.fsdp:
+        rules["embed"] = None
+    try:
+        with use_mesh(mesh, rules=rules or None):
+            fn, args = build_step(cfg, cell, mesh)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "code_bytes": ma.generated_code_size_in_bytes,
+                "total_bytes": (ma.argument_size_in_bytes
+                                + ma.output_size_in_bytes
+                                + ma.temp_size_in_bytes
+                                - ma.alias_size_in_bytes),
+            }
+            ca = compiled.cost_analysis() or {}
+            rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                    if isinstance(v, (int, float))
+                                    and k in ("flops", "bytes accessed",
+                                              "transcendentals")}
+            rec["scanned_compile"] = True
+
+            if do_roofline:
+                variants, full_counts = analysis_variants(cfg, cell)
+                measured = []
+                for vcfg, counts in variants:
+                    vfn, vargs = build_step(vcfg, cell, mesh)
+                    vcompiled = vfn.lower(*vargs).compile()
+                    measured.append((counts, measure_compiled(vcompiled)))
+                m_full = solve_units(measured, full_counts)
+                # NOTE: analysis variants run microbatch=1 over the FULL
+                # global batch, so they already measure the whole step —
+                # no microbatch scaling (grad-accum splits work, not adds).
+                rl = roofline_terms(m_full, cfg, cell, n_dev)
+                rec["roofline"] = rl.as_dict()
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["time_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    ap.add_argument("--tag", default="", help="label for this record")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf iterations)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = eval(v)
+        except Exception:
+            pass
+        overrides[k] = v
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    for arch, shape in cells:
+        cfg_override = (get_config(arch).replace(**overrides)
+                        if overrides else None)
+        rec = run_cell(arch, shape, args.multi_pod, args.roofline,
+                       cfg_override=cfg_override, tag=args.tag)
+        line = {k: v for k, v in rec.items() if k != "traceback"}
+        print(json.dumps({k: line[k] for k in
+                          ("arch", "shape", "mesh", "status", "time_s")}),
+              flush=True)
+        if rec["status"] == "error":
+            print(rec["error"])
+            print(rec.get("traceback", "")[-2000:])
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

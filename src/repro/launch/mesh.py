@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function (NOT a module-level constant) so importing this module never
+touches jax device state.  Single-pod: (data=16, model=16) = 256 chips.
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the "pod" axis carries
+only data-parallel gradient traffic (slow inter-pod links).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small meshes for tests (CPU host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,275 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Hardware target: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Three terms per (arch, shape, mesh), all in seconds:
+    compute    = HLO_FLOPs_per_device / peak_flops
+    memory     = HLO_bytes_per_device / hbm_bw
+    collective = collective_bytes_per_device / link_bw
+
+Methodology (documented in EXPERIMENTS.md):
+
+* XLA's cost_analysis is PER-DEVICE and counts while-loop (lax.scan) bodies
+  ONCE, so a scanned-layers model under-reports by ~n_layers x.  We
+  therefore compile small *unrolled* variants of each architecture at FULL
+  width (scan_layers=False, 1-3 layers of each repeating unit) and solve
+      measured(variant) = base + sum_r counts_r(variant) * unit_r
+  for the per-unit costs, then extrapolate to the full layer counts.  The
+  full-depth scanned compile is still performed for every cell — it is the
+  deliverable compile and the source of memory_analysis().
+* collective bytes are parsed from compiled.as_text(): sum of result-shape
+  bytes of all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute ops (unrolled variants => flat HLO, no trip-count
+  ambiguity).  all-reduce bytes are doubled (reduce-scatter+all-gather wire
+  cost on a ring).
+* rwkv's time-dimension lax.scan cannot be unrolled (S steps); its wkv
+  recurrence FLOPs are added analytically (noted per-cell as
+  "analytic_correction").
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..models.config import LMConfig, ShapeCell
+
+# --- hardware constants (TPU v5e) ---
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (use 1 link conservatively)
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result bytes of collective ops in (post-optimization) HLO text."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.groups()
+        if op.endswith("-done"):
+            continue
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        wire = n * nbytes
+        if op == "all-reduce":
+            wire *= 2           # ring RS+AG wire bytes
+        out[op] = out.get(op, 0.0) + wire
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class Measurement:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def __add__(self, o):
+        c = dict(self.coll)
+        for k, v in o.coll.items():
+            c[k] = c.get(k, 0.0) + v
+        return Measurement(self.flops + o.flops,
+                           self.bytes_accessed + o.bytes_accessed, c)
+
+    def scale(self, f: float):
+        return Measurement(self.flops * f, self.bytes_accessed * f,
+                           {k: v * f for k, v in self.coll.items()})
+
+
+def measure_compiled(compiled) -> Measurement:
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return Measurement(float(ca.get("flops", 0.0)),
+                       float(ca.get("bytes accessed", 0.0)), coll)
+
+
+# ---------------------------------------------------------------------------
+# Unit-solve variants per family
+# ---------------------------------------------------------------------------
+def analysis_variants(cfg: LMConfig,
+                      cell: Optional[ShapeCell] = None
+                      ) -> Tuple[List[Tuple[LMConfig, Dict]], Dict]:
+    """Returns ([(variant_cfg, unit_counts)], full_counts).
+
+    Every variant is full-width, unrolled (scan_layers=False), microbatch=1,
+    and with single-block attention / single-chunk SSD (blockwise-attention
+    q/kv loops and SSD chunk scans are lax loops whose bodies cost_analysis
+    would otherwise count once) — compile-only, so the giant score
+    intermediates are never allocated.  The solver fits
+    measured = base + sum_r counts_r * unit_r.
+    """
+    base = dict(scan_layers=False, microbatch=1, moe_dense_analysis=True)
+    if cell is not None and cell.kind in ("train", "prefill"):
+        s = cell.seq_len
+        base.update(attn_block_q=s, attn_block_kv=s,
+                    ssm_chunk=max(s, cfg.ssm_chunk))
+    f = cfg.family
+    if f in ("dense", "moe", "mla", "rwkv"):
+        v = [(cfg.replace(n_layers=1, **base), {"layer": 1}),
+             (cfg.replace(n_layers=2, **base), {"layer": 2})]
+        return v, {"layer": cfg.n_layers}
+    if f == "mla_moe":
+        v = [(cfg.replace(n_layers=2, first_dense_layers=1, **base),
+              {"dense": 1, "moe": 1}),
+             (cfg.replace(n_layers=3, first_dense_layers=2, **base),
+              {"dense": 2, "moe": 1}),
+             (cfg.replace(n_layers=3, first_dense_layers=1, **base),
+              {"dense": 1, "moe": 2})]
+        return v, {"dense": cfg.first_dense_layers,
+                   "moe": cfg.n_layers - cfg.first_dense_layers}
+    if f == "vlm":
+        v = [(cfg.replace(n_layers=2, cross_every=2, **base),
+              {"self": 1, "cross": 1}),
+             (cfg.replace(n_layers=4, cross_every=4, **base),
+              {"self": 3, "cross": 1}),
+             (cfg.replace(n_layers=4, cross_every=2, **base),
+              {"self": 2, "cross": 2})]
+        ncross = cfg.n_layers // cfg.cross_every
+        return v, {"self": cfg.n_layers - ncross, "cross": ncross}
+    if f == "zamba":
+        v = [(cfg.replace(n_layers=1, attn_every=1, **base),
+              {"mamba": 1, "attn": 1}),
+             (cfg.replace(n_layers=2, attn_every=2, **base),
+              {"mamba": 2, "attn": 1}),
+             (cfg.replace(n_layers=2, attn_every=1, **base),
+              {"mamba": 2, "attn": 2})]
+        return v, {"mamba": cfg.n_layers,
+                   "attn": cfg.n_layers // cfg.attn_every}
+    if f == "encdec":
+        v = [(cfg.replace(n_layers=1, enc_layers=1, **base),
+              {"enc": 1, "dec": 1}),
+             (cfg.replace(n_layers=1, enc_layers=2, **base),
+              {"enc": 2, "dec": 1}),
+             (cfg.replace(n_layers=2, enc_layers=1, **base),
+              {"enc": 1, "dec": 2})]
+        return v, {"enc": cfg.enc_layers, "dec": cfg.n_layers}
+    raise ValueError(f)
+
+
+def solve_units(variants: List[Tuple[Dict, Measurement]],
+                full_counts: Dict) -> Measurement:
+    """Least-squares solve base+units, extrapolate to full_counts."""
+    unit_names = sorted(full_counts)
+    a = np.array([[1.0] + [float(c.get(u, 0)) for u in unit_names]
+                  for c, _ in variants])
+    x_full = np.array([1.0] + [float(full_counts[u]) for u in unit_names])
+
+    def extrapolate(vals: np.ndarray) -> float:
+        coef, *_ = np.linalg.lstsq(a, vals, rcond=None)
+        coef = np.maximum(coef, 0.0)        # guard tiny negative solves
+        return float(x_full @ coef)
+
+    flops = extrapolate(np.array([m.flops for _, m in variants]))
+    byts = extrapolate(np.array([m.bytes_accessed for _, m in variants]))
+    keys = sorted({k for _, m in variants for k in m.coll})
+    coll = {k: extrapolate(np.array([m.coll.get(k, 0.0)
+                                     for _, m in variants])) for k in keys}
+    return Measurement(flops, byts, coll)
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (per step, GLOBAL not per-device)
+# ---------------------------------------------------------------------------
+def model_params_active(cfg: LMConfig) -> Tuple[float, float]:
+    """(total params N, active params N_active) excluding embeddings."""
+    from ..models import api
+    total = api.n_params(cfg)
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.family == "encdec" else 2)
+    n = total - emb
+    if cfg.n_experts:
+        expert_p = (cfg.n_layers - cfg.first_dense_layers) * cfg.n_experts \
+            * 3 * cfg.d_model * cfg.moe_d_ff
+        active_share = expert_p * (cfg.top_k / cfg.n_experts - 1.0)
+        n_active = n + active_share
+    else:
+        n_active = n
+    return float(n), float(n_active)
+
+
+def model_flops(cfg: LMConfig, cell: ShapeCell) -> float:
+    """6·N_active·D for train; 2·N_active·D for inference tokens."""
+    _, n_active = model_params_active(cfg)
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def rwkv_scan_correction(cfg: LMConfig, cell: ShapeCell,
+                         n_devices: int) -> float:
+    """Per-device FLOPs hidden inside rwkv's time scan (wkv recurrence).
+
+    Per token per layer: ~6·H·P² mults (kv outer, u·kv, r·(S+..), w·S, +adds).
+    """
+    if cfg.family != "rwkv":
+        return 0.0
+    h = cfg.n_heads
+    p = cfg.d_model // h
+    toks = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    per_tok = 6.0 * h * p * p * cfg.n_layers
+    mult = 3.0 if cell.kind == "train" else 1.0     # fwd+bwd ~3x fwd
+    return mult * per_tok * toks / n_devices
+
+
+# ---------------------------------------------------------------------------
+# Terms
+# ---------------------------------------------------------------------------
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops: float
+    hlo_total_flops: float
+    useful_ratio: float
+    bottleneck: str
+    coll_breakdown: Dict[str, float] = field(default_factory=dict)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(m: Measurement, cfg: LMConfig, cell: ShapeCell,
+                   n_devices: int, microbatch_scale: int = 1) -> Roofline:
+    """m: per-device measurement of one full step (the unrolled analysis
+    variants run microbatch=1 over the entire global batch)."""
+    scale = microbatch_scale
+    flops = m.flops * scale + rwkv_scan_correction(cfg, cell, n_devices)
+    byts = m.bytes_accessed * scale
+    coll = {k: v * scale for k, v in m.coll.items()}
+    coll_total = coll.get("total", 0.0)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll_total / ICI_BW
+    mf = model_flops(cfg, cell)
+    hlo_total = flops * n_devices
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        flops_per_dev=flops, bytes_per_dev=byts,
+        coll_bytes_per_dev=coll_total,
+        model_flops=mf, hlo_total_flops=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        bottleneck=max(terms, key=terms.get),
+        coll_breakdown=coll,
+    )

@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins + NamedShardings for every (arch x shape) cell.
+
+``input_specs(cfg, cell)`` returns abstract inputs for the cell's step
+function; ``input_shardings`` the matching NamedShardings.  No device
+allocation happens here — these drive ``jax.jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import api
+from ..models.config import LMConfig, ShapeCell
+from ..sharding import named_sharding, spec_for
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: LMConfig, cell: ShapeCell) -> Dict[str, Any]:
+    b, s = cell.global_batch, cell.seq_len
+    batch = {"tokens": _sds((b, s + 1), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision"] = _sds((b, cfg.img_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+def batch_logical_axes(cfg: LMConfig) -> Dict[str, Tuple]:
+    axes = {"tokens": ("batch", "seq")}
+    if cfg.family == "encdec":
+        axes["frames"] = ("batch", None, None)
+    if cfg.family == "vlm":
+        axes["vision"] = ("batch", None, None)
+    return axes
+
+
+def batch_shardings(cfg: LMConfig, batch_specs, mesh, rules=None):
+    axes = batch_logical_axes(cfg)
+    return {k: named_sharding(v.shape, axes[k], mesh, rules)
+            for k, v in batch_specs.items()}
+
+
+def input_specs(cfg: LMConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Abstract inputs for the cell's step function."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        return {"batch": train_batch_specs(cfg, cell)}
+    if cell.kind == "prefill":
+        batch = train_batch_specs(cfg, cell)
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        return {"batch": batch}
+    if cell.kind == "decode":
+        spec = {
+            "token": _sds((b, 1), jnp.int32),
+            "cache": api.abstract_cache(cfg, b, s),
+            "index": _sds((), jnp.int32),
+        }
+        return spec
+    raise ValueError(cell.kind)
+
+
+def input_shardings(cfg: LMConfig, cell: ShapeCell, mesh, rules=None):
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind in ("train", "prefill"):
+        batch = input_specs(cfg, cell)["batch"]
+        return {"batch": batch_shardings(cfg, batch, mesh, rules)}
+    return {
+        "token": named_sharding((b, 1), ("batch", None), mesh, rules),
+        "cache": api.cache_pspecs(cfg, b, s, mesh, rules),
+        "index": named_sharding((), (), mesh, rules),
+    }

@@ -1,0 +1,115 @@
+"""Unified model API: schema / init / loss / prefill / decode per config.
+
+``batch`` layout (data pipeline contract):
+    tokens: (B, S+1) int32          LM families (inputs/targets by shift)
+    frames: (B, enc_seq, d) f32     encdec stub frontend
+    vision: (B, img_seq, d) f32     vlm stub frontend
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .common import (ParamDef, abstract_params, count_params, cross_entropy,
+                     init_params, param_pspecs)
+from .config import LMConfig
+
+
+def schema(cfg: LMConfig):
+    if cfg.family == "encdec":
+        return encdec.encdec_schema(cfg)
+    return lm.lm_schema(cfg)
+
+
+def init(cfg: LMConfig, key):
+    return init_params(schema(cfg), key)
+
+
+def abstract(cfg: LMConfig):
+    return abstract_params(schema(cfg))
+
+
+def pspecs(cfg: LMConfig, mesh=None, rules=None):
+    return param_pspecs(schema(cfg), mesh, rules)
+
+
+def n_params(cfg: LMConfig) -> int:
+    return count_params(schema(cfg))
+
+
+def cache_schema(cfg: LMConfig, batch: int, max_seq: int):
+    if cfg.family == "encdec":
+        return encdec.encdec_cache_schema(cfg, batch, max_seq)
+    return lm.cache_schema(cfg, batch, max_seq)
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_seq: int):
+    return abstract_params(cache_schema(cfg, batch, max_seq))
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int):
+    return init_params(cache_schema(cfg, batch, max_seq),
+                       jax.random.PRNGKey(0))
+
+
+def cache_pspecs(cfg: LMConfig, batch: int, max_seq: int, mesh=None,
+                 rules=None):
+    return param_pspecs(cache_schema(cfg, batch, max_seq), mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Loss (train)
+# ---------------------------------------------------------------------------
+def loss_fn(cfg: LMConfig, params, batch) -> Tuple[jnp.ndarray, Dict]:
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    if cfg.family == "encdec":
+        memory = encdec.encode(cfg, params, batch["frames"])
+        logits, _ = encdec.decode_train(cfg, params, inputs, memory)
+        loss = cross_entropy(logits, targets)
+        return loss, {"ce": loss}
+    logits, aux, _, hidden = lm.forward(cfg, params, inputs,
+                                        vision=batch.get("vision"))
+    ce = cross_entropy(logits, targets)
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp:
+        # predict t+2 from (hidden_t, emb(token_{t+1}))
+        mtp_lg = lm.mtp_logits(cfg, params, hidden[:, :-1], targets[:, :-1])
+        mtp_ce = cross_entropy(mtp_lg, targets[:, 1:])
+        loss = loss + cfg.mtp_loss_coef * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def prefill(cfg: LMConfig, params, batch):
+    """Returns (last-position logits (B, V), caches)."""
+    tokens = batch["tokens"]
+    if cfg.family == "encdec":
+        memory = encdec.encode(cfg, params, batch["frames"])
+        logits, caches = encdec.decode_train(cfg, params, tokens, memory,
+                                             mode="prefill")
+        ck, cv = encdec.cross_kv(cfg, params, memory)
+        cache = {"k": caches["k"], "v": caches["v"],
+                 "cross_k": ck, "cross_v": cv}
+        return logits[:, -1], cache
+    logits, _, caches, _ = lm.forward(cfg, params, tokens,
+                                      vision=batch.get("vision"),
+                                      mode="prefill")
+    if cfg.family == "vlm" and caches is not None:
+        ck, cv = lm.vlm_cross_cache(cfg, params, batch["vision"])
+        caches = {"kv": caches["kv"], "cross_k": ck, "cross_v": cv}
+    return logits[:, -1], caches
+
+
+def decode(cfg: LMConfig, params, token, cache, index):
+    """token: (B, 1) int32; returns (logits (B, 1, V), new_cache)."""
+    if cfg.family == "encdec":
+        return encdec.decode_step(cfg, params, token, cache, index)
+    return lm.decode(cfg, params, token, cache, index)

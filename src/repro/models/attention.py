@@ -1,0 +1,291 @@
+"""Attention variants: GQA (llama-family), MLA (DeepSeek/MiniCPM3), cross.
+
+Each variant exposes ``*_schema(cfg)`` (ParamDefs), ``*_train`` (full-seq
+causal), and ``*_decode`` (one token against a cache).  Caches are plain
+dicts of arrays sized by the caller; decode-time KV is sequence-sharded
+(logical axis "kv_seq") so 32k x 128 caches fit per-device HBM — the
+flash-decoding layout (softmax over the sharded axis lowers to partial
+max/sum + all-reduce).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .common import (ParamDef, apply_rope, blockwise_attention,
+                     decode_attention, rms_norm)
+from .config import LMConfig
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def gqa_schema(cfg: LMConfig, layers: Optional[int] = None) -> Dict:
+    """Stacked (layers, ...) GQA projection weights."""
+    L = cfg.n_layers if layers is None else layers
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    lead = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    p = {
+        "wq": ParamDef(lead + (d, h * hd), lax + ("embed", "q_dim")),
+        "wk": ParamDef(lead + (d, kv * hd), lax + ("embed", "kv_dim")),
+        "wv": ParamDef(lead + (d, kv * hd), lax + ("embed", "kv_dim")),
+        "wo": ParamDef(lead + (h * hd, d), lax + ("q_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamDef(lead + (hd,), lax + (None,), init="ones")
+        p["k_norm"] = ParamDef(lead + (hd,), lax + (None,), init="ones")
+    return p
+
+
+def _qkv(cfg: LMConfig, p, x, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q2, k2, v2 = x @ p["wq"], x @ p["wk"], x @ p["wv"]
+    if cfg.seq_parallel_proj:
+        # keep projections sequence-parallel: GSPMD gathers the (small)
+        # weights over "model" instead of the (large) activations; the
+        # seq->heads reshard below becomes an all-to-all.
+        q2 = shard(q2, "batch", "act_seq", None)
+        k2 = shard(k2, "batch", "act_seq", None)
+        v2 = shard(v2, "batch", "act_seq", None)
+    q = q2.reshape(b, s, h, hd)
+    k = k2.reshape(b, s, kv, hd)
+    v = v2.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_train(cfg: LMConfig, p, x, *, window: int = 0):
+    """Causal self-attention over the full sequence. x: (B, S, d)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", None, None)
+    v = shard(v, "batch", "seq", None, None)
+    o = blockwise_attention(q, k, v, causal=True, window=window,
+                            block_q=cfg.attn_block_q,
+                            block_kv=cfg.attn_block_kv)
+    o = shard(o, "batch", "seq", "heads", None)
+    from jax.ad_checkpoint import checkpoint_name
+    o = checkpoint_name(o, "attn_out")
+    return o.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"]
+
+
+def gqa_cache_schema(cfg: LMConfig, batch: int, max_seq: int,
+                     layers: Optional[int] = None) -> Dict:
+    L = cfg.n_layers if layers is None else layers
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    lead = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    return {
+        "k": ParamDef(lead + (batch, max_seq, kv, hd),
+                      lax + ("batch", "kv_seq", None, None), init="zeros"),
+        "v": ParamDef(lead + (batch, max_seq, kv, hd),
+                      lax + ("batch", "kv_seq", None, None), init="zeros"),
+    }
+
+
+def gqa_decode(cfg: LMConfig, p, x, cache, index, *, window: int = 0):
+    """One-step decode. x: (B, 1, d); cache: {"k","v"} (B, S, kv, hd);
+    index: scalar current position. Returns (out, new_cache)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), index, dtype=jnp.int32)
+    q, k, v = _qkv(cfg, p, x, positions)
+    slot = index % window if window else index
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    ck = shard(ck, "batch", "kv_seq", None, None)
+    cv = shard(cv, "batch", "kv_seq", None, None)
+    s_max = ck.shape[1]
+    valid = jnp.arange(s_max) <= (jnp.minimum(index, s_max - 1) if window
+                                  else index)
+    o = _masked_decode_attn(q, ck, cv, valid)
+    out = o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+def _masked_decode_attn(q, k, v, valid):
+    b, _, hq, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(
+                       jnp.array(d, jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, 1, hq, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+def mla_schema(cfg: LMConfig, layers: Optional[int] = None) -> Dict:
+    L = cfg.n_layers if layers is None else layers
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope + cfg.qk_rope
+    lead = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    return {
+        "wdq": ParamDef(lead + (d, cfg.q_lora), lax + ("embed", None)),
+        "q_norm": ParamDef(lead + (cfg.q_lora,), lax + (None,), init="ones"),
+        "wuq": ParamDef(lead + (cfg.q_lora, h * qk), lax + ("embed", "q_dim")),
+        "wdkv": ParamDef(lead + (d, cfg.kv_lora + cfg.qk_rope),
+                         lax + ("embed", None)),
+        "kv_norm": ParamDef(lead + (cfg.kv_lora,), lax + (None,), init="ones"),
+        "wuk": ParamDef(lead + (cfg.kv_lora, h * cfg.qk_nope),
+                        lax + ("embed", "q_dim")),
+        "wuv": ParamDef(lead + (cfg.kv_lora, h * cfg.v_head),
+                        lax + ("embed", "q_dim")),
+        "wo": ParamDef(lead + (h * cfg.v_head, d), lax + ("q_dim", "embed")),
+    }
+
+
+def _mla_q(cfg, p, x, positions):
+    b, s, _ = x.shape
+    h, qk = cfg.n_heads, cfg.qk_nope + cfg.qk_rope
+    cq = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(b, s, h, qk)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _mla_latent(cfg, p, x, positions):
+    ckv = x @ p["wdkv"]
+    c, k_rope = jnp.split(ckv, [cfg.kv_lora], axis=-1)
+    c = rms_norm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)   # (B, S, rope)
+    return c, k_rope
+
+
+def _mla_expand_kv(cfg, p, c):
+    b, s, _ = c.shape
+    h = cfg.n_heads
+    k_nope = (c @ p["wuk"]).reshape(b, s, h, cfg.qk_nope)
+    v = (c @ p["wuv"]).reshape(b, s, h, cfg.v_head)
+    return k_nope, v
+
+
+def mla_train(cfg: LMConfig, p, x):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q = _mla_q(cfg, p, x, positions)
+    c, k_rope = _mla_latent(cfg, p, x, positions)
+    k_nope, v = _mla_expand_kv(cfg, p, c)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, cfg.n_heads, cfg.qk_rope))], axis=-1)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "heads", None)
+    v = shard(v, "batch", "seq", "heads", None)
+    o = blockwise_attention(q, k, v, causal=True,
+                            block_q=cfg.attn_block_q,
+                            block_kv=cfg.attn_block_kv)
+    return o.reshape(b, s, cfg.n_heads * cfg.v_head) @ p["wo"]
+
+
+def mla_cache_schema(cfg: LMConfig, batch: int, max_seq: int,
+                     layers: Optional[int] = None) -> Dict:
+    L = cfg.n_layers if layers is None else layers
+    lead = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    return {
+        "c": ParamDef(lead + (batch, max_seq, cfg.kv_lora),
+                      lax + ("batch", "kv_seq", None), init="zeros"),
+        "k_rope": ParamDef(lead + (batch, max_seq, cfg.qk_rope),
+                           lax + ("batch", "kv_seq", None), init="zeros"),
+    }
+
+
+def mla_decode(cfg: LMConfig, p, x, cache, index):
+    """One-step MLA decode against the compressed-latent cache.
+
+    Baseline: "naive" expansion (k_nope/v recomputed from the cached latent).
+    ``cfg.mla_absorb`` switches to the absorbed form: W_uk folds into the
+    query and W_uv into the output projection, so attention runs directly in
+    the latent space — per-step FLOPs drop from O(S·h·(qk+v)) expansion to
+    O(S·(kv_lora+rope)) (perf hillclimb option; same math).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.full((b, 1), index, dtype=jnp.int32)
+    q = _mla_q(cfg, p, x, positions)                        # (B,1,H,qk)
+    c_new, kr_new = _mla_latent(cfg, p, x, positions)
+    cc = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], c_new.astype(cache["c"].dtype), index, axis=1)
+    ckr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), index, axis=1)
+    cc = shard(cc, "batch", "kv_seq", None)
+    ckr = shard(ckr, "batch", "kv_seq", None)
+    s_max = cc.shape[1]
+    valid = jnp.arange(s_max) <= index
+
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope], axis=-1)
+    if cfg.mla_absorb:
+        # fold W_uk into q: q_lat (B,1,H,kv_lora); score against latent cache
+        wuk = p["wuk"].reshape(cfg.kv_lora, h, cfg.qk_nope)
+        q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope, wuk)
+        s_nope = jnp.einsum("bqhc,bkc->bhqk", q_lat, cc,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope, ckr,
+                            preferred_element_type=jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.array(cfg.qk_nope + cfg.qk_rope,
+                                         jnp.float32))
+        s = (s_nope + s_rope) * scale
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhqk,bkc->bqhc", pr, cc.astype(jnp.float32))
+        wuv = p["wuv"].reshape(cfg.kv_lora, h, cfg.v_head)
+        o = jnp.einsum("bqhc,chd->bqhd", o_lat.astype(x.dtype), wuv)
+    else:
+        k_nope, v = _mla_expand_kv(cfg, p, cc)               # (B,S,H,·)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(ckr[:, :, None, :],
+                                      (b, s_max, h, cfg.qk_rope))], axis=-1)
+        o = _masked_decode_attn(q, k, v, valid)
+    out = o.reshape(b, 1, h * cfg.v_head) @ p["wo"]
+    return out, {"c": cc, "k_rope": ckr}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder / VLM gated cross layers)
+# ---------------------------------------------------------------------------
+def cross_schema(cfg: LMConfig, layers: Optional[int] = None,
+                 kv_dim: Optional[int] = None) -> Dict:
+    L = 0 if layers is None else layers
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    kvd = kv_dim or d
+    lead = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    return {
+        "wq": ParamDef(lead + (d, h * hd), lax + ("embed", "q_dim")),
+        "wk": ParamDef(lead + (kvd, h * hd), lax + ("embed", "q_dim")),
+        "wv": ParamDef(lead + (kvd, h * hd), lax + ("embed", "q_dim")),
+        "wo": ParamDef(lead + (h * hd, d), lax + ("q_dim", "embed")),
+    }
+
+
+def cross_attn(cfg: LMConfig, p, x, memory):
+    """x: (B, Sq, d) queries; memory: (B, Sk, kv_dim). Non-causal."""
+    b, sq, _ = x.shape
+    sk = memory.shape[1]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, sq, h, hd)
+    k = (memory @ p["wk"]).reshape(b, sk, h, hd)
+    v = (memory @ p["wv"]).reshape(b, sk, h, hd)
+    o = blockwise_attention(q, k, v, causal=False,
+                            block_q=cfg.attn_block_q,
+                            block_kv=cfg.attn_block_kv)
+    return o.reshape(b, sq, h * hd) @ p["wo"]

@@ -1,0 +1,239 @@
+"""Shared model machinery: parameter schemas, norms, RoPE, flash attention.
+
+Parameters are declared as a nested dict of :class:`ParamDef` (shape +
+logical axes + init); from one schema we derive real initialization,
+abstract ShapeDtypeStructs (dry-run) and PartitionSpecs (in_shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import shard, spec_for
+
+
+# ---------------------------------------------------------------------------
+# Parameter schema
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis names (len == ndim)
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(schema, key):
+    """Materialize a schema into real arrays (smoke tests / examples)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, d.dtype))
+        else:
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * d.scale).astype(d.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(schema):
+    """ShapeDtypeStructs for .lower() — no allocation."""
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+                        schema, is_leaf=is_def)
+
+
+def param_pspecs(schema, mesh=None, rules=None):
+    """PartitionSpec tree from the logical axes."""
+    return jax.tree.map(
+        lambda d: spec_for(d.shape, d.axes, mesh, rules), schema, is_leaf=is_def)
+
+
+def count_params(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if x.ndim == ang.ndim + 1:                         # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq: int, d: int):
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1),
+                       dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — pure JAX, O(S·block) memory
+# ---------------------------------------------------------------------------
+def blockwise_attention(q, k, v, *, causal: bool, q_offset=0,
+                        block_q: int = 1024, block_kv: int = 1024,
+                        kv_len_mask: Optional[int] = None,
+                        window: int = 0):
+    """Numerically-stable chunked attention.
+
+    q: (B, Sq, Hq, D); k: (B, Sk, Hkv, D); v: (B, Sk, Hkv, Dv) with
+    Hq % Hkv == 0 (GQA) and Dv free (MLA).  Causal masking treats query
+    position i as absolute ``q_offset + i``; ``window > 0`` adds sliding-
+    window masking.  Memory is O(block_q * block_kv) per head instead of
+    O(Sq * Sk).
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    group = hq // hkv
+    scalef = 1.0 / np.sqrt(d)
+
+    bq = min(block_q, sq)
+    bkv = min(block_kv, sk)
+    pad_q = (-sq) % bq
+    pad_kv = (-sk) % bkv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nq, nkv = (sq + pad_q) // bq, (sk + pad_kv) // bkv
+
+    # (B, nq, bq, Hkv, group, D)
+    qb = q.reshape(b, nq, bq, hkv, group, d)
+    kb = k.reshape(b, nkv, bkv, hkv, d)
+    vb = v.reshape(b, nkv, bkv, hkv, dv)
+
+    q_pos = (q_offset + jnp.arange(sq + pad_q)).reshape(nq, bq)
+    k_pos = jnp.arange(sk + pad_kv).reshape(nkv, bkv)
+    k_valid = (jnp.arange(sk + pad_kv) <
+               (sk if kv_len_mask is None else kv_len_mask)).reshape(nkv, bkv)
+
+    def q_block(qi):
+        qc = qb[:, qi]                          # (B, bq, Hkv, G, D)
+        qp = q_pos[qi]                          # (bq,)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kc, vc = kb[:, ki], vb[:, ki]       # (B, bkv, Hkv, D[v])
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scalef
+            mask = k_valid[ki][None, :]
+            if causal:
+                mask = mask & (qp[:, None] >= k_pos[ki][None, :])
+            if window:
+                mask = mask & (qp[:, None] - k_pos[ki][None, :] < window)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hkv, group, bq, dv), jnp.float32)
+        m0 = jnp.full((b, hkv, group, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, group, bq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(nkv))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out                               # (B, Hkv, G, bq, Dv)
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))  # (nq, B, Hkv, G, bq, Dv)
+    out = jnp.moveaxis(outs, 0, 3)               # (B, Hkv, G, nq, bq, Dv)
+    out = out.reshape(b, hkv, group, nq * bq, dv)[:, :, :, :sq]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k, v):
+    """Single-position attention against a (possibly seq-sharded) cache.
+
+    q: (B, 1, Hq, D); k/v: (B, Sk, Hkv, D).  Softmax over the (sharded)
+    Sk dim lowers to partial max/sum + all-reduce under GSPMD — the
+    flash-decoding communication pattern.
+    """
+    b, _, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(d)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token CE in f32. logits (B, S, V); labels (B, S) int32.
+
+    The gold logit is extracted with an iota-compare masked reduction, NOT
+    take_along_axis: a gather along the vocab axis would force GSPMD to
+    all-gather the (B, S, V) f32 logits on every device (measured 13+ GB at
+    the production shapes); the masked reduce stays vocab-sharded and fuses.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vidx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vidx == labels[..., None], logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,590 @@
+"""Decoder-only LM assembly for all non-enc-dec families.
+
+Families: dense (llama/granite/yi), moe (qwen3), mla (minicpm3),
+mla_moe (deepseek-v3 + MTP), vlm (llama-3.2-vision gated cross-attn),
+zamba (mamba2 + shared attn block), rwkv (rwkv6).
+
+Layers are stacked on a leading axis and driven by ``lax.scan`` (O(1) HLO
+in depth); each scanned body is optionally ``jax.checkpoint``-ed
+(cfg.remat).  Three entry points per family: ``forward`` (train),
+``prefill`` (train-shape + emit caches), ``decode`` (one token).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from . import attention as att
+from . import mamba2, moe, rwkv6
+from .common import ParamDef, rms_norm, swiglu
+from .config import LMConfig
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_schema(cfg: LMConfig, d_ff: int, layers: Optional[int] = None) -> Dict:
+    L = cfg.n_layers if layers is None else layers
+    d = cfg.d_model
+    lead = (L,) if L else ()
+    lax_ = ("layers",) if L else ()
+    return {
+        "w_in": ParamDef(lead + (d, 2 * d_ff), lax_ + ("embed", "ff")),
+        "w_out": ParamDef(lead + (d_ff, d), lax_ + ("ff", "embed")),
+    }
+
+
+def mlp_apply(p, x, seq_par: bool = False):
+    hidden = x @ p["w_in"]
+    if seq_par:
+        hidden = shard(hidden, "batch", "act_seq", None)
+    gate, up = jnp.split(hidden, 2, axis=-1)
+    h = swiglu(gate, up)
+    h = shard(h, "batch", "act_seq" if seq_par else "seq",
+              None if seq_par else "ff")
+    return h @ p["w_out"]
+
+
+def _norm(L):
+    lead = (L,) if L else ()
+    lax_ = ("layers",) if L else ()
+    return ParamDef(lead + (0,), lax_ + (None,), init="ones")  # placeholder
+
+
+def norm_def(cfg: LMConfig, layers: Optional[int] = None) -> ParamDef:
+    L = cfg.n_layers if layers is None else layers
+    lead = (L,) if L else ()
+    lax_ = ("layers",) if L else ()
+    return ParamDef(lead + (cfg.d_model,), lax_ + (None,), init="ones")
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def attn_ff_block(cfg: LMConfig, p, x, *, kind: str, mode: str,
+                  cache=None, index=None, window: int = 0):
+    """One transformer block; kind in {dense, moe, mla, mla_dense, mla_moe}.
+    Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    new_cache = None
+    if kind.startswith("mla"):
+        if mode == "decode":
+            a, new_cache = att.mla_decode(cfg, p["attn"], h, cache, index)
+        else:
+            a = att.mla_train(cfg, p["attn"], h)
+            if mode == "prefill":
+                positions = jnp.arange(h.shape[1])[None, :]
+                c, k_rope = att._mla_latent(cfg, p["attn"], h, positions)
+                new_cache = {"c": c, "k_rope": k_rope}
+    else:
+        if mode == "decode":
+            a, new_cache = att.gqa_decode(cfg, p["attn"], h, cache, index,
+                                          window=window)
+        else:
+            a = att.gqa_train(cfg, p["attn"], h, window=window)
+            if mode == "prefill":
+                b, s, _ = h.shape
+                positions = jnp.arange(s)[None, :]
+                q, k, v = att._qkv(cfg, p["attn"], h, positions)
+                new_cache = {"k": k, "v": v}
+    x = x + a
+    x = shard(x, "batch", "act_seq", None)
+    h2 = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    if kind.endswith("moe"):
+        m, aux = moe.moe_apply(cfg, p["moe"], h2)
+    else:
+        m = mlp_apply(p["mlp"], h2, seq_par=cfg.seq_parallel_proj)
+    x = x + m
+    return shard(x, "batch", "act_seq", None), aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Schemas per family
+# ---------------------------------------------------------------------------
+def vocab_padded(cfg: LMConfig) -> int:
+    """Vocab rounded up to a 128 multiple: keeps the vocab dim divisible
+    by the model axis (16) so logits/unembed can shard — unpadded 49155-ish
+    vocabs force GSPMD to replicate the (B, S, V) logits (measured 13+ GB
+    per device).  Pad columns are masked to -inf in _logits."""
+    return -(-cfg.vocab // 128) * 128
+
+
+def lm_schema(cfg: LMConfig) -> Dict:
+    d, v = cfg.d_model, vocab_padded(cfg)
+    emb_d_axis = "embed" if cfg.embed_fsdp else None
+    s: Dict[str, Any] = {
+        "embed": ParamDef((v, d), ("vocab", emb_d_axis), scale=0.01),
+        "final_norm": norm_def(cfg, 0),
+        "unembed": ParamDef((d, v), ("embed", "vocab")),
+    }
+    f = cfg.family
+    if f in ("dense", "moe", "mla"):
+        blk = {"attn_norm": norm_def(cfg), "mlp_norm": norm_def(cfg)}
+        blk["attn"] = (att.mla_schema(cfg) if f == "mla"
+                       else att.gqa_schema(cfg))
+        if f == "moe":
+            blk["moe"] = moe.moe_schema(cfg)
+        else:
+            blk["mlp"] = mlp_schema(cfg, cfg.d_ff)
+        s["blocks"] = blk
+    elif f == "mla_moe":
+        nd, nm = cfg.first_dense_layers, cfg.n_layers - cfg.first_dense_layers
+        s["dense_blocks"] = {
+            "attn_norm": norm_def(cfg, nd), "mlp_norm": norm_def(cfg, nd),
+            "attn": att.mla_schema(cfg, nd), "mlp": mlp_schema(cfg, cfg.d_ff, nd)}
+        s["moe_blocks"] = {
+            "attn_norm": norm_def(cfg, nm), "mlp_norm": norm_def(cfg, nm),
+            "attn": att.mla_schema(cfg, nm), "moe": moe.moe_schema(cfg, nm)}
+        if cfg.mtp:
+            s["mtp"] = {
+                "proj": ParamDef((2 * d, d), (None, "embed")),
+                "norm_h": norm_def(cfg, 0), "norm_e": norm_def(cfg, 0),
+                "attn_norm": norm_def(cfg, 0), "mlp_norm": norm_def(cfg, 0),
+                "attn": att.mla_schema(cfg, 0),
+                "mlp": mlp_schema(cfg, cfg.d_ff, 0)}
+    elif f == "vlm":
+        ncross = cfg.n_layers // cfg.cross_every
+        nself_per = cfg.cross_every - 1
+        nself = ncross * nself_per
+        s["self_blocks"] = {
+            "attn_norm": norm_def(cfg, nself), "mlp_norm": norm_def(cfg, nself),
+            "attn": att.gqa_schema(cfg, nself),
+            "mlp": mlp_schema(cfg, cfg.d_ff, nself)}
+        s["cross_blocks"] = {
+            "attn_norm": norm_def(cfg, ncross), "mlp_norm": norm_def(cfg, ncross),
+            "attn": att.cross_schema(cfg, ncross),
+            "mlp": mlp_schema(cfg, cfg.d_ff, ncross),
+            "gate_attn": ParamDef((ncross, 1), ("layers", None), init="zeros",
+                                  dtype=jnp.float32),
+            "gate_mlp": ParamDef((ncross, 1), ("layers", None), init="zeros",
+                                 dtype=jnp.float32)}
+    elif f == "zamba":
+        g = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers % cfg.attn_every
+        s["mamba_groups"] = {
+            "norm": _stack_norm(cfg, (g, cfg.attn_every)),
+            "mamba": _stack2(mamba2.mamba_schema(cfg, cfg.attn_every), g)}
+        if tail:
+            s["mamba_tail"] = {"norm": norm_def(cfg, tail),
+                               "mamba": mamba2.mamba_schema(cfg, tail)}
+        s["shared"] = {
+            "proj": ParamDef((2 * d, d), (None, "embed")),
+            "attn_norm": norm_def(cfg, 0), "mlp_norm": norm_def(cfg, 0),
+            "attn": att.gqa_schema(cfg, 0),
+            "mlp": mlp_schema(cfg, cfg.d_ff, 0)}
+    elif f == "rwkv":
+        s["blocks"] = rwkv6.rwkv_schema(cfg)
+        s["ln0_s"] = ParamDef((d,), (None,), init="ones")
+        s["ln0_b"] = ParamDef((d,), (None,), init="zeros")
+    else:
+        raise ValueError(f"unknown family {f}")
+    return s
+
+
+def _stack_norm(cfg, lead):
+    return ParamDef(tuple(lead) + (cfg.d_model,),
+                    ("layers",) * len(lead) + (None,), init="ones")
+
+
+def _stack2(schema, g):
+    """Add an extra leading group axis to every ParamDef in schema."""
+    def bump(dfn: ParamDef) -> ParamDef:
+        return ParamDef((g,) + dfn.shape, ("layers",) + dfn.axes,
+                        dfn.init, dfn.scale, dfn.dtype)
+    return jax.tree.map(bump, schema,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Cache schemas
+# ---------------------------------------------------------------------------
+def cache_schema(cfg: LMConfig, batch: int, max_seq: int) -> Dict:
+    f = cfg.family
+    if f in ("dense", "moe"):
+        return {"kv": att.gqa_cache_schema(cfg, batch, max_seq)}
+    if f == "mla":
+        return {"kv": att.mla_cache_schema(cfg, batch, max_seq)}
+    if f == "mla_moe":
+        return {"kv_dense": att.mla_cache_schema(cfg, batch, max_seq,
+                                                 cfg.first_dense_layers),
+                "kv_moe": att.mla_cache_schema(
+                    cfg, batch, max_seq,
+                    cfg.n_layers - cfg.first_dense_layers)}
+    if f == "vlm":
+        ncross = cfg.n_layers // cfg.cross_every
+        nself = ncross * (cfg.cross_every - 1)
+        kvd = cfg.n_heads * cfg.head_dim
+        return {"kv": att.gqa_cache_schema(cfg, batch, max_seq, nself),
+                "cross_k": ParamDef((ncross, batch, cfg.img_seq,
+                                     cfg.n_heads, cfg.head_dim),
+                                    ("layers", "batch", None, "heads", None),
+                                    init="zeros"),
+                "cross_v": ParamDef((ncross, batch, cfg.img_seq,
+                                     cfg.n_heads, cfg.head_dim),
+                                    ("layers", "batch", None, "heads", None),
+                                    init="zeros")}
+    if f == "zamba":
+        g = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers % cfg.attn_every
+        win = min(cfg.window or max_seq, max_seq)
+        out = {"mamba": _stack2(mamba2.mamba_state_schema(cfg, batch,
+                                                          cfg.attn_every), g),
+               "attn": att.gqa_cache_schema(cfg, batch, win, g)}
+        if tail:
+            out["mamba_tail"] = mamba2.mamba_state_schema(cfg, batch, tail)
+        return out
+    if f == "rwkv":
+        return {"blocks": rwkv6.rwkv_state_schema(cfg, batch)}
+    raise ValueError(f)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def _maybe_remat(cfg, fn):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "save_attn":
+        from jax.ad_checkpoint import checkpoint_policies as cp
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out"))
+    return jax.checkpoint(fn)
+
+
+def scan_blocks(cfg: LMConfig, body, carry, xs, remat: bool = True):
+    """lax.scan over stacked layer params, or an unrolled Python loop when
+    cfg.scan_layers=False (the dry-run analysis mode: every layer's ops
+    appear in the HLO so cost_analysis / collective parsing count them)."""
+    fn = _maybe_remat(cfg, body) if remat else body
+    if cfg.scan_layers:
+        return jax.lax.scan(fn, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = fn(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _embed(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    return shard(x, "batch", "act_seq", None)
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    logits = shard(logits, "batch", "seq", "vocab")
+    if logits.shape[-1] != cfg.vocab:     # mask vocab padding
+        vidx = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(vidx < cfg.vocab, logits,
+                           jnp.array(-1e30, logits.dtype))
+    return logits
+
+
+def forward(cfg: LMConfig, params, tokens, vision=None, frames=None,
+            mode: str = "train"):
+    """tokens: (B, S) int32 -> (logits, aux, caches-or-None, hidden).
+
+    ``vision``: (B, img_seq, d) stub embeddings for the vlm family.
+    ``mode``: train | prefill (prefill also returns per-layer caches).
+    """
+    f = cfg.family
+    x = _embed(cfg, params, tokens)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = None
+    emb0 = x
+
+    if f in ("dense", "moe", "mla"):
+        kind = {"dense": "dense", "moe": "moe", "mla": "mla_dense"}[f]
+
+        def body(carry, lp):
+            h, aux = carry
+            h, a, kv = attn_ff_block(cfg, lp, h, kind=kind, mode=mode)
+            return (h, aux + a), kv
+
+        (x, aux_total), kv = scan_blocks(cfg, body, (x, aux_total),
+                                         params["blocks"])
+        caches = {"kv": kv} if mode == "prefill" else None
+
+    elif f == "mla_moe":
+        def body_d(carry, lp):
+            h, aux = carry
+            h, a, kv = attn_ff_block(cfg, lp, h, kind="mla_dense", mode=mode)
+            return (h, aux + a), kv
+
+        def body_m(carry, lp):
+            h, aux = carry
+            h, a, kv = attn_ff_block(cfg, lp, h, kind="mla_moe", mode=mode)
+            return (h, aux + a), kv
+
+        (x, aux_total), kvd = scan_blocks(cfg, body_d, (x, aux_total),
+                                          params["dense_blocks"])
+        (x, aux_total), kvm = scan_blocks(cfg, body_m, (x, aux_total),
+                                          params["moe_blocks"])
+        caches = ({"kv_dense": kvd, "kv_moe": kvm}
+                  if mode == "prefill" else None)
+
+    elif f == "vlm":
+        ncross = cfg.n_layers // cfg.cross_every
+        nself_per = cfg.cross_every - 1
+        self_p = jax.tree.map(
+            lambda a: a.reshape((ncross, nself_per) + a.shape[1:]),
+            params["self_blocks"])
+
+        def group(carry, lps):
+            h, aux = carry
+            sp, cp = lps
+
+            def sbody(c2, lp):
+                hh, aa = c2
+                hh, a, kv = attn_ff_block(cfg, lp, hh, kind="dense", mode=mode)
+                return (hh, aa + a), kv
+
+            (h, aux), kvs = scan_blocks(cfg, sbody, (h, aux), sp,
+                                        remat=False)
+            # gated cross-attn layer
+            hn = rms_norm(h, cp["attn_norm"], cfg.norm_eps)
+            ca = att.cross_attn(cfg, cp["attn"], hn, vision)
+            h = h + jnp.tanh(cp["gate_attn"]).astype(h.dtype) * ca
+            hm = rms_norm(h, cp["mlp_norm"], cfg.norm_eps)
+            h = h + jnp.tanh(cp["gate_mlp"]).astype(h.dtype) * mlp_apply(cp["mlp"], hm)
+            return (h, aux), kvs
+
+        (x, aux_total), kv = scan_blocks(cfg, group, (x, aux_total),
+                                         (self_p, params["cross_blocks"]))
+        if mode == "prefill":
+            kv = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), kv)
+            caches = {"kv": kv, "vision": vision}
+
+    elif f == "zamba":
+        def mamba_layer(carry, lp):
+            h, _ = carry
+            hn = rms_norm(h, lp["norm"], cfg.norm_eps)
+            out, (cs, ss) = mamba2.mamba_train(cfg, lp["mamba"], hn)
+            return (h + out, _), {"conv": cs, "ssm": ss}
+
+        def group(carry, lps):
+            h, aux = carry
+            # shared attention block (concat with the original embedding)
+            hin = jnp.concatenate([h, emb0], axis=-1) @ params["shared"]["proj"]
+            hb, a, kv = attn_ff_block(cfg, params["shared"], hin,
+                                      kind="dense", mode=mode,
+                                      window=cfg.window)
+            h = h + hb
+            (h, _), states = scan_blocks(cfg, mamba_layer, (h, aux), lps,
+                                         remat=False)
+            return (h, aux + a), (kv, states)
+
+        (x, aux_total), (kvs, mstates) = scan_blocks(
+            cfg, group, (x, aux_total), params["mamba_groups"])
+        tail_states = None
+        if "mamba_tail" in params:
+            (x, _), tail_states = scan_blocks(cfg, mamba_layer,
+                                              (x, aux_total),
+                                              params["mamba_tail"])
+        if mode == "prefill":
+            caches = {"mamba": mstates, "attn": kvs}
+            if tail_states is not None:
+                caches["mamba_tail"] = tail_states
+
+    elif f == "rwkv":
+        from .common import layer_norm
+        x = layer_norm(x, params["ln0_s"], params["ln0_b"], cfg.norm_eps)
+        b = tokens.shape[0]
+        state0 = jax.tree.map(
+            lambda d: jnp.zeros(d.shape[1:], d.dtype),
+            rwkv6.rwkv_state_schema(cfg, b),
+            is_leaf=lambda z: isinstance(z, ParamDef))
+
+        def body(carry, lp):
+            h, aux = carry
+            h, st = rwkv6.rwkv_block(cfg, lp, h, state0)
+            return (h, aux), st
+
+        (x, aux_total), states = scan_blocks(cfg, body, (x, aux_total),
+                                             params["blocks"])
+        caches = {"blocks": states} if mode == "prefill" else None
+
+    else:
+        raise ValueError(f)
+
+    logits = _logits(cfg, params, x)
+    return logits, aux_total, caches, x
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def decode(cfg: LMConfig, params, token, cache, index):
+    """token: (B, 1) int32; cache: family cache pytree; index: scalar int32.
+    Returns (logits (B, 1, V), new_cache)."""
+    f = cfg.family
+    x = _embed(cfg, params, token)
+    emb0 = x
+
+    if f in ("dense", "moe", "mla"):
+        kind = {"dense": "dense", "moe": "moe", "mla": "mla_dense"}[f]
+
+        def body(h, lp_cache):
+            lp, lc = lp_cache
+            h, _, nc = attn_ff_block(cfg, lp, h, kind=kind, mode="decode",
+                                     cache=lc, index=index)
+            return h, nc
+
+        x, new_kv = scan_blocks(cfg, body, x,
+                                (params["blocks"], cache["kv"]), remat=False)
+        new_cache = {"kv": new_kv}
+
+    elif f == "mla_moe":
+        def body_d(h, lp_cache):
+            lp, lc = lp_cache
+            h, _, nc = attn_ff_block(cfg, lp, h, kind="mla_dense",
+                                     mode="decode", cache=lc, index=index)
+            return h, nc
+
+        def body_m(h, lp_cache):
+            lp, lc = lp_cache
+            h, _, nc = attn_ff_block(cfg, lp, h, kind="mla_moe",
+                                     mode="decode", cache=lc, index=index)
+            return h, nc
+
+        x, nkd = scan_blocks(cfg, body_d, x, (params["dense_blocks"],
+                                              cache["kv_dense"]), remat=False)
+        x, nkm = scan_blocks(cfg, body_m, x, (params["moe_blocks"],
+                                              cache["kv_moe"]), remat=False)
+        new_cache = {"kv_dense": nkd, "kv_moe": nkm}
+
+    elif f == "vlm":
+        ncross = cfg.n_layers // cfg.cross_every
+        nself_per = cfg.cross_every - 1
+        self_p = jax.tree.map(
+            lambda a: a.reshape((ncross, nself_per) + a.shape[1:]),
+            params["self_blocks"])
+        kv = jax.tree.map(
+            lambda a: a.reshape((ncross, nself_per) + a.shape[1:]),
+            cache["kv"])
+
+        def group(h, lps):
+            sp, cp, lkv, ck, cv = lps
+
+            def sbody(hh, lp_cache):
+                lp, lc = lp_cache
+                hh, _, nc = attn_ff_block(cfg, lp, hh, kind="dense",
+                                          mode="decode", cache=lc, index=index)
+                return hh, nc
+
+            h, nkv = scan_blocks(cfg, sbody, h, (sp, lkv), remat=False)
+            hn = rms_norm(h, cp["attn_norm"], cfg.norm_eps)
+            ca = _cached_cross_decode(cfg, cp["attn"], hn, ck, cv)
+            h = h + jnp.tanh(cp["gate_attn"]).astype(h.dtype) * ca
+            hm = rms_norm(h, cp["mlp_norm"], cfg.norm_eps)
+            h = h + jnp.tanh(cp["gate_mlp"]).astype(h.dtype) * mlp_apply(cp["mlp"], hm)
+            return h, nkv
+
+        x, nkv = scan_blocks(cfg, group, x,
+                             (self_p, params["cross_blocks"], kv,
+                              cache["cross_k"], cache["cross_v"]),
+                             remat=False)
+        nkv = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), nkv)
+        new_cache = dict(cache, kv=nkv)
+
+    elif f == "zamba":
+        def mamba_layer(h, lp_state):
+            lp, st = lp_state
+            hn = rms_norm(h, lp["norm"], cfg.norm_eps)
+            out, ns = mamba2.mamba_decode(cfg, lp["mamba"], hn, st)
+            return h + out, ns
+
+        def group(h, lps):
+            lp, lkv, lst = lps
+            hin = jnp.concatenate([h, emb0], axis=-1) @ params["shared"]["proj"]
+            hb, _, nkv = attn_ff_block(cfg, params["shared"], hin,
+                                       kind="dense", mode="decode",
+                                       cache=lkv, index=index,
+                                       window=cfg.window)
+            h = h + hb
+            h, nst = scan_blocks(cfg, mamba_layer, h, (lp, lst),
+                                 remat=False)
+            return h, (nkv, nst)
+
+        x, (nkv, nst) = scan_blocks(cfg, group, x, (params["mamba_groups"],
+                                                    cache["attn"],
+                                                    cache["mamba"]),
+                                    remat=False)
+        new_cache = {"mamba": nst, "attn": nkv}
+        if "mamba_tail" in params:
+            x, ntail = scan_blocks(cfg, mamba_layer, x,
+                                   (params["mamba_tail"],
+                                    cache["mamba_tail"]), remat=False)
+            new_cache["mamba_tail"] = ntail
+
+    elif f == "rwkv":
+        from .common import layer_norm
+        x = layer_norm(x, params["ln0_s"], params["ln0_b"], cfg.norm_eps)
+
+        def body(h, lp_state):
+            lp, st = lp_state
+            h, ns = rwkv6.rwkv_block(cfg, lp, h, st)
+            return h, ns
+
+        x, nst = scan_blocks(cfg, body, x,
+                             (params["blocks"], cache["blocks"]), remat=False)
+        new_cache = {"blocks": nst}
+
+    else:
+        raise ValueError(f)
+
+    logits = _logits(cfg, params, x)
+    return logits, new_cache
+
+
+def _cached_cross_decode(cfg, p, x, k, v):
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    from .common import decode_attention
+    o = decode_attention(q, k, v)
+    return o.reshape(b, 1, h * hd) @ p["wo"]
+
+
+def vlm_cross_cache(cfg: LMConfig, params, vision):
+    """Precompute cross-attn K/V from vision states (prefill side)."""
+    ncross = cfg.n_layers // cfg.cross_every
+    b, simg, _ = vision.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def one(cp):
+        k = (vision @ cp["wk"]).reshape(b, simg, h, hd)
+        v = (vision @ cp["wv"]).reshape(b, simg, h, hd)
+        return k, v
+
+    ks, vs = jax.lax.map(lambda cp: one(cp), params["cross_blocks"]["attn"])
+    return ks, vs
+
+
+# ---------------------------------------------------------------------------
+# MTP head (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+def mtp_logits(cfg: LMConfig, params, hidden, tokens_next):
+    """hidden: (B, S, d) final hidden; tokens_next: (B, S) = token t+1.
+    Returns logits for predicting t+2 (one extra MLA block)."""
+    mp = params["mtp"]
+    e = _embed(cfg, params, tokens_next)
+    h = jnp.concatenate([rms_norm(hidden, mp["norm_h"], cfg.norm_eps),
+                         rms_norm(e, mp["norm_e"], cfg.norm_eps)], axis=-1)
+    h = h @ mp["proj"]
+    h, _, _ = attn_ff_block(cfg, mp, h, kind="mla_dense", mode="train")
+    return _logits(cfg, params, h)

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)-state
+recurrence for decode.
+
+State-space recurrence per head (scalar A, shared B/C, ngroups=1):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t ⊗ x_t        (h: (P, N))
+    y_t = C_t · h_t + D * x_t
+Train uses the chunk decomposition (intra-chunk quadratic with decay mask +
+inter-chunk state scan), memory O(S·Q) instead of O(S·P·N).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .common import ParamDef, rms_norm
+from .config import LMConfig
+
+
+def mamba_schema(cfg: LMConfig, layers: Optional[int] = None) -> Dict:
+    L = cfg.n_layers if layers is None else layers
+    d, di, n, hh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    lead = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    return {
+        # order: [z (di) | x (di) | B (n) | C (n) | dt (H)]
+        "in_proj": ParamDef(lead + (d, 2 * di + 2 * n + hh),
+                            lax + ("embed", "ff")),
+        "conv_w": ParamDef(lead + (cfg.ssm_conv, conv_dim),
+                           lax + (None, "ff")),
+        "conv_b": ParamDef(lead + (conv_dim,), lax + ("ff",), init="zeros"),
+        "A_log": ParamDef(lead + (hh,), lax + (None,), init="zeros",
+                          dtype=jnp.float32),
+        "D": ParamDef(lead + (hh,), lax + (None,), init="ones",
+                      dtype=jnp.float32),
+        "dt_bias": ParamDef(lead + (hh,), lax + (None,), init="zeros",
+                            dtype=jnp.float32),
+        "norm": ParamDef(lead + (di,), lax + ("ff",), init="ones"),
+        "out_proj": ParamDef(lead + (di, d), lax + ("ff", "embed")),
+    }
+
+
+def _split_proj(cfg: LMConfig, zxbcdt):
+    di, n, hh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, x, b, c, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n],
+                               axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C); returns (y, new_state)
+    where state is the last K-1 inputs."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    y = sum(xx[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xx[:, -(k - 1):] if k > 1 else state
+    return jax.nn.silu((y + b).astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """x: (b,s,h,p); dt: (b,s,h) >=0; A: (h,) <0; B,C: (b,s,n).
+    Returns y: (b,s,h,p), final state (b,h,p,n)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+    xq = x.reshape(b, nc, q, h, p)
+    dtq = dt.reshape(b, nc, q, h)
+    Bq = B.reshape(b, nc, q, n)
+    Cq = C.reshape(b, nc, q, n)
+
+    a = dtq * A                                   # (b,nc,q,h) log-decay <=0
+    acum = jnp.cumsum(a, axis=2)                  # within-chunk cumulative
+    a_tot = acum[:, :, -1]                        # (b,nc,h)
+
+    # intra-chunk: y[i] += sum_{j<=i} C_i·B_j exp(acum_i - acum_j) dt_j x_j
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cq, Bq,
+                        preferred_element_type=jnp.float32)
+    decay = jnp.exp(acum[:, :, :, None, :] - acum[:, :, None, :, :])  # (b,c,q,k,h)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    w_intra = scores[..., None] * decay * dtq[:, :, None, :, :]       # (b,c,q,k,h)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w_intra,
+                         xq.astype(jnp.float32))
+
+    # chunk summaries: S_c = sum_j exp(a_tot - acum_j) dt_j B_j ⊗ x_j
+    w_state = jnp.exp(a_tot[:, :, None, :] - acum) * dtq              # (b,c,q,h)
+    S = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", w_state, Bq,
+                   xq.astype(jnp.float32))                            # (b,c,h,n,p)
+
+    # inter-chunk scan: H_c = exp(a_tot_c) H_{c-1} + S_c
+    def step(hprev, inputs):
+        s_c, atot_c = inputs
+        hnew = jnp.exp(atot_c)[:, :, None, None] * hprev + s_c
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    hlast, hprevs = jax.lax.scan(
+        step, h0, (S.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)      # (b,c,h,n,p) state BEFORE c
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cq, jnp.exp(acum),
+                         hprevs)
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)[:, :s]
+    return y.astype(x.dtype), hlast
+
+
+def mamba_train(cfg: LMConfig, p, u, conv_state=None, ssm_state=None):
+    """u: (B, S, d) -> (out (B, S, d), (conv_state, ssm_state))."""
+    b, s, _ = u.shape
+    hh, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    zxbcdt = u @ p["in_proj"]
+    if cfg.seq_parallel_proj:
+        # keep the in-projection sequence-parallel (weights gathered, not
+        # activations); the SSD recurrence below needs full-sequence
+        # channel shards, so the channel constraint triggers an all-to-all
+        # (4x fewer wire bytes than gathering u per layer; §Perf Z1).
+        zxbcdt = shard(zxbcdt, "batch", "act_seq", None)
+    z, x, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc, conv_new = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    x, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+    x = shard(x, "batch", "seq", "ff")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(b, s, hh, pdim)
+    y, ssm_new = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                             Cm.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + x.reshape(b, s, hh, pdim) * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (conv_new, ssm_new)
+
+
+def mamba_state_schema(cfg: LMConfig, batch: int,
+                       layers: Optional[int] = None) -> Dict:
+    L = cfg.n_layers if layers is None else layers
+    hh, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * n
+    lead = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    return {
+        "conv": ParamDef(lead + (batch, cfg.ssm_conv - 1, conv_dim),
+                         lax + ("batch", None, "ff"), init="zeros"),
+        "ssm": ParamDef(lead + (batch, hh, n, pdim),
+                        lax + ("batch", None, None, None), init="zeros",
+                        dtype=jnp.float32),
+    }
+
+
+def mamba_decode(cfg: LMConfig, p, u, state):
+    """One-token recurrent step. u: (B, 1, d); state: {"conv","ssm"}."""
+    b = u.shape[0]
+    hh, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    zxbcdt = u @ p["in_proj"]
+    z, x, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc, conv_new = _causal_conv(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    x, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(b, hh, pdim).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                            # (B,H)
+    h = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bm[:, 0].astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": conv_new, "ssm": h}

@@ -1,0 +1,162 @@
+"""RWKV6 "Finch" block — attention-free time-mix with data-dependent decay.
+
+Time-mix recurrence per head (state S: (P, P)):
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    y_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+with per-channel decay w_t = exp(-exp(w0 + lora(x̄_t))) (data-dependent, the
+Finch contribution).  Token-shift interpolation is static-μ (the low-rank
+data-dependent shift of the full model is orthogonal to the recurrence and
+omitted; noted in DESIGN.md).  Training runs an outer scan over chunks with
+a rematerialized inner scan — O(S/chunk) live state instead of O(S).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, layer_norm
+from .config import LMConfig
+
+
+def rwkv_schema(cfg: LMConfig, layers: Optional[int] = None) -> Dict:
+    L = cfg.n_layers if layers is None else layers
+    d, ff, r = cfg.d_model, cfg.d_ff, cfg.rwkv_lora
+    lead = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    return {
+        "ln1_s": ParamDef(lead + (d,), lax + (None,), init="ones"),
+        "ln1_b": ParamDef(lead + (d,), lax + (None,), init="zeros"),
+        "ln2_s": ParamDef(lead + (d,), lax + (None,), init="ones"),
+        "ln2_b": ParamDef(lead + (d,), lax + (None,), init="zeros"),
+        # token-shift lerp coefficients for r,k,v,g,w
+        "mu": ParamDef(lead + (5, d), lax + (None, None)),
+        "wr": ParamDef(lead + (d, d), lax + ("embed", "q_dim")),
+        "wk": ParamDef(lead + (d, d), lax + ("embed", "q_dim")),
+        "wv": ParamDef(lead + (d, d), lax + ("embed", "q_dim")),
+        "wg": ParamDef(lead + (d, d), lax + ("embed", "q_dim")),
+        "wo": ParamDef(lead + (d, d), lax + ("q_dim", "embed")),
+        "decay_w0": ParamDef(lead + (d,), lax + (None,), init="zeros",
+                             dtype=jnp.float32),
+        "decay_w1": ParamDef(lead + (d, r), lax + ("embed", None)),
+        "decay_w2": ParamDef(lead + (r, d), lax + (None, "q_dim")),
+        "bonus_u": ParamDef(lead + (d,), lax + (None,), init="zeros",
+                            dtype=jnp.float32),
+        "lnx_s": ParamDef(lead + (d,), lax + (None,), init="ones"),
+        "lnx_b": ParamDef(lead + (d,), lax + (None,), init="zeros"),
+        # channel mix
+        "cmix_mu": ParamDef(lead + (2, d), lax + (None, None)),
+        "ck": ParamDef(lead + (d, ff), lax + ("embed", "ff")),
+        "cv": ParamDef(lead + (ff, d), lax + ("ff", "embed")),
+        "cr": ParamDef(lead + (d, d), lax + ("embed", "q_dim")),
+    }
+
+
+def _streams(cfg, p, x, x_prev):
+    """Token-shifted lerp streams. x: (B,S,d); x_prev: (B,1,d) carry."""
+    xx = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mu = p["mu"]
+    z = x[:, :, None, :] + mu[None, None] * (xx - x)[:, :, None, :]
+    zr, zk, zv, zg, zw = [z[:, :, i] for i in range(5)]
+    r = zr @ p["wr"]
+    k = zk @ p["wk"]
+    v = zv @ p["wv"]
+    g = zg @ p["wg"]
+    w = jnp.exp(-jnp.exp(
+        p["decay_w0"]
+        + (jnp.tanh(zw @ p["decay_w1"]) @ p["decay_w2"]).astype(jnp.float32)))
+    return r, k, v, g, w
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v: (B,S,H,P) f32; w: (B,S,H,P) decay; u: (H,P); s0: (B,H,P,P).
+    Returns y (B,S,H,P), s_final."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # (B,H,P)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,P,P)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def rwkv_time_mix(cfg: LMConfig, p, x, state_s, x_prev):
+    """x: (B,S,d). Returns (out, new_state_s, new_x_prev)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    pd = d // h
+    r, k, v, g, w = _streams(cfg, p, x, x_prev)
+    rh = r.reshape(b, s, h, pd).astype(jnp.float32)
+    kh = k.reshape(b, s, h, pd).astype(jnp.float32)
+    vh = v.reshape(b, s, h, pd).astype(jnp.float32)
+    wh = w.reshape(b, s, h, pd)
+    u = p["bonus_u"].reshape(h, pd)
+
+    q = min(cfg.rwkv_chunk, s)
+    pad = (-s) % q
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        rh, kh, vh = z(rh), z(kh), z(vh)
+        wh = jnp.pad(wh, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+    nc = (s + pad) // q
+
+    def chunk_swapped(s0, inp):
+        y, s_fin = _wkv_scan(*inp, u, s0)
+        return s_fin, y
+
+    resh = lambda a: a.reshape(b, nc, q, h, pd).transpose(1, 0, 2, 3, 4)
+    xs = (resh(rh), resh(kh), resh(vh), resh(wh))
+    s_fin, ys = jax.lax.scan(jax.checkpoint(chunk_swapped), state_s, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * q, h, pd)[:, :s]
+
+    y = y.reshape(b, s, d)
+    y = layer_norm(y, p["lnx_s"], p["lnx_b"], cfg.norm_eps).astype(x.dtype)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return y @ p["wo"], s_fin, x[:, -1:, :]
+
+
+def rwkv_channel_mix(cfg: LMConfig, p, x, x_prev):
+    xx = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mu = p["cmix_mu"]
+    zk = x + mu[None, None, 0] * (xx - x)
+    zr = x + mu[None, None, 1] * (xx - x)
+    kk = jnp.square(jax.nn.relu((zk @ p["ck"]).astype(jnp.float32))).astype(x.dtype)
+    rr = jax.nn.sigmoid((zr @ p["cr"]).astype(jnp.float32)).astype(x.dtype)
+    return rr * (kk @ p["cv"]), x[:, -1:, :]
+
+
+def rwkv_state_schema(cfg: LMConfig, batch: int,
+                      layers: Optional[int] = None) -> Dict:
+    L = cfg.n_layers if layers is None else layers
+    d, h = cfg.d_model, cfg.n_heads
+    pd = d // h
+    lead = (L,) if L else ()
+    lax = ("layers",) if L else ()
+    return {
+        "s": ParamDef(lead + (batch, h, pd, pd),
+                      lax + ("batch", "heads", None, None), init="zeros",
+                      dtype=jnp.float32),
+        "tm_prev": ParamDef(lead + (batch, 1, d), lax + ("batch", None, None),
+                            init="zeros"),
+        "cm_prev": ParamDef(lead + (batch, 1, d), lax + ("batch", None, None),
+                            init="zeros"),
+    }
+
+
+def rwkv_block(cfg: LMConfig, p, x, state):
+    """Full block (time-mix + channel-mix). Works for S>=1; state threads
+    the recurrence across calls."""
+    h1 = layer_norm(x, p["ln1_s"], p["ln1_b"], cfg.norm_eps)
+    att, s_new, tm_prev = rwkv_time_mix(cfg, p, h1, state["s"],
+                                        state["tm_prev"])
+    x = x + att
+    h2 = layer_norm(x, p["ln2_s"], p["ln2_b"], cfg.norm_eps)
+    ffn, cm_prev = rwkv_channel_mix(cfg, p, h2, state["cm_prev"])
+    x = x + ffn
+    return x, {"s": s_new, "tm_prev": tm_prev, "cm_prev": cm_prev}

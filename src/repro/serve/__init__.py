@@ -1,0 +1,5 @@
+"""Serving substrate: batched prefill/decode engine + predicate-based
+request routing (the paper's engine applied to request metadata)."""
+from .engine import ServeEngine, RequestRouter
+
+__all__ = ["ServeEngine", "RequestRouter"]

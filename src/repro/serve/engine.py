@@ -1,0 +1,104 @@
+"""Batched serving engine + predicate-plan request routing.
+
+``ServeEngine`` runs prefill once then jitted single-token decode steps over
+a fixed batch of slots (static shapes => one compile).  ``RequestRouter``
+evaluates admission/routing predicates over a *request-metadata column
+batch* with the paper's planner — the same ShallowFish/DeepFish plans used
+in the data pipeline, applied at serve time (e.g. "(tier = pro OR
+prompt_tokens < 2k) AND NOT flagged").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..columnar.bitmap import unpack_bits
+from ..columnar.executor import BitmapBackend
+from ..columnar.table import Table, annotate_selectivities
+from ..core import (Node, PerAtomCostModel, deepfish, execute_plan,
+                    normalize, shallowfish)
+from ..models import api
+from ..models.config import LMConfig
+
+
+class RequestRouter:
+    """Route a batch of requests through a boolean predicate plan."""
+
+    def __init__(self, expr: Node, planner: str = "auto"):
+        self.expr = expr
+        self.planner = planner
+
+    def admit(self, requests: Dict[str, np.ndarray]) -> np.ndarray:
+        """requests: columnar dict of per-request metadata arrays.
+        Returns a boolean admit mask."""
+        table = Table({k: np.asarray(v) for k, v in requests.items()})
+        tree = normalize(self.expr)
+        annotate_selectivities(tree, table)
+        planner = self.planner
+        if planner == "auto":
+            planner = "shallowfish" if tree.depth <= 2 else "deepfish"
+        plan = (shallowfish if planner == "shallowfish" else deepfish)(
+            tree, PerAtomCostModel(), total_records=table.n_records)
+        backend = BitmapBackend(table)
+        bitmap = execute_plan(plan, backend)
+        return unpack_bits(bitmap, table.n_records)
+
+
+class ServeEngine:
+    """Fixed-slot batched generation over any registry architecture."""
+
+    def __init__(self, cfg: LMConfig, params, batch_size: int, max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_seq = max_seq
+        self._decode = jax.jit(
+            lambda p, t, c, i: api.decode(cfg, p, t, c, i))
+
+    def generate(self, prompts: np.ndarray, n_steps: int,
+                 batch_extras: Optional[dict] = None) -> np.ndarray:
+        """prompts: (B, P) int32. Greedy-decodes ``n_steps`` tokens."""
+        b, plen = prompts.shape
+        assert b == self.batch
+        batch = {"tokens": jnp.asarray(prompts)}
+        if batch_extras:
+            batch.update({k: jnp.asarray(v) for k, v in batch_extras.items()})
+        logits, cache = api.prefill(self.cfg, self.params, batch)
+        cache = self._grow_cache(cache, plen)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32).reshape(b, 1)
+        out = [np.asarray(tok)]
+        idx = jnp.int32(plen)
+        for _ in range(n_steps - 1):
+            logits, cache = self._decode(self.params, tok, cache, idx)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            tok = tok.reshape(b, 1)
+            out.append(np.asarray(tok))
+            idx = idx + 1
+        return np.concatenate(out, axis=1)
+
+    def _grow_cache(self, cache, plen: int):
+        """Pad prefill caches out to max_seq decode buffers (and window-fold
+        zamba attention caches)."""
+        cfg = self.cfg
+        target = api.abstract_cache(cfg, self.batch, self.max_seq)
+
+        def fit(src, dst):
+            if src.shape == dst.shape:
+                return src.astype(dst.dtype)
+            # pad/crop the sequence axis (the only axis that differs)
+            for ax, (s, d) in enumerate(zip(src.shape, dst.shape)):
+                if s != d:
+                    if s < d:
+                        pad = [(0, 0)] * src.ndim
+                        pad[ax] = (0, d - s)
+                        return jnp.pad(src, pad).astype(dst.dtype)
+                    sl = [slice(None)] * src.ndim
+                    sl[ax] = slice(s - d, s)   # keep the most recent window
+                    return src[tuple(sl)].astype(dst.dtype)
+            return src.astype(dst.dtype)
+
+        return jax.tree.map(fit, cache, target)

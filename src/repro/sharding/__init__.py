@@ -1,0 +1,136 @@
+"""Logical-axis sharding: one rules table maps logical names -> mesh axes.
+
+Model code annotates activations with ``shard(x, "batch", None, "heads",
+None)`` and parameter schemas carry logical axis names; the launcher
+installs a (mesh, rules) context and everything resolves to
+``NamedSharding``s.  Outside a mesh context every helper is a no-op, so the
+same model code runs single-device smoke tests unchanged.
+
+Resolution is *divisibility-aware*: a mesh axis is dropped from a dim whose
+size it does not divide (e.g. batch=1 long-context decode, or kv_heads=8 on
+a model=16 axis) — the dim is then replicated, which is always correct.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+# Logical axis -> mesh axis (or tuple). Missing key => replicated.
+DEFAULT_RULES: Dict[str, Axes] = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",
+    "q_dim": "model",      # flattened n_heads*head_dim weight dim
+    "kv_dim": "model",     # flattened kv weight dim (divisible even when
+                           # kv_heads isn't)
+    "ff": "model",
+    "experts": "model",
+    "embed": "data",       # FSDP dim of weight matrices
+    "kv_seq": "model",     # decode-time KV cache length
+    "act_seq": "model",    # sequence-parallel residual stream between blocks
+                           # (saved remat carries shard over "model")
+    "layers": None,
+    "seq": None,
+}
+
+_CTX = threading.local()
+
+
+def _get():
+    mesh = getattr(_CTX, "mesh", None)
+    rules = getattr(_CTX, "rules", None)
+    return mesh, rules
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[Dict[str, Axes]] = None):
+    """Install (mesh, rules); also enters the mesh as the ambient mesh."""
+    prev = _get()
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _get()[0]
+
+
+def _resolve_axis(rule: Axes, mesh: Mesh, dim_size: int,
+                  used=frozenset()) -> Axes:
+    """Keep the longest prefix of mesh axes whose product divides dim_size,
+    skipping axes already used by earlier dims."""
+    if rule is None:
+        return None
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    axes = [a for a in axes if a in mesh.axis_names and a not in used]
+    kept, prod = [], 1
+    for a in axes:
+        size = mesh.shape[a]
+        if dim_size % (prod * size) == 0:
+            kept.append(a)
+            prod *= size
+        else:
+            break
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else tuple(kept)
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[Dict[str, Axes]] = None) -> P:
+    """PartitionSpec for an array of ``shape`` with logical ``axes``.
+
+    A mesh axis may appear only once in a spec: later dims that resolve to
+    an already-used mesh axis are replicated instead."""
+    m, r = _get()
+    mesh = mesh or m
+    rules = rules or r or DEFAULT_RULES
+    if mesh is None:
+        return P()
+    entries = []
+    used = set()
+    for size, name in zip(shape, axes):
+        rule = rules.get(name) if name else None
+        ent = _resolve_axis(rule, mesh, size, used)
+        if ent is not None:
+            used.update((ent,) if isinstance(ent, str) else ent)
+        entries.append(ent)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shard(x, *axes):
+    """with_sharding_constraint by logical axis names (no-op without mesh)."""
+    mesh, rules = _get()
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape: Sequence[int], axes: Sequence[Optional[str]],
+                   mesh: Optional[Mesh] = None,
+                   rules: Optional[Dict[str, Axes]] = None) -> NamedSharding:
+    m, r = _get()
+    mesh = mesh or m
+    rules = rules or r or DEFAULT_RULES
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def batch_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    """The mesh axes that carry data parallelism."""
+    mesh = mesh or current_mesh()
+    names = mesh.axis_names if mesh else ()
+    return tuple(a for a in ("pod", "data") if a in names)

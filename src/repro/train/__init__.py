@@ -1,0 +1,11 @@
+"""Training substrate: optimizers, train-step factory, grad compression."""
+from .optimizer import (AdamWConfig, AdafactorConfig, adamw_init,
+                        adamw_update, adafactor_init, adafactor_update,
+                        make_optimizer, clip_by_global_norm)
+from .step import make_train_step, opt_state_pspecs
+from . import compress
+
+__all__ = ["AdamWConfig", "AdafactorConfig", "adamw_init", "adamw_update",
+           "adafactor_init", "adafactor_update", "make_optimizer",
+           "clip_by_global_norm", "make_train_step", "opt_state_pspecs",
+           "compress"]

@@ -1,0 +1,68 @@
+"""Int8 gradient compression for the inter-pod data-parallel reduction.
+
+Mechanism: per-tensor symmetric int8 quantization with f32 scale + error
+feedback.  ``compressed_allreduce_mean`` is the wire primitive — under
+``shard_map`` over the "pod" axis it all-gathers int8 payloads (4x fewer
+bytes on the slow inter-pod links than f32, 2x vs bf16) and dequantizes/
+averages locally.  ``apply_error_feedback`` keeps the quantization residual
+so the compression is unbiased over time (EF-SGD).
+
+The default pjit train step lets XLA emit the gradient all-reduce; flipping
+``grad_compression="int8"`` routes the pod-axis reduction through this
+module instead (see train.step).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantization_error(x, q, scale):
+    return x.astype(jnp.float32) - dequantize_int8(q, scale)
+
+
+def compressed_allreduce_mean(x, axis_name: str):
+    """Mean over ``axis_name`` with int8 payloads (call under shard_map)."""
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)            # int8 on the wire
+    ss = jax.lax.all_gather(scale, axis_name)
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+    return deq.mean(axis=0)
+
+
+def compress_tree_with_feedback(grads, residuals):
+    """Quantize every leaf, fold in carried residuals (error feedback).
+
+    Returns (dequantized grads, new residuals).  Applied to the gradient
+    tree before the optimizer when grad_compression is enabled: the values
+    the optimizer sees are exactly what a compressed wire transfer would
+    deliver, and the residual carries the quantization error forward.
+    """
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(gf)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(td, [o[0] for o in out]),
+            jax.tree.unflatten(td, [o[1] for o in out]))
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

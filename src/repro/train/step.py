@@ -1,0 +1,125 @@
+"""Train-step factory: grad accumulation, clipping, optimizer, metrics.
+
+``make_train_step(cfg)`` returns ``step(params, opt_state, batch)`` suitable
+for ``jax.jit`` with in/out shardings.  Microbatch accumulation is a
+``lax.scan`` over leading batch splits with f32 accumulators (activation
+memory divides by cfg.microbatch; required for the 671B config).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import api
+from ..models.config import LMConfig
+from . import compress
+from .optimizer import make_optimizer
+
+
+def make_train_step(cfg: LMConfig, lr: float = 3e-4,
+                    grad_compression: Optional[str] = None,
+                    params_pspecs=None) -> Callable:
+    """``params_pspecs``: optional PartitionSpec tree for the parameters —
+    used to pin the f32 gradient-accumulator carry to the params' sharding
+    (otherwise GSPMD may replicate the carry: 4 bytes x N_params per
+    device)."""
+    opt_init, opt_update = make_optimizer(cfg.optimizer)
+
+    def loss_fn(params, batch):
+        loss, metrics = api.loss_fn(cfg, params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _pin(tree):
+        if params_pspecs is None:
+            return tree
+        return jax.tree.map(
+            lambda x, sp: jax.lax.with_sharding_constraint(x, sp),
+            tree, params_pspecs)
+
+    def compute_grads(params, batch):
+        if cfg.microbatch <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        k = cfg.microbatch
+        mb = jax.tree.map(
+            lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+        acc_dtype = jnp.bfloat16 if cfg.grad_accum_dtype == "bf16" \
+            else jnp.float32
+
+        def acc_step(carry, microbatch):
+            loss_acc, grads_acc = carry
+            (loss, metrics), grads = grad_fn(params, microbatch)
+            grads_acc = _pin(jax.tree.map(
+                lambda a, g: a + g.astype(acc_dtype), grads_acc, grads))
+            return (loss_acc + loss, grads_acc), metrics
+
+        zeros = _pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params))
+        (loss_sum, grads_sum), metrics = jax.lax.scan(
+            acc_step, (jnp.zeros((), jnp.float32), zeros), mb)
+        grads = jax.tree.map(
+            lambda g, p: (g / k).astype(p.dtype), grads_sum, params)
+        last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / k, last_metrics, grads
+
+    def step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        if grad_compression == "int8":
+            grads, new_resid = compress.compress_tree_with_feedback(
+                grads, opt_state["ef_residual"])
+        new_params, new_opt, gnorm = opt_update(
+            grads, opt_state["opt"], params, lr)
+        out_state = {"opt": new_opt}
+        if grad_compression == "int8":
+            out_state["ef_residual"] = new_resid
+        m = dict(metrics)
+        m["loss"] = loss
+        m["grad_norm"] = gnorm
+        return new_params, out_state, m
+
+    def init_state(params):
+        st = {"opt": opt_init(params)}
+        if grad_compression == "int8":
+            st["ef_residual"] = compress.init_residuals(params)
+        return st
+
+    step.init_state = init_state
+    return step
+
+
+def opt_state_pspecs(cfg: LMConfig, params_pspecs,
+                     grad_compression: Optional[str] = None,
+                     mesh=None, rules=None):
+    """PartitionSpecs for the optimizer state (mirror the params').
+
+    Adafactor's factored leaves are derived from the parameter SCHEMA
+    (shape/axes), not from the params' PartitionSpecs — specs trim trailing
+    Nones so their length says nothing about the parameter's rank."""
+    from jax.sharding import PartitionSpec as P
+    from ..models import api
+    from ..models.common import ParamDef
+    from ..sharding import spec_for
+    if cfg.optimizer == "adamw":
+        st = {"opt": {"m": params_pspecs, "v": params_pspecs,
+                      "step": P()}}
+    else:
+        def fac(d: ParamDef):
+            if len(d.shape) >= 2:
+                return {"vr": spec_for(d.shape[:-1], d.axes[:-1], mesh, rules),
+                        "vc": spec_for(d.shape[:-2] + d.shape[-1:],
+                                       d.axes[:-2] + d.axes[-1:], mesh, rules)}
+            return {"v": spec_for(d.shape, d.axes, mesh, rules)}
+        st = {"opt": {"f": jax.tree.map(
+                  fac, api.schema(cfg),
+                  is_leaf=lambda x: isinstance(x, ParamDef)),
+              "step": P()}}
+    if grad_compression == "int8":
+        st["ef_residual"] = params_pspecs
+    return st

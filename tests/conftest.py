@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+IMPORTANT: no XLA_FLAGS here — smoke tests and benches must see ONE device.
+Multi-device tests spawn subprocesses (see test_dryrun_small.py).
+"""
+import numpy as np
+import pytest
+
+from repro.columnar import make_forest_table
+
+
+@pytest.fixture(scope="session")
+def forest():
+    return make_forest_table(20_000, n_dup=2, seed=7)
+
+
+@pytest.fixture(scope="session")
+def forest_big():
+    return make_forest_table(100_000, n_dup=3, seed=11)

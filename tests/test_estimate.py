@@ -1,0 +1,59 @@
+"""Estimator internals: incremental apply() == fresh recompute; plan
+determinism; describe() rendering."""
+import numpy as np
+import pytest
+
+from repro.core import (EstimatorState, PerAtomCostModel, deepfish,
+                        plan_cost, shallowfish)
+from test_shallowfish import example1, random_tree
+
+
+def test_incremental_apply_equals_fresh():
+    """EstimatorState.apply (lineage-local update, used by DeepFish's
+    O(n^2) lookahead) must equal a fresh full recompute."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        t = random_tree(rng, n_atoms=int(rng.integers(3, 9)),
+                        depth=int(rng.integers(2, 5)))
+        order = list(rng.permutation(t.n))
+        st = EstimatorState(t)
+        applied = []
+        for aid in order:
+            st = st.apply(aid)
+            applied.append(aid)
+            fresh = EstimatorState(t, applied)
+            for node_id in st._dt:
+                assert abs(st._dt[node_id] - fresh._dt[node_id]) < 1e-12
+                assert abs(st._df[node_id] - fresh._df[node_id]) < 1e-12
+
+
+def test_root_fraction_consistency():
+    t = example1()
+    st = EstimatorState(t, range(t.n))       # everything applied
+    dt, df = st.root_fraction()
+    assert abs(dt + df - 1.0) < 1e-9         # fully determined
+    # dt == P(phi*) under independence
+    gA, gB, gC, gD = 0.820, 0.313, 0.469, 0.984
+    want = gA * (gB + (1 - gB) * gC * gD)
+    assert abs(dt - want) < 1e-9
+
+
+def test_plans_are_deterministic():
+    rng = np.random.default_rng(1)
+    m = PerAtomCostModel()
+    for _ in range(5):
+        t = random_tree(rng, n_atoms=7, depth=3)
+        p1, p2 = shallowfish(t, m), shallowfish(t, m)
+        assert p1.order == p2.order and p1.est_cost == p2.est_cost
+        d1, d2 = deepfish(t, m), deepfish(t, m)
+        assert d1.order == d2.order
+
+
+def test_plan_describe_and_cost_scaling():
+    t = example1()
+    m = PerAtomCostModel()
+    plan = shallowfish(t, m, total_records=1000.0)
+    txt = plan.describe()
+    assert "shallowfish" in txt and "step 1" in txt
+    # cost scales linearly in |R| when kappa == 0
+    assert abs(plan.est_cost - 1000.0 * plan_cost(t, plan.order, m)) < 1e-6

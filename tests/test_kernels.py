@@ -1,0 +1,122 @@
+"""Pallas kernel sweeps vs the pure-jnp ref oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.columnar.bitmap import pack_bits, popcount, unpack_bits
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+SHAPES = [(1, 256), (3, 1024), (4, 8192), (7, 2048)]   # (blocks, block_size)
+OPS = list(range(6))
+
+
+@pytest.mark.parametrize("n,b", SHAPES)
+@pytest.mark.parametrize("opcode", OPS)
+def test_predicate_kernel_matches_ref(n, b, opcode):
+    rng = np.random.default_rng(opcode * 100 + n)
+    col = rng.normal(size=(n, b)).astype(np.float32)
+    bits = rng.integers(0, 2 ** 32, size=(n, b // 32), dtype=np.uint32)
+    if n > 1:
+        bits[1] = 0                       # dead block exercises pl.when skip
+    value = float(rng.normal())
+    got = np.asarray(kops.predicate_blocks(jnp.asarray(col),
+                                           jnp.asarray(bits), value, opcode,
+                                           interpret=True))
+    want = np.asarray(kref.predicate_blocks_ref(jnp.asarray(col),
+                                                jnp.asarray(bits), value,
+                                                opcode))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_predicate_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    col = (rng.normal(size=(2, 512)) * 100).astype(dtype)
+    bits = rng.integers(0, 2 ** 32, size=(2, 16), dtype=np.uint32)
+    got = np.asarray(kops.predicate_blocks(
+        jnp.asarray(col.astype(np.float32)), jnp.asarray(bits), 3.0, 0,
+        interpret=True))
+    want = np.asarray(kref.predicate_blocks_ref(
+        jnp.asarray(col.astype(np.float32)), jnp.asarray(bits), 3.0, 0))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_predicate_kernel_matches_numpy_oracle():
+    """Kernel vs the *numpy* column-store oracle end to end."""
+    rng = np.random.default_rng(1)
+    n, b = 4, 2048
+    col = rng.normal(size=(n * b,)).astype(np.float32)
+    mask = rng.random(n * b) < 0.6
+    bits = pack_bits(mask).reshape(n, b // 32)
+    got = np.asarray(kops.predicate_blocks(
+        jnp.asarray(col.reshape(n, b)), jnp.asarray(bits), 0.25, 0,
+        interpret=True))
+    want_mask = (col < 0.25) & mask
+    np.testing.assert_array_equal(unpack_bits(got.reshape(-1), n * b),
+                                  want_mask)
+
+
+@pytest.mark.parametrize("n,w", [(1, 8), (5, 64), (3, 256)])
+@pytest.mark.parametrize("opcode", [0, 1, 2])
+def test_bitmap_kernel_matches_ref(n, w, opcode):
+    rng = np.random.default_rng(opcode + n)
+    a = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    b = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    out, pops = kops.bitmap_op(jnp.asarray(a), jnp.asarray(b), opcode,
+                               interpret=True)
+    ref_fn = [kref.bitmap_and_ref, kref.bitmap_or_ref,
+              kref.bitmap_andnot_ref][opcode]
+    want = np.asarray(ref_fn(a, b))
+    np.testing.assert_array_equal(np.asarray(out), want)
+    np.testing.assert_array_equal(
+        np.asarray(pops), np.asarray(kref.popcount_ref(jnp.asarray(want))))
+
+
+def test_pack_unpack_roundtrip_jnp_vs_numpy():
+    rng = np.random.default_rng(2)
+    mask = rng.random(4096) < 0.37
+    np_words = pack_bits(mask)
+    j_words = np.asarray(kref.pack_u32(jnp.asarray(mask)))
+    np.testing.assert_array_equal(np_words, j_words)
+    back = np.asarray(kref.unpack_u32(jnp.asarray(np_words)))
+    np.testing.assert_array_equal(back[:4096], mask)
+    assert popcount(np_words) == mask.sum()
+
+
+def test_fused_chain_ref():
+    rng = np.random.default_rng(3)
+    k, n, b = 3, 2, 512
+    cols = rng.normal(size=(k, n, b)).astype(np.float32)
+    bits = rng.integers(0, 2 ** 32, size=(n, b // 32), dtype=np.uint32)
+    vals = rng.normal(size=(k,)).astype(np.float32)
+    got = np.asarray(kref.fused_chain_ref(jnp.asarray(cols),
+                                          jnp.asarray(bits),
+                                          jnp.asarray(vals), (0, 2, 0),
+                                          conj=True))
+    m = (cols[0] < vals[0]) & (cols[1] > vals[1]) & (cols[2] < vals[2])
+    want = np.asarray(kref.pack_u32(jnp.asarray(
+        m & np.asarray(kref.unpack_u32(jnp.asarray(bits))))))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n,b,k", [(2, 512, 2), (3, 1024, 3), (1, 256, 4)])
+@pytest.mark.parametrize("conj", [True, False])
+def test_fused_chain_kernel_matches_ref(n, b, k, conj):
+    rng = np.random.default_rng(n * 10 + k)
+    cols = rng.normal(size=(k, n, b)).astype(np.float32)
+    bits = rng.integers(0, 2 ** 32, size=(n, b // 32), dtype=np.uint32)
+    if n > 1:
+        bits[0] = 0                      # dead block path
+    vals = rng.normal(size=(k,)).astype(np.float32)
+    opcodes = tuple(int(rng.integers(0, 6)) for _ in range(k))
+    got = np.asarray(kops.fused_chain_blocks(
+        jnp.asarray(cols), jnp.asarray(bits), vals, opcodes, conj=conj,
+        interpret=True))
+    want = np.asarray(kref.fused_chain_ref(
+        jnp.asarray(cols), jnp.asarray(bits), jnp.asarray(vals), opcodes,
+        conj=conj))
+    want = np.asarray(want)
+    # dead blocks: kernel writes zeros; ref keeps mask-AND (also zeros)
+    np.testing.assert_array_equal(got, want)

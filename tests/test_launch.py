@@ -1,0 +1,81 @@
+"""Launch-layer units that run on ONE device: spec construction, shape
+cells, roofline HLO parsing, unit solver."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch.roofline import (Measurement, collective_bytes,
+                                   model_flops, model_params_active,
+                                   solve_units)
+from repro.launch.specs import input_specs
+from repro.models import SHAPES, api
+
+
+def test_input_specs_shapes_train():
+    cfg = get_config("granite-3-8b")
+    spec = input_specs(cfg, SHAPES["train_4k"])["batch"]
+    assert spec["tokens"].shape == (256, 4097)
+    assert spec["tokens"].dtype == jnp.int32
+
+
+def test_input_specs_decode_cache():
+    cfg = get_config("yi-9b")
+    spec = input_specs(cfg, SHAPES["decode_32k"])
+    assert spec["token"].shape == (128, 1)
+    kv = spec["cache"]["kv"]
+    assert kv["k"].shape == (48, 128, 32768, 4, 128)
+
+
+def test_input_specs_stub_frontends():
+    w = get_config("whisper-base")
+    spec = input_specs(w, SHAPES["train_4k"])["batch"]
+    assert spec["frames"].shape == (256, 1500, 512)
+    v = get_config("llama-3.2-vision-11b")
+    spec = input_specs(v, SHAPES["prefill_32k"])["batch"]
+    assert spec["vision"].shape == (32, 1601, 4096)
+
+
+def test_collective_parse():
+    hlo = """
+  %all-reduce.1 = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[4,256]{1,0} all-gather(%y), dimensions={0}
+  %cp = f32[8]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %notacoll = f32[99]{0} add(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 16 * 128 * 4 * 2       # ring x2
+    assert out["all-gather"] == 4 * 256 * 2
+    assert out["collective-permute"] == 8 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_unit_solver_exact():
+    # base=5, unitA=3, unitB=7 reconstructed from 3 variants
+    variants = [
+        ({"a": 1, "b": 1}, Measurement(5 + 3 + 7, 0, {})),
+        ({"a": 2, "b": 1}, Measurement(5 + 6 + 7, 0, {})),
+        ({"a": 1, "b": 2}, Measurement(5 + 3 + 14, 0, {})),
+    ]
+    m = solve_units(variants, {"a": 10, "b": 4})
+    assert abs(m.flops - (5 + 30 + 28)) < 1e-6
+
+
+def test_model_flops_sanity():
+    cfg = get_config("granite-3-8b")
+    n, n_active = model_params_active(cfg)
+    assert n == n_active                      # dense
+    assert 7.5e9 < n < 9e9
+    f = model_flops(cfg, SHAPES["train_4k"])
+    assert abs(f - 6 * n * 256 * 4096) / f < 1e-6
+    ds = get_config("deepseek-v3-671b")
+    nt, na = model_params_active(ds)
+    assert nt > 6e11 and na < 0.1 * nt        # sparse activation
+
+
+def test_supports_matrix_counts():
+    from repro.models import supports_shape
+    runnable = sum(supports_shape(get_config(a), s)
+                   for a in ARCHS for s in SHAPES)
+    assert runnable == 32                     # 40 cells - 8 long_500k skips

@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, shape + finiteness asserts, decode-vs-forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.models import SHAPES, api, supports_shape
+from repro.models.lm import vocab_padded
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=32):
+    batch = {"tokens": jax.random.randint(KEY, (b, s + 1), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(KEY, (b, cfg.enc_seq, cfg.d_model),
+                                            jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(KEY, (b, cfg.img_seq, cfg.d_model),
+                                            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    params = api.init(cfg, KEY)
+    batch = make_batch(cfg)
+    loss, metrics = api.loss_fn(cfg, params, batch)
+    assert jnp.isfinite(loss), arch
+    assert float(loss) > 0
+    # one real optimizer step on CPU
+    from repro.train import make_train_step
+    step = make_train_step(cfg.replace(microbatch=1), lr=1e-3)
+    state = step.init_state(params)
+    p2, s2, m = step(params, state, batch)
+    assert jnp.isfinite(m["loss"]) and jnp.isfinite(m["grad_norm"])
+    # params actually changed
+    delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert delta > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_logit_shapes_and_vocab_mask(arch):
+    cfg = get_smoke(arch)
+    params = api.init(cfg, KEY)
+    batch = make_batch(cfg)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        mem = encdec.encode(cfg, params, batch["frames"])
+        logits, _ = encdec.decode_train(cfg, params, batch["tokens"][:, :-1],
+                                        mem)
+    else:
+        from repro.models import lm
+        logits, _, _, _ = lm.forward(cfg, params, batch["tokens"][:, :-1],
+                                     vision=batch.get("vision"))
+    assert logits.shape[-1] == vocab_padded(cfg)
+    lf = np.asarray(logits, np.float32)
+    assert np.isfinite(lf[..., :cfg.vocab]).all()
+    if vocab_padded(cfg) != cfg.vocab:
+        assert (lf[..., cfg.vocab:] < -1e29).all()   # pad cols masked
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Sequential decode logits == teacher-forced forward logits."""
+    cfg = get_smoke(arch)
+    params = api.init(cfg, KEY)
+    b, t = 2, 8
+    batch = make_batch(cfg, b=b, s=t)
+    tokens = batch["tokens"][:, :t]
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        mem = encdec.encode(cfg, params, batch["frames"])
+        fwd_logits, _ = encdec.decode_train(cfg, params, tokens, mem)
+        cache = api.init_cache(cfg, b, cfg.max_seq)
+        ck, cv = encdec.cross_kv(cfg, params, mem)
+        cache = dict(cache, cross_k=ck, cross_v=cv)
+    else:
+        from repro.models import lm
+        fwd_logits, _, _, _ = lm.forward(cfg, params, tokens,
+                                         vision=batch.get("vision"))
+        cache = api.init_cache(cfg, b, cfg.max_seq)
+        if cfg.family == "vlm":
+            ck, cv = lm.vlm_cross_cache(cfg, params, batch["vision"])
+            cache = dict(cache, cross_k=ck, cross_v=cv)
+    dec = []
+    for i in range(t):
+        lg, cache = api.decode(cfg, params, tokens[:, i:i + 1], cache,
+                               jnp.int32(i))
+        dec.append(np.asarray(lg[:, 0], np.float32))
+    dec = np.stack(dec, axis=1)
+    fwd = np.asarray(fwd_logits, np.float32)
+    # bf16 tolerance; compare log-softmax to be scale-robust
+    d = np.abs(dec[..., :cfg.vocab] - fwd[..., :cfg.vocab]).max()
+    assert d < 0.15, f"{arch}: decode/forward mismatch {d}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned numbers."""
+    cfg = get_config(arch)
+    expect = {
+        "zamba2-1.2b": dict(n_layers=38, d_model=2048, n_heads=32,
+                            d_ff=8192, vocab=32000, ssm_state=64),
+        "granite-3-8b": dict(n_layers=40, d_model=4096, n_heads=32,
+                             n_kv_heads=8, d_ff=12800, vocab=49155),
+        "minicpm3-4b": dict(n_layers=62, d_model=2560, n_heads=40,
+                            d_ff=6400, vocab=73448),
+        "granite-8b": dict(n_layers=36, d_model=4096, n_heads=32,
+                           n_kv_heads=8, d_ff=14336, vocab=49152),
+        "yi-9b": dict(n_layers=48, d_model=4096, n_heads=32, n_kv_heads=4,
+                      d_ff=11008, vocab=64000),
+        "whisper-base": dict(n_layers=6, enc_layers=6, d_model=512,
+                             n_heads=8, d_ff=2048, vocab=51865),
+        "deepseek-v3-671b": dict(n_layers=61, d_model=7168, n_heads=128,
+                                 vocab=129280, n_experts=256, top_k=8,
+                                 moe_d_ff=2048),
+        "qwen3-moe-30b-a3b": dict(n_layers=48, d_model=2048, n_heads=32,
+                                  n_kv_heads=4, vocab=151936, n_experts=128,
+                                  top_k=8, moe_d_ff=768),
+        "llama-3.2-vision-11b": dict(n_layers=40, d_model=4096, n_heads=32,
+                                     n_kv_heads=8, d_ff=14336, vocab=128256),
+        "rwkv6-1.6b": dict(n_layers=24, d_model=2048, d_ff=7168,
+                           vocab=65536),
+    }[arch]
+    for k, v in expect.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_param_counts_near_nameplate():
+    """Full-config parameter counts are in the right ballpark."""
+    approx = {"deepseek-v3-671b": 671e9, "qwen3-moe-30b-a3b": 30.5e9,
+              "granite-8b": 8.1e9, "yi-9b": 8.8e9, "granite-3-8b": 8.2e9,
+              "llama-3.2-vision-11b": 10.7e9, "minicpm3-4b": 4.0e9,
+              "zamba2-1.2b": 1.2e9, "rwkv6-1.6b": 1.6e9,
+              "whisper-base": 72e6}
+    for arch, target in approx.items():
+        n = api.n_params(get_config(arch))
+        assert 0.55 * target < n < 1.7 * target, (arch, n, target)
+
+
+def test_long_500k_support_flags():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        sub = cfg.family in ("zamba", "rwkv")
+        assert supports_shape(cfg, "long_500k") == sub, arch
+        assert supports_shape(cfg, "train_4k")

@@ -1,0 +1,80 @@
+"""Optimality: subset-DP == brute force; ShallowFish optimal at depth <= 2
+(Thm 5 + Lemma 1); DeepFish Example 1; planner ordering relations."""
+import numpy as np
+import pytest
+
+from repro.core import (Atom, MemoryCostModel, PerAtomCostModel,
+                        VertexBackend, deepfish, execute_plan, nooropt,
+                        normalize, optimal_bruteforce, optimal_plan,
+                        plan_cost, shallowfish)
+from test_shallowfish import example1, random_tree
+
+
+def test_dp_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    m = PerAtomCostModel()
+    for _ in range(10):
+        t = random_tree(rng, n_atoms=int(rng.integers(3, 7)),
+                        depth=int(rng.integers(2, 4)))
+        plan = optimal_plan(t, m)
+        _, best = optimal_bruteforce(t, m)
+        assert abs(plan.est_cost - best) < 1e-9
+
+
+def test_shallowfish_optimal_depth2():
+    """At depth <= 2 ShallowFish cost equals the exact optimum."""
+    rng = np.random.default_rng(1)
+    m = PerAtomCostModel()
+    for _ in range(20):
+        t = random_tree(rng, n_atoms=int(rng.integers(3, 9)), depth=2)
+        if t.depth > 2:
+            continue
+        sf = shallowfish(t, m)
+        opt = optimal_plan(t, m)
+        assert sf.est_cost <= opt.est_cost + 1e-9, \
+            f"ShallowFish {sf.est_cost} > optimal {opt.est_cost}"
+
+
+def test_deepfish_example1():
+    t = example1()
+    m = PerAtomCostModel()
+    plan = deepfish(t, m)
+    names = [t.atoms[i].name for i in plan.order]
+    assert names == ["B", "C", "A", "D"]
+    assert abs(plan.est_cost - 2.586) < 1e-3
+
+
+def test_deepfish_never_worse_than_shallowfish():
+    rng = np.random.default_rng(2)
+    m = PerAtomCostModel()
+    for _ in range(15):
+        t = random_tree(rng, n_atoms=int(rng.integers(4, 9)),
+                        depth=int(rng.integers(2, 5)))
+        assert deepfish(t, m).est_cost <= shallowfish(t, m).est_cost + 1e-9
+
+
+def test_planner_cost_ordering():
+    """optimal <= deepfish <= shallowfish <= nooropt (est, depth 2)."""
+    rng = np.random.default_rng(3)
+    m = PerAtomCostModel()
+    for _ in range(10):
+        t = random_tree(rng, n_atoms=6, depth=2)
+        if t.depth != 2:
+            continue
+        co = optimal_plan(t, m).est_cost
+        cd = deepfish(t, m).est_cost
+        cs = shallowfish(t, m).est_cost
+        cn = nooropt(t, m).est_cost
+        assert co <= cd + 1e-9 <= cs + 2e-9
+        assert cs <= cn + 1e-9
+
+
+def test_all_planners_correct_on_vertices():
+    rng = np.random.default_rng(4)
+    m = PerAtomCostModel()
+    for _ in range(8):
+        t = random_tree(rng, n_atoms=5, depth=3)
+        truth = frozenset(t.satisfying_vertices())
+        for planner in (shallowfish, deepfish, optimal_plan, nooropt):
+            plan = planner(t, m)
+            assert execute_plan(plan, VertexBackend(t)) == truth, planner

@@ -1,0 +1,80 @@
+"""Predicate IR: normalization, NNF, structural queries (paper §3)."""
+import numpy as np
+import pytest
+
+from repro.core import And, Atom, Not, Or, PredicateTree, normalize
+
+
+def atoms(*gammas):
+    return [Atom(f"c{i}", "lt", float(i), selectivity=g)
+            for i, g in enumerate(gammas)]
+
+
+def test_normalize_interleaves_and_or():
+    a, b, c, d = atoms(.1, .2, .3, .4)
+    t = normalize(a & (b & (c | d)))       # nested ANDs collapse
+    # root AND with children [a, b, OR(c, d)]
+    assert type(t.root).__name__ == "And"
+    kinds = [type(x).__name__ for x in t.root.children]
+    assert kinds.count("Or") == 1 and kinds.count("Atom") == 2
+    assert t.depth == 2
+
+
+def test_negation_pushdown_folds_atoms():
+    a, b = atoms(.3, .7)
+    t = normalize(~(a | b))                # De Morgan -> AND of negated atoms
+    assert type(t.root).__name__ == "And"
+    ops = sorted(x.op for x in t.atoms)
+    assert ops == ["ge", "ge"]
+    assert abs(t.atoms[0].selectivity - 0.7) < 1e-12
+
+
+def test_double_negation():
+    a, b = atoms(.3, .7)
+    t = normalize(~~(a | b))
+    assert type(t.root).__name__ == "Or"
+    assert [x.op for x in t.atoms] == ["lt", "lt"]
+
+
+def test_atom_ids_and_lineage():
+    a, b, c, d = atoms(.1, .2, .3, .4)
+    t = normalize(a & (b | (c & d)))
+    assert [x.aid for x in t.atoms] == [0, 1, 2, 3]
+    # lineage of d: root -> OR -> AND -> d
+    lin = t.lineage(3)
+    assert lin[0] is t.root and lin[-1] is t.atoms[3]
+    assert len(lin) == 4
+    assert t.atom_ids(t.root) == frozenset({0, 1, 2, 3})
+
+
+def test_evaluate_vertex_matches_semantics():
+    a, b, c, d = atoms(.1, .2, .3, .4)
+    t = normalize(a & (b | (c & d)))
+    assert t.evaluate_vertex((1, 1, 0, 0))
+    assert t.evaluate_vertex((1, 0, 1, 1))
+    assert not t.evaluate_vertex((0, 1, 1, 1))
+    assert not t.evaluate_vertex((1, 0, 1, 0))
+
+
+def test_determinability_definitions():
+    a, b, c, d = atoms(.1, .2, .3, .4)
+    t = normalize(a & (b | (c & d)))
+    orn = [ch for ch in t.root.children if type(ch).__name__ == "Or"][0]
+    # with only c applied, the inner AND is negatively determinable but not
+    # positively; OR is neither (b unapplied, AND not determ+)
+    applied = frozenset({2})
+    inner_and = [ch for ch in orn.children if type(ch).__name__ == "And"][0]
+    assert t.determ_neg(inner_and, applied)
+    assert not t.determ_pos(inner_and, applied)
+    assert not t.determ_pos(orn, applied)
+    assert not t.complete(orn, applied)
+    # with b and c applied the OR is negatively determinable (Example 1 §5.3)
+    applied = frozenset({1, 2})
+    assert t.determ_neg(orn, applied)
+    assert not t.complete(orn, applied)
+
+
+def test_single_atom_root_wrapped():
+    (a,) = atoms(.5)
+    t = normalize(a)
+    assert t.n == 1 and t.depth == 1

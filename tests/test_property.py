@@ -1,0 +1,95 @@
+"""Hypothesis property tests on the planner/executor invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (And, Atom, HddCostModel, MemoryCostModel, Or,
+                        PerAtomCostModel, BlockCostModel, VertexBackend,
+                        check_triangle, execute_plan, deepfish, nooropt,
+                        normalize, optimal_plan, plan_cost, shallowfish)
+
+# --- strategies -------------------------------------------------------------
+sels = st.floats(min_value=0.02, max_value=0.98)
+costs = st.floats(min_value=0.5, max_value=8.0)
+
+
+@st.composite
+def expr(draw, max_depth=3, max_atoms=7):
+    counter = draw(st.integers(0, 0))  # noqa - seed composite
+
+    idx = [0]
+
+    def build(depth):
+        if depth >= max_depth or idx[0] >= max_atoms - 1 or draw(st.booleans()):
+            i = idx[0]
+            idx[0] += 1
+            return Atom(f"c{i}", "lt", i, selectivity=draw(sels),
+                        cost_factor=draw(costs))
+        kind = And if draw(st.booleans()) else Or
+        k = draw(st.integers(2, 3))
+        return kind([build(depth + 1) for _ in range(k)])
+
+    root = build(1)
+    if isinstance(root, Atom):
+        other = Atom("z", "lt", 99, selectivity=draw(sels))
+        root = And([root, other])
+    return normalize(root)
+
+
+@given(expr())
+@settings(max_examples=60, deadline=None)
+def test_planners_produce_correct_vertex_sets(tree):
+    truth = frozenset(tree.satisfying_vertices())
+    m = PerAtomCostModel()
+    for planner in (shallowfish, deepfish, nooropt):
+        assert execute_plan(planner(tree, m), VertexBackend(tree)) == truth
+
+
+@given(expr())
+@settings(max_examples=40, deadline=None)
+def test_estimated_cost_equals_measured_weighted_cost(tree):
+    """plan_cost (analytic) == sum F_i * count(D_i) measured on vertex sets
+    under the product measure."""
+    m = PerAtomCostModel()
+    plan = shallowfish(tree, m)
+    be = VertexBackend(tree)
+    execute_plan(plan, be)
+    assert abs(plan.est_cost - be.stats.weighted_cost) < 1e-6
+
+
+@given(expr())
+@settings(max_examples=40, deadline=None)
+def test_deepfish_le_shallowfish(tree):
+    m = PerAtomCostModel()
+    assert deepfish(tree, m).est_cost <= shallowfish(tree, m).est_cost + 1e-9
+
+
+@given(expr(max_atoms=6), st.floats(0.01, 0.99), st.floats(0.01, 0.99))
+@settings(max_examples=30, deadline=None)
+def test_triangle_property_all_models(tree, f1, f2):
+    atom = tree.atoms[0]
+    models = [MemoryCostModel(kappa=0.1),
+              PerAtomCostModel(kappa=0.05),
+              HddCostModel(kappa=0.1, total_records=1.0, theta=0.3),
+              BlockCostModel(kappa=0.1, block=64, total_records=4096.0)]
+    for m in models:
+        assert check_triangle(m, atom, f1, f2), type(m).__name__
+
+
+@given(expr(max_atoms=5))
+@settings(max_examples=25, deadline=None)
+def test_optimal_is_lower_bound(tree):
+    m = PerAtomCostModel()
+    opt = optimal_plan(tree, m).est_cost
+    for planner in (shallowfish, deepfish, nooropt):
+        assert opt <= planner(tree, m).est_cost + 1e-9
+
+
+@given(expr(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_bestd_correct_for_random_orders(tree, seed):
+    """Thm 4: BestD + Update yields psi*(D) for ANY ordering."""
+    from repro.core import execute_bestd
+    rng = np.random.default_rng(seed)
+    order = list(rng.permutation(tree.n))
+    truth = frozenset(tree.satisfying_vertices())
+    assert execute_bestd(tree, order, VertexBackend(tree)) == truth

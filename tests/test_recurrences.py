@@ -1,0 +1,124 @@
+"""Chunked-scan vs step-recurrence equivalence for the SSM/RWKV blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import mamba2, rwkv6
+from repro.models.common import init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_ssd_chunked_equals_recurrence():
+    """ssd_chunked == token-by-token state recurrence (f32)."""
+    b, s, h, p, n = 2, 24, 3, 4, 5
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.1, 1.0, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+
+    y_chunk, h_fin = mamba2.ssd_chunked(x, dt, A, B, C, chunk=8)
+
+    # reference recurrence
+    hst = np.zeros((b, h, n, p), np.float32)
+    ys = []
+    for t in range(s):
+        decay = np.exp(np.asarray(dt[:, t]) * np.asarray(A))     # (b,h)
+        kv = np.einsum("bh,bn,bhp->bhnp", np.asarray(dt[:, t]),
+                       np.asarray(B[:, t]), np.asarray(x[:, t]))
+        hst = hst * decay[:, :, None, None] + kv
+        ys.append(np.einsum("bn,bhnp->bhp", np.asarray(C[:, t]), hst))
+    y_ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_ref, rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_fin), hst, rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_train_matches_decode_steps():
+    cfg = get_smoke("zamba2-1.2b")
+    p = init_params(mamba2.mamba_schema(cfg, 0), KEY)
+    b, s = 2, 12
+    u = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    y_train, _ = mamba2.mamba_train(cfg, p, u)
+    state = {
+        "conv": jnp.zeros((b, cfg.ssm_conv - 1, cfg.d_inner
+                           + 2 * cfg.ssm_state), jnp.bfloat16),
+        "ssm": jnp.zeros((b, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim),
+                         jnp.float32),
+    }
+    outs = []
+    for t in range(s):
+        y, state = mamba2.mamba_decode(cfg, p, u[:, t:t + 1], state)
+        outs.append(np.asarray(y[:, 0], np.float32))
+    y_dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_train, np.float32), y_dec,
+                               rtol=0.1, atol=0.05)
+
+
+def test_rwkv_block_matches_decode_steps():
+    cfg = get_smoke("rwkv6-1.6b")
+    p = init_params(rwkv6.rwkv_schema(cfg, 0), KEY)
+    b, s = 2, 10
+    d = cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, s, d),
+                          jnp.float32).astype(jnp.bfloat16)
+    h = cfg.n_heads
+    pd = d // h
+    state0 = {"s": jnp.zeros((b, h, pd, pd), jnp.float32),
+              "tm_prev": jnp.zeros((b, 1, d), jnp.bfloat16),
+              "cm_prev": jnp.zeros((b, 1, d), jnp.bfloat16)}
+    y_full, _ = rwkv6.rwkv_block(cfg, p, x, state0)
+    st = state0
+    outs = []
+    for t in range(s):
+        y, st = rwkv6.rwkv_block(cfg, p, x[:, t:t + 1], st)
+        outs.append(np.asarray(y[:, 0], np.float32))
+    y_dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full, np.float32), y_dec,
+                               rtol=0.1, atol=0.05)
+
+
+def test_blockwise_attention_matches_naive():
+    from repro.models.common import blockwise_attention
+    rng = np.random.default_rng(3)
+    b, sq, hq, hkv, dd, dv = 2, 33, 4, 2, 8, 6
+    q = jnp.asarray(rng.normal(size=(b, sq, hq, dd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sq, hkv, dd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sq, hkv, dv)), jnp.float32)
+    out = blockwise_attention(q, k, v, causal=True, block_q=8, block_kv=16)
+
+    # naive reference
+    g = hq // hkv
+    kk = np.repeat(np.asarray(k), g, axis=2)
+    vv = np.repeat(np.asarray(v), g, axis=2)
+    s = np.einsum("bqhd,bkhd->bhqk", np.asarray(q), kk) / np.sqrt(dd)
+    mask = np.tril(np.ones((sq, sq), bool))
+    s = np.where(mask[None, None], s, -1e30)
+    pr = np.exp(s - s.max(-1, keepdims=True))
+    pr = pr / pr.sum(-1, keepdims=True)
+    ref = np.einsum("bhqk,bkhd->bqhd", pr, vv)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_attention_window():
+    from repro.models.common import blockwise_attention
+    rng = np.random.default_rng(4)
+    b, sq, h, dd, w = 1, 40, 2, 4, 8
+    q = jnp.asarray(rng.normal(size=(b, sq, h, dd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sq, h, dd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sq, h, dd)), jnp.float32)
+    out = blockwise_attention(q, k, v, causal=True, window=w,
+                              block_q=16, block_kv=8)
+    s = np.einsum("bqhd,bkhd->bhqk", np.asarray(q), np.asarray(k)) / 2.0
+    qi, ki = np.arange(sq)[:, None], np.arange(sq)[None, :]
+    mask = (qi >= ki) & (qi - ki < w)
+    s = np.where(mask[None, None], s, -1e30)
+    pr = np.exp(s - s.max(-1, keepdims=True))
+    pr = pr / pr.sum(-1, keepdims=True)
+    ref = np.einsum("bhqk,bkhd->bqhd", pr, np.asarray(v))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,63 @@
+"""Serving: predicate request routing + batched generation consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import Atom
+from repro.models import api
+from repro.serve import RequestRouter, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_request_router_matches_direct_eval():
+    rng = np.random.default_rng(0)
+    n = 4096
+    reqs = {
+        "tier": rng.choice(3, n).astype(np.int32),          # 2 = pro
+        "prompt_tokens": rng.integers(1, 8192, n).astype(np.int32),
+        "flagged": rng.choice(2, n, p=[.95, .05]).astype(np.int32),
+    }
+    expr = ((Atom("tier", "eq", 2) | Atom("prompt_tokens", "lt", 2048))
+            & Atom("flagged", "eq", 0))
+    admit = RequestRouter(expr).admit(reqs)
+    want = ((reqs["tier"] == 2) | (reqs["prompt_tokens"] < 2048)) \
+        & (reqs["flagged"] == 0)
+    np.testing.assert_array_equal(admit, want)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "rwkv6-1.6b",
+                                  "qwen3-moe-30b-a3b"])
+def test_engine_greedy_matches_manual_decode(arch):
+    cfg = get_smoke(arch)
+    params = api.init(cfg, KEY)
+    b, plen, gen = 2, 12, 5
+    prompts = np.asarray(jax.random.randint(KEY, (b, plen), 0, cfg.vocab))
+    eng = ServeEngine(cfg, params, batch_size=b, max_seq=cfg.max_seq)
+    out = eng.generate(prompts, n_steps=gen)
+    assert out.shape == (b, gen)
+    assert (out >= 0).all() and (out < cfg.vocab).all()
+
+    # manual: decode every prompt token sequentially, then greedy continue
+    cache = api.init_cache(cfg, b, cfg.max_seq)
+    logits = None
+    for i in range(plen):
+        logits, cache = api.decode(cfg, params,
+                                   jnp.asarray(prompts[:, i:i + 1]), cache,
+                                   jnp.int32(i))
+    tok = np.asarray(jnp.argmax(logits[:, -1], -1)).reshape(b, 1)
+    manual = [tok.copy()]
+    idx = plen
+    for _ in range(gen - 1):
+        logits, cache = api.decode(cfg, params, jnp.asarray(tok), cache,
+                                   jnp.int32(idx))
+        tok = np.asarray(jnp.argmax(logits[:, -1], -1)).reshape(b, 1)
+        manual.append(tok.copy())
+        idx += 1
+    manual = np.concatenate(manual, axis=1)
+    # the first generated token comes from prefill vs sequential decode —
+    # allow occasional argmax flips from bf16 differences
+    agree = (out == manual).mean()
+    assert agree >= 0.8, (out, manual)

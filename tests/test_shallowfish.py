@@ -1,0 +1,123 @@
+"""ShallowFish: correctness (Thm 4), exactly-once atoms (Thm 3),
+Algorithm 4 == BestD machine equivalence, Example 1 reproduction."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (Atom, BestDMachine, MemoryCostModel, PerAtomCostModel,
+                        VertexBackend, execute_bestd, normalize, orderp,
+                        plan_cost, shallowfish, shallowfish_execute)
+
+
+def example1():
+    A = Atom("a", "lt", 1, selectivity=0.820, name="A")
+    B = Atom("b", "lt", 1, selectivity=0.313, name="B")
+    C = Atom("c", "lt", 1, selectivity=0.469, name="C")
+    D = Atom("d", "lt", 1, selectivity=0.984, name="D")
+    return normalize(A & (B | (C & D)))
+
+
+def random_tree(rng, n_atoms=6, depth=3):
+    """Small random normalized tree over abstract atoms."""
+    from repro.core import And, Or
+
+    def build(level, quota, kind):
+        if quota == 1 or level >= depth:
+            g = float(rng.uniform(0.05, 0.95))
+            i = next(counter)
+            return Atom(f"x{i}", "lt", i, selectivity=g,
+                        cost_factor=float(rng.uniform(1, 4)))
+        k = int(rng.integers(2, min(4, quota) + 1))
+        parts = np.diff(np.concatenate([[0], np.sort(rng.choice(
+            np.arange(1, quota), size=k - 1, replace=False)), [quota]]))
+        sub = Or if kind is And else And
+        return kind([build(level + 1, int(p), sub) for p in parts])
+
+    counter = iter(range(100))
+    from repro.core import And as A_, Or as O_
+    root = build(1, n_atoms, A_ if rng.random() < .5 else O_)
+    return normalize(root)
+
+
+def test_example1_costs():
+    t = example1()
+    ids = {a.name: a.aid for a in t.atoms}
+    m = PerAtomCostModel()
+    assert abs(plan_cost(t, [ids[x] for x in "CDBA"], m) - 2.638) < 1e-3
+    assert abs(plan_cost(t, [ids[x] for x in "BCAD"], m) - 2.586) < 1e-3
+
+
+def test_example1_shallowfish_order():
+    t = example1()
+    plan = shallowfish(t, PerAtomCostModel())
+    names = [t.atoms[i].name for i in plan.order]
+    assert names == ["C", "D", "B", "A"]
+    assert abs(plan.est_cost - 2.638) < 1e-3
+
+
+def test_correctness_thm4():
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        t = random_tree(rng, n_atoms=int(rng.integers(3, 8)),
+                        depth=int(rng.integers(2, 4)))
+        be = VertexBackend(t)
+        res = execute_bestd(t, orderp(t), be)
+        assert res == frozenset(t.satisfying_vertices())
+
+
+def test_correctness_any_order():
+    """BestD yields psi*(D) for ANY atom ordering (Thm 4/5 hold per order)."""
+    rng = np.random.default_rng(1)
+    t = random_tree(rng, n_atoms=5, depth=3)
+    truth = frozenset(t.satisfying_vertices())
+    for perm in itertools.permutations(range(t.n)):
+        be = VertexBackend(t)
+        assert execute_bestd(t, list(perm), be) == truth
+
+
+def test_each_atom_exactly_once_thm3():
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        t = random_tree(rng, n_atoms=6, depth=3)
+        be = VertexBackend(t)
+        machine = BestDMachine(t, be)
+        machine.run(orderp(t))
+        assert be.stats.atom_applications == t.n
+        assert sorted(machine.order) == list(range(t.n))
+
+
+def test_alg4_equals_bestd_machine():
+    """Optimized ShallowFish (Alg 4) applies atoms to the same record sets
+    as the BestD machine for OrderP's depth-first orders."""
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        t = random_tree(rng, n_atoms=int(rng.integers(3, 8)),
+                        depth=int(rng.integers(2, 4)))
+        order = orderp(t)
+        be1 = VertexBackend(t)
+        r1 = execute_bestd(t, order, be1)
+        be2 = VertexBackend(t)
+        r2 = shallowfish_execute(t, be2, order)
+        assert r1 == r2
+        assert abs(be1.stats.records_evaluated
+                   - be2.stats.records_evaluated) < 1e-9
+        assert be1.stats.atom_applications == be2.stats.atom_applications
+
+
+def test_estimator_matches_vertex_measure():
+    """The analytic estimator's step fractions equal the vertex-set measure
+    of BestD's D_i under the product distribution."""
+    from repro.core import step_fractions
+    rng = np.random.default_rng(4)
+    for _ in range(10):
+        t = random_tree(rng, n_atoms=5, depth=3)
+        order = orderp(t)
+        be = VertexBackend(t)
+        machine = BestDMachine(t, be)
+        actual = []
+        for aid in order:
+            d_i, _ = machine.apply_step(aid)
+            actual.append(be.count(d_i))
+        est = step_fractions(t, order)
+        np.testing.assert_allclose(actual, est, rtol=1e-9, atol=1e-12)

@@ -1,0 +1,67 @@
+"""SQL front-end: parse -> normalize -> plan -> execute correctness."""
+import numpy as np
+import pytest
+
+from repro.columnar import BitmapBackend, unpack_bits
+from repro.columnar.sql import parse_select
+from repro.columnar.table import Table, annotate_selectivities
+from repro.core import PerAtomCostModel, execute_plan, normalize, shallowfish
+
+
+@pytest.fixture(scope="module")
+def table():
+    rng = np.random.default_rng(0)
+    n = 10_000
+    return Table({
+        "a": rng.normal(size=n).astype(np.float32),
+        "b": rng.normal(size=n).astype(np.float32),
+        "c": rng.choice(5, n).astype(np.int32),
+    })
+
+
+def test_parse_projection_and_where():
+    cols, tab, expr = parse_select(
+        "SELECT a, b FROM t WHERE a < 1 AND (b > 0 OR c = 2)")
+    assert cols == ["a", "b"] and tab == "t"
+    tree = normalize(expr)
+    assert tree.n == 3
+    assert tree.depth >= 2
+
+
+def test_parse_not_and_precedence():
+    _, _, expr = parse_select(
+        "SELECT a FROM t WHERE NOT a < 0 AND b <= 1 OR c != 3")
+    tree = normalize(expr)
+    # NOT folded into atom; OR at root (AND binds tighter)
+    assert type(tree.root).__name__ == "Or"
+    ops = sorted(a.op for a in tree.atoms)
+    assert "ge" in ops and "ne" in ops
+
+
+def test_parse_in_list():
+    _, _, expr = parse_select("SELECT a FROM t WHERE c IN (1, 2, 4)")
+    tree = normalize(expr)
+    assert tree.atoms[0].op == "in"
+    assert tree.atoms[0].value == (1, 2, 4)
+
+
+def test_sql_end_to_end_matches_numpy(table):
+    sql = ("SELECT a FROM t WHERE (a < 0.5 AND b > -0.5) "
+           "OR (c = 1 AND NOT b > 1.0)")
+    _, _, expr = parse_select(sql)
+    tree = normalize(expr)
+    annotate_selectivities(tree, table)
+    plan = shallowfish(tree, PerAtomCostModel(),
+                       total_records=table.n_records)
+    be = BitmapBackend(table)
+    got = unpack_bits(execute_plan(plan, be), table.n_records)
+    a, b, c = table["a"], table["b"], table["c"]
+    want = ((a < 0.5) & (b > -0.5)) | ((c == 1) & ~(b > 1.0))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_parse_errors():
+    with pytest.raises(ValueError):
+        parse_select("SELECT FROM t")
+    with pytest.raises(ValueError):
+        parse_select("SELECT a FROM t WHERE a <")

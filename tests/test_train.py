@@ -1,0 +1,161 @@
+"""Training substrate: optimizers converge, microbatch equivalence,
+checkpoint bit-exactness, gradient compression properties."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import api
+from repro.train import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, compress,
+                         make_train_step)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_cfg(**kw):
+    return get_smoke("granite-3-8b").replace(**kw)
+
+
+def make_batch(cfg, b=4, s=32, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"tokens": jax.random.randint(k, (b, s + 1), 0, cfg.vocab)}
+
+
+def test_adamw_reduces_loss():
+    cfg = tiny_cfg(microbatch=1)
+    params = api.init(cfg, KEY)
+    step = make_train_step(cfg, lr=5e-3)
+    state = step.init_state(params)
+    batch = make_batch(cfg)
+    losses = []
+    for _ in range(8):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_adafactor_reduces_loss():
+    cfg = tiny_cfg(microbatch=1, optimizer="adafactor")
+    params = api.init(cfg, KEY)
+    step = make_train_step(cfg, lr=1e-2)
+    state = step.init_state(params)
+    batch = make_batch(cfg)
+    losses = []
+    for _ in range(8):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_microbatch_equivalent_to_full_batch():
+    cfg1 = tiny_cfg(microbatch=1)
+    cfg2 = tiny_cfg(microbatch=2)
+    params = api.init(cfg1, KEY)
+    batch = make_batch(cfg1, b=4)
+    s1 = make_train_step(cfg1, lr=1e-3)
+    s2 = make_train_step(cfg2, lr=1e-3)
+    p1, _, m1 = s1(params, s1.init_state(params), batch)
+    p2, _, m2 = s2(params, s2.init_state(params), batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-3
+    d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-2, d      # same update up to bf16 accumulation noise
+
+
+def test_grad_clip():
+    tree = {"a": jnp.ones((4,)) * 100.0, "b": jnp.ones((2,)) * 50.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    cn = float(jnp.sqrt(sum(jnp.sum(x ** 2)
+                            for x in jax.tree.leaves(clipped))))
+    assert abs(cn - 1.0) < 1e-5
+    assert float(norm) > 100
+
+
+def test_adafactor_memory_is_factored():
+    cfg = tiny_cfg(optimizer="adafactor")
+    params = api.init(cfg, KEY)
+    st = adafactor_init(params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    n_state = sum(x.size for x in jax.tree.leaves(st["f"]))
+    assert n_state < 0.25 * n_params   # factored second moment is tiny
+
+
+# --- gradient compression ---------------------------------------------------
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    q, scale = compress.quantize_int8(x)
+    err = np.abs(np.asarray(compress.dequantize_int8(q, scale)) -
+                 np.asarray(x)).max()
+    assert err <= float(scale) / 2 + 1e-7
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """With error feedback the accumulated compressed sum converges to the
+    true sum (EF-SGD property)."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(128,)).astype(np.float32)) * 1e-3
+    grads = {"w": g}
+    resid = compress.init_residuals(grads)
+    total = np.zeros(128, np.float32)
+    for _ in range(50):
+        deq, resid = compress.compress_tree_with_feedback(grads, resid)
+        total += np.asarray(deq["w"], np.float32)
+    true = np.asarray(g) * 50
+    rel = np.abs(total - true).max() / (np.abs(true).max() + 1e-12)
+    assert rel < 0.05, rel
+
+
+def test_train_step_with_compression_runs():
+    cfg = tiny_cfg(microbatch=1)
+    params = api.init(cfg, KEY)
+    step = make_train_step(cfg, lr=1e-3, grad_compression="int8")
+    state = step.init_state(params)
+    assert "ef_residual" in state
+    batch = make_batch(cfg)
+    losses = []
+    for _ in range(6):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+# --- checkpointing ----------------------------------------------------------
+def test_checkpoint_roundtrip_bit_exact(tmp_path):
+    from repro.ckpt import save_pytree, load_pytree
+    cfg = tiny_cfg()
+    params = api.init(cfg, KEY)
+    save_pytree({"params": params, "x": jnp.arange(7)}, str(tmp_path), 3)
+    tree, manifest = load_pytree(str(tmp_path))
+    assert manifest["step"] == 3
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(tree["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_and_gc(tmp_path):
+    from repro.ckpt import CheckpointManager, latest_step
+    mgr = CheckpointManager(str(tmp_path), keep=2, use_async=False)
+    for s in (1, 2, 3, 4):
+        mgr.save({"v": jnp.full((3,), s)}, s)
+    assert latest_step(str(tmp_path)) == 4
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]               # keep=2 gc'd older
+    tree, _ = mgr.restore()
+    assert float(tree["v"][0]) == 4
+
+
+def test_async_checkpointer(tmp_path):
+    from repro.ckpt import AsyncCheckpointer, load_pytree
+    ck = AsyncCheckpointer()
+    ck.save({"a": jnp.ones((5,))}, str(tmp_path), 10)
+    ck.wait()
+    tree, manifest = load_pytree(str(tmp_path), 10)
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.ones(5))
+    ck.close()
