@@ -1,0 +1,13 @@
+# One-command entry points for the tier-1 verify and a quick benchmark smoke.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) benchmarks/bench_multiquery.py --queries 48 --templates 6 \
+		--rows 20000 --repeats 1

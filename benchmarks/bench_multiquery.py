@@ -1,0 +1,96 @@
+"""Multi-query batch benchmark: QuerySession vs N independent run_query.
+
+Workload is serving-shaped: a batch of Q queries drawn from a small pool of
+templates (repeated plan shapes, overlapping atoms) plus a fraction of
+fresh random queries, evaluated against the forest table.  Reports the
+plan-cache hit rate, the atom-dedupe ratio (logical / physical column
+touches) and wall-clock against Q independent ``run_query`` calls, and
+asserts the batched bitmaps are bit-identical to the per-query ones.
+
+    PYTHONPATH=src python benchmarks/bench_multiquery.py \
+        --queries 64 --templates 8 --engine numpy
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.columnar import (QuerySession, LRUPlanCache, make_forest_table,
+                            random_tree, run_query)
+
+
+def make_workload(table, n_queries: int, n_templates: int, n_atoms: int,
+                  depth: int, fresh_frac: float, seed: int):
+    rng = np.random.default_rng(seed)
+    pool = [random_tree(table, n_atoms, depth, rng) for _ in range(n_templates)]
+    out = []
+    for _ in range(n_queries):
+        if rng.random() < fresh_frac:
+            out.append(random_tree(table, n_atoms, depth, rng))
+        else:
+            out.append(pool[rng.integers(n_templates)])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=50_000)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--templates", type=int, default=8)
+    ap.add_argument("--n-atoms", type=int, default=6)
+    ap.add_argument("--depth", type=int, default=3)
+    ap.add_argument("--fresh-frac", type=float, default=0.25)
+    ap.add_argument("--planner", default="deepfish")
+    ap.add_argument("--engine", default="numpy",
+                    choices=["numpy", "jax", "pallas"])
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="batches per run (plan cache persists across them)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    table = make_forest_table(args.rows, n_dup=2, seed=7)
+    queries = make_workload(table, args.queries, args.templates, args.n_atoms,
+                            args.depth, args.fresh_frac, args.seed)
+
+    # -- baseline: Q independent plan+execute calls ---------------------------
+    t0 = time.perf_counter()
+    base = [run_query(t, table, planner=args.planner, engine=args.engine)[0]
+            for t in queries]
+    base_s = time.perf_counter() - t0
+
+    # -- batched session (plan cache warm across repeats) ---------------------
+    session = QuerySession(table, planner=args.planner, engine=args.engine,
+                           plan_cache=LRUPlanCache())
+    best_s, res = float("inf"), None
+    for _ in range(args.repeats):
+        r = session.execute(queries)
+        if r.wall_s < best_s:
+            best_s, res = r.wall_s, r
+
+    bad = sum(not np.array_equal(a, b) for a, b in zip(base, res.bitmaps))
+    st = res.stats
+    print(f"table rows            : {table.n_records}")
+    print(f"batch                 : {args.queries} queries "
+          f"({args.templates} templates, {args.fresh_frac:.0%} fresh), "
+          f"planner={args.planner}, engine={args.engine}")
+    print(f"bit-identical results : {args.queries - bad}/{args.queries}"
+          + ("" if bad == 0 else "  <-- MISMATCH"))
+    print(f"plan-cache hit rate   : {st.plan_hit_rate:.1%} "
+          f"({st.plan_cache_hits} hits / {st.plan_cache_misses} misses)")
+    print(f"atom-dedupe ratio     : {st.dedupe_ratio:.2f}x "
+          f"({st.physical_atoms} column touches for {st.logical_atoms} "
+          f"logical applications; {st.shared_atom_keys} shared / "
+          f"{st.unique_atom_keys} unique atoms)")
+    print(f"kernel batches        : {st.kernel_batches} "
+          f"(lockstep rounds: {st.lockstep_rounds})")
+    print(f"wall-clock            : batch {best_s * 1e3:.1f} ms vs "
+          f"independent {base_s * 1e3:.1f} ms "
+          f"({base_s / best_s:.2f}x)")
+    if bad:
+        raise SystemExit("FAIL: batched results diverged from run_query")
+
+
+if __name__ == "__main__":
+    main()

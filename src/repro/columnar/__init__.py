@@ -1,12 +1,38 @@
 """Column-store substrate: packed bitmaps, columnar tables, synthetic data,
 selectivity stats, and plan executors (numpy oracle / JAX block engine /
-Pallas kernel engine)."""
+Pallas kernel engine).
+
+Single-query path: ``normalize -> annotate_selectivities -> planner ->
+execute_plan`` over a :class:`BitmapBackend` / :class:`JaxBlockBackend`
+(``run_query`` bundles it).
+
+Multi-query path (``multiquery``): a :class:`QuerySession` executes a whole
+batch of predicate trees against one table, sharing work across queries on
+two axes:
+
+* **plan cache** — an :class:`LRUPlanCache` keyed by
+  ``core.predicate.canonical_key``: canonical tree shape + per-atom
+  (selectivity, cost) quantized to buckets.  Key-equal queries reuse the
+  cached atom ordering (remapped through the canonical atom permutation);
+  statistics drifting past a bucket edge change the key, so stale plans
+  miss and replan naturally.
+* **atom dedupe** — atoms appearing in >= 2 queries of a batch (by
+  ``(column, op, value)`` key) are evaluated on the full table once; later
+  applications are set-ANDs.  The lockstep batched mode additionally stacks
+  per-query live-block bitmaps for one atom into a single fused kernel
+  invocation (``kernels.ops.predicate_blocks_multi``).
+
+Shared results are bit-identical to per-query execution on every engine —
+``tests/test_differential.py`` and ``tests/test_multiquery.py`` enforce it.
+"""
 from .bitmap import (pack_bits, unpack_bits, popcount, bitmap_and, bitmap_or,
                      bitmap_andnot, bitmap_full, bitmap_empty, WORD)
 from .table import Table, annotate_selectivities, empirical_selectivity
 from .forest import make_forest_table
 from .executor import BitmapBackend, JaxBlockBackend, run_query
 from .queries import random_tree, random_query_suite
+from .multiquery import (QuerySession, LRUPlanCache, BatchResult, BatchStats,
+                         PlanCacheStats)
 
 __all__ = [
     "pack_bits", "unpack_bits", "popcount", "bitmap_and", "bitmap_or",
@@ -15,4 +41,6 @@ __all__ = [
     "make_forest_table",
     "BitmapBackend", "JaxBlockBackend", "run_query",
     "random_tree", "random_query_suite",
+    "QuerySession", "LRUPlanCache", "BatchResult", "BatchStats",
+    "PlanCacheStats",
 ]

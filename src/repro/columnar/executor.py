@@ -74,11 +74,9 @@ class BitmapBackend(SetBackend):
     def count(self, d) -> float:
         return float(popcount(d))
 
-    def apply_atom(self, atom: Atom, d):
-        cnt = popcount(d)
-        self.stats.atom_applications += 1
-        self.stats.records_evaluated += cnt
-        self.stats.weighted_cost += atom.cost_factor * cnt
+    def _eval_packed(self, atom: Atom, d, cnt: int):
+        """Evaluate ``atom`` on the records of packed set ``d`` (one column
+        touch, gather or threshold-crossed full scan); returns packed D ∧ P."""
         if (self.scan_threshold is not None
                 and cnt > self.scan_threshold * self.n):
             self.records_touched += self.n
@@ -91,6 +89,28 @@ class BitmapBackend(SetBackend):
         out = np.zeros(self.n, dtype=bool)
         out[idx[hits]] = True
         return pack_bits(out)
+
+    def apply_atom(self, atom: Atom, d):
+        cnt = popcount(d)
+        self.stats.atom_applications += 1
+        self.stats.records_evaluated += cnt
+        self.stats.weighted_cost += atom.cost_factor * cnt
+        return self._eval_packed(atom, d, cnt)
+
+    def apply_atom_multi(self, atom: Atom, ds):
+        """Batched apply: evaluate ``atom`` once on the *union* of the record
+        sets, then mask per set — one column touch for the whole group."""
+        if len(ds) == 1:
+            return [self.apply_atom(atom, ds[0])]
+        union = ds[0]
+        for d in ds[1:]:
+            union = bitmap_or(union, d)
+        cnt = popcount(union)
+        self.stats.atom_applications += 1
+        self.stats.records_evaluated += cnt
+        self.stats.weighted_cost += atom.cost_factor * cnt
+        sat = self._eval_packed(atom, union, cnt)
+        return [bitmap_and(sat, d) for d in ds]
 
 
 class JaxBlockBackend(SetBackend):
@@ -149,46 +169,87 @@ class JaxBlockBackend(SetBackend):
             self._jcols[name] = col
         return col
 
+    def _eval_blocked(self, atom: Atom, ds, union):
+        """One column touch: evaluate ``atom`` on the blocks live in
+        ``union`` against each packed set in ``ds`` (ds[j] ⊆ union)."""
+        opcode = _OPCODE.get(atom.op)
+        col = self._blocked_column(atom.column) if opcode is not None else None
+        if col is None:
+            # LIKE/UDF/categorical-string fallback: gather only the union's
+            # records on the host (cost ∝ count(union), the oracle path)
+            mask = unpack_bits(union, self.n)
+            idx = np.nonzero(mask)[0]
+            hits = self.table.eval_atom(atom, idx)
+            out = np.zeros(self.n, dtype=bool)
+            out[idx[hits]] = True
+            sat = pack_bits(out)
+            return [bitmap_and(sat, d) for d in ds]
+
+        q = len(ds)
+        wpb = self.block // WORD
+        words = np.zeros((q, self.nblocks * wpb), dtype=np.uint32)
+        for j, d in enumerate(ds):
+            words[j, : n_words(self.n)] = d
+        words3d = words.reshape(q, self.nblocks, wpb)
+        uw = np.zeros(self.nblocks * wpb, dtype=np.uint32)
+        uw[: n_words(self.n)] = union
+        upops = np.unpackbits(uw.reshape(self.nblocks, wpb).view(np.uint8)
+                              .reshape(self.nblocks, -1),
+                              axis=1, bitorder="little").sum(axis=1)
+        live = np.nonzero(upops > 0)[0]
+        self.blocks_touched += len(live)
+        out3d = np.zeros_like(words3d)
+        if len(live):
+            import jax.numpy as jnp
+            col_live = col[live]
+            value = float(atom.value)
+            if q == 1:
+                bits_live = jnp.asarray(words3d[0, live, :])
+                if self.engine == "pallas":
+                    from ..kernels import ops as kops
+                    res = kops.predicate_blocks(col_live, bits_live, value,
+                                                opcode, interpret=True)
+                else:
+                    from ..kernels import ref as kref
+                    res = kref.predicate_blocks_ref(col_live, bits_live,
+                                                    value, opcode)
+                out3d[0, live, :] = np.asarray(res)
+            else:
+                bits_live = jnp.asarray(words3d[:, live, :])
+                if self.engine == "pallas":
+                    from ..kernels import ops as kops
+                    res = kops.predicate_blocks_multi(col_live, bits_live,
+                                                      value, opcode,
+                                                      interpret=True)
+                else:
+                    from ..kernels import ref as kref
+                    res = kref.predicate_blocks_multi_ref(col_live, bits_live,
+                                                          value, opcode)
+                out3d[:, live, :] = np.asarray(res)
+        return [out3d[j].reshape(-1)[: n_words(self.n)].copy()
+                for j in range(q)]
+
     def apply_atom(self, atom: Atom, d):
         self.stats.atom_applications += 1
         cnt = popcount(d)
         self.stats.records_evaluated += cnt
         self.stats.weighted_cost += atom.cost_factor * cnt
+        return self._eval_blocked(atom, [d], d)[0]
 
-        opcode = _OPCODE.get(atom.op)
-        col = self._blocked_column(atom.column) if opcode is not None else None
-        if col is None:
-            # LIKE/UDF/categorical-string fallback: oracle path
-            mask = unpack_bits(d, self.n)
-            idx = np.nonzero(mask)[0]
-            hits = self.table.eval_atom(atom, idx)
-            out = np.zeros(self.n, dtype=bool)
-            out[idx[hits]] = True
-            return pack_bits(out)
-
-        wpb = self.block // WORD
-        words = np.zeros(self.nblocks * wpb, dtype=np.uint32)
-        words[: n_words(self.n)] = d
-        words2d = words.reshape(self.nblocks, wpb)
-        pops = np.unpackbits(words2d.view(np.uint8).reshape(self.nblocks, -1),
-                             axis=1, bitorder="little").sum(axis=1)
-        live = np.nonzero(pops > 0)[0]
-        self.blocks_touched += len(live)
-        out2d = np.zeros_like(words2d)
-        if len(live):
-            import jax.numpy as jnp
-            col_live = col[live]
-            bits_live = jnp.asarray(words2d[live])
-            value = float(atom.value)
-            if self.engine == "pallas":
-                from ..kernels import ops as kops
-                res = kops.predicate_blocks(col_live, bits_live, value, opcode,
-                                            interpret=True)
-            else:
-                from ..kernels import ref as kref
-                res = kref.predicate_blocks_ref(col_live, bits_live, value, opcode)
-            out2d[live] = np.asarray(res)
-        return out2d.reshape(-1)[: n_words(self.n)].copy()
+    def apply_atom_multi(self, atom: Atom, ds):
+        """Batched apply: Q record sets against one atom in one fused kernel
+        invocation (``predicate_blocks_multi``) — the column blocks live in
+        any of the sets are loaded once for the whole group."""
+        if len(ds) == 1:
+            return [self.apply_atom(atom, ds[0])]
+        union = ds[0]
+        for d in ds[1:]:
+            union = bitmap_or(union, d)
+        cnt = popcount(union)
+        self.stats.atom_applications += 1
+        self.stats.records_evaluated += cnt
+        self.stats.weighted_cost += atom.cost_factor * cnt
+        return self._eval_blocked(atom, ds, union)
 
 
 def run_query(tree: PredicateTree, table: Table, planner: str = "shallowfish",

@@ -1,0 +1,387 @@
+"""Multi-query batch execution: plan cache + cross-query atom sharing.
+
+A serving system sees many concurrent queries against the *same* table,
+where the dominant redundancy is cross-query: repeated plan shapes and
+repeated ``(column, op, value)`` atoms.  :class:`QuerySession` exploits
+both for a batch of predicate trees:
+
+plan cache       an LRU keyed by :func:`~repro.core.predicate.canonical_key`
+                 (tree shape + quantized per-atom selectivity/cost buckets).
+                 Plans are stored as *canonical positions* and remapped onto
+                 any key-equal tree, so structurally identical queries over
+                 drifting-but-in-bucket statistics replan for free.  A drift
+                 past the bucket edge changes the key and misses naturally.
+
+atom dedupe      atoms whose :func:`~repro.core.predicate.atom_key` appears
+                 in >= ``share_threshold`` queries of the batch are
+                 evaluated on the full table exactly once; every further
+                 application (any query, any plan position) reduces to a
+                 set-AND against the cached bitmap — each unique shared atom
+                 touches its column once per batch.
+
+lockstep batching
+                 with ``batched=True`` (default for the block engines) the
+                 ordering-based plans are driven round-by-round through
+                 :class:`~repro.core.bestd.BestDMachine` (correct for any
+                 ordering, Thm 4); requests for the same atom arriving in
+                 the same round stack their per-query live-block bitmaps
+                 into ONE fused kernel invocation
+                 (:func:`repro.kernels.ops.predicate_blocks_multi`).
+
+Correctness is engine-independent: an atom's record set does not depend on
+the set it is applied to (``apply_atom(a, d) == apply_atom(a, full) & d``),
+so shared results are bit-identical to per-query evaluation — the
+differential tests sweep this against independent ``run_query`` calls.
+"""
+from __future__ import annotations
+
+import time
+from collections import Counter, OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core import deepfish, nooropt, optimal_plan, shallowfish
+from ..core.bestd import BestDMachine
+from ..core.cost import CostModel, PerAtomCostModel
+from ..core.plan import Plan, execute_plan, finalize_plan
+from ..core.predicate import (Node, PredicateTree, atom_key, canonical_key,
+                              normalize, tree_copy)
+from ..core.sets import SetBackend
+from .executor import BitmapBackend, JaxBlockBackend
+from .table import Table, annotate_selectivities
+
+_PLANNERS = {"shallowfish": shallowfish, "deepfish": deepfish,
+             "optimal": optimal_plan, "nooropt": nooropt}
+# planners whose Plan.order fully determines execution (BestD-compatible);
+# only these are cacheable/lockstep-able — nooropt re-derives its own walk.
+_ORDERED = ("shallowfish", "deepfish", "optimal")
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class LRUPlanCache:
+    """LRU plan cache keyed by canonical tree shape + quantized statistics.
+
+    ``sel_step`` / ``cost_step`` are the quantization buckets fed to
+    :func:`canonical_key`; ``capacity`` bounds the entry count (least
+    recently used evicted first).  One cache may serve many tables/batches:
+    the key contains everything the planners consume.
+    """
+
+    def __init__(self, capacity: int = 256, sel_step: float = 0.05,
+                 cost_step: float = 0.5):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.sel_step = sel_step
+        self.cost_step = cost_step
+        self._entries: "OrderedDict[tuple, List[int]]" = OrderedDict()
+        self.stats = PlanCacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get_or_plan(self, tree: PredicateTree, planner: str,
+                    model: Optional[CostModel] = None,
+                    total_records: float = 1.0) -> Plan:
+        """Serve a plan for ``tree`` from cache, planning on a miss."""
+        model = model or PerAtomCostModel()
+        if planner not in _ORDERED:
+            return _PLANNERS[planner](tree, model, total_records=total_records)
+        t0 = time.perf_counter()
+        key, atom_order = canonical_key(tree, self.sel_step, self.cost_step)
+        # repr of the (frozen dataclass) model pins its type + parameters:
+        # plans found under one cost model must not serve another
+        full_key = (planner, tree.n, repr(model), key)
+        cpos = self._entries.get(full_key)
+        if cpos is not None:
+            self._entries.move_to_end(full_key)
+            self.stats.hits += 1
+            order = [atom_order[p] for p in cpos]
+            return finalize_plan(tree, order, planner, model, t0,
+                                 total_records)
+        self.stats.misses += 1
+        plan = _PLANNERS[planner](tree, model, total_records=total_records)
+        inv = {aid: p for p, aid in enumerate(atom_order)}
+        self._entries[full_key] = [inv[aid] for aid in plan.order]
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        return plan
+
+
+# ---------------------------------------------------------------------------
+# Batch bookkeeping
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BatchStats:
+    """Per-batch accounting for the two sharing dimensions."""
+
+    n_queries: int = 0
+    logical_atoms: int = 0       # atom applications the executors requested
+    physical_atoms: int = 0      # column touches actually performed
+    atom_cache_hits: int = 0     # applications served as a pure set-AND
+    unique_atom_keys: int = 0
+    shared_atom_keys: int = 0    # keys appearing in >= share_threshold queries
+    kernel_batches: int = 0      # grouped multi-bitmap kernel invocations
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    lockstep_rounds: int = 0
+
+    @property
+    def dedupe_ratio(self) -> float:
+        """Logical / physical atom applications (> 1 means sharing paid)."""
+        return (self.logical_atoms / self.physical_atoms
+                if self.physical_atoms else 0.0)
+
+    @property
+    def plan_hit_rate(self) -> float:
+        total = self.plan_cache_hits + self.plan_cache_misses
+        return self.plan_cache_hits / total if total else 0.0
+
+
+@dataclass
+class BatchResult:
+    """Output of :meth:`QuerySession.execute`."""
+
+    bitmaps: List[np.ndarray]
+    plans: List[Plan]
+    stats: BatchStats
+    backend: Optional[SetBackend] = None
+    wall_s: float = 0.0
+
+    def masks(self, n_records: int) -> np.ndarray:
+        """Unpack to a (n_queries, n_records) boolean matrix."""
+        from .bitmap import unpack_bits
+        return np.stack([unpack_bits(b, n_records) for b in self.bitmaps])
+
+
+class _SharedAtomBackend(SetBackend):
+    """Wraps an engine backend with a batch-scoped atom-result cache.
+
+    Atoms whose key is in ``shared_keys`` are evaluated once on the full
+    table; every application then reduces to a set-AND against the cached
+    bitmap.  Exclusive atoms pass straight through to the engine's
+    count(D) path.  Set algebra delegates to the engine unchanged, so the
+    wrapper plugs into every existing executor.
+    """
+
+    def __init__(self, inner: SetBackend, shared_keys: set,
+                 bstats: BatchStats):
+        self.inner = inner
+        self.shared_keys = shared_keys
+        self.bstats = bstats
+        self.cache: Dict[tuple, object] = {}
+        self.stats = inner.stats      # executors introspect .stats
+
+    def full(self):
+        return self.inner.full()
+
+    def empty(self):
+        return self.inner.empty()
+
+    def inter(self, a, b):
+        return self.inner.inter(a, b)
+
+    def union(self, a, b):
+        return self.inner.union(a, b)
+
+    def diff(self, a, b):
+        return self.inner.diff(a, b)
+
+    def count(self, d) -> float:
+        return self.inner.count(d)
+
+    def apply_atom(self, atom, d):
+        self.bstats.logical_atoms += 1
+        key = atom_key(atom)
+        sat = self.cache.get(key)
+        if sat is None:
+            if key not in self.shared_keys:
+                return self.inner.apply_atom(atom, d)
+            # first touch of a shared atom: pay |R| once, amortized over
+            # every later application in the batch
+            sat = self.inner.apply_atom(atom, self.inner.full())
+            self.cache[key] = sat
+        else:
+            self.bstats.atom_cache_hits += 1
+        return self.inner.inter(sat, d)
+
+
+# ---------------------------------------------------------------------------
+# The session
+# ---------------------------------------------------------------------------
+
+class QuerySession:
+    """Executes batches of predicate queries against one table with
+    cross-query plan + atom-result sharing.
+
+    Parameters
+    ----------
+    table:            the columnar table every query in a batch targets
+    planner:          shallowfish | deepfish | optimal | nooropt | auto
+                      (auto = shallowfish for depth <= 2, else deepfish)
+    engine:           numpy | jax | pallas (pallas runs interpret on CPU)
+    plan_cache:       an :class:`LRUPlanCache`; persists across ``execute``
+                      calls (and may be shared between sessions)
+    share_threshold:  min queries an atom key must appear in to get the
+                      full-table shared evaluation (default 2)
+    batched:          True = lockstep multi-bitmap execution, False =
+                      sequential per-query execution, "auto" = lockstep on
+                      the block engines only
+    """
+
+    def __init__(self, table: Table, planner: str = "shallowfish",
+                 engine: str = "numpy", model: Optional[CostModel] = None,
+                 plan_cache: Optional[LRUPlanCache] = None,
+                 share_threshold: int = 2,
+                 batched: Union[bool, str] = "auto", block: int = 8192,
+                 annotate: bool = True):
+        if planner not in ("auto",) + tuple(_PLANNERS):
+            raise ValueError(f"unknown planner {planner!r}")
+        if engine not in ("numpy", "jax", "pallas"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.table = table
+        self.planner = planner
+        self.engine = engine
+        self.model = model or PerAtomCostModel()
+        # explicit None-check: an empty LRUPlanCache is falsy (len == 0)
+        self.plan_cache = plan_cache if plan_cache is not None else LRUPlanCache()
+        self.share_threshold = share_threshold
+        self.batched = batched
+        self.block = block
+        self.annotate = annotate
+        self.last_result: Optional[BatchResult] = None
+
+    # -- helpers --------------------------------------------------------------
+    def _make_backend(self) -> SetBackend:
+        if self.engine == "numpy":
+            return BitmapBackend(self.table)
+        return JaxBlockBackend(self.table, block=self.block,
+                               engine=self.engine)
+
+    def _resolve_planner(self, tree: PredicateTree) -> str:
+        if self.planner == "auto":
+            return "shallowfish" if tree.depth <= 2 else "deepfish"
+        return self.planner
+
+    # -- entry point ----------------------------------------------------------
+    def execute(self, queries: Sequence[Union[Node, PredicateTree]]
+                ) -> BatchResult:
+        """Plan + execute a batch; returns per-query record bitmaps (in
+        input order) plus the batch's sharing statistics."""
+        t0 = time.perf_counter()
+        if self.annotate:
+            # work on private copies: annotation overwrites atom
+            # selectivities, and caller-supplied trees (hand-set stats, UDF
+            # atoms the table cannot estimate) must stay untouched
+            trees = [normalize(tree_copy(q.root if isinstance(q, PredicateTree)
+                                         else q)) for q in queries]
+            for t in trees:
+                annotate_selectivities(t, self.table)
+        else:
+            trees = [q if isinstance(q, PredicateTree)
+                     else normalize(tree_copy(q)) for q in queries]
+        stats = BatchStats(n_queries=len(trees))
+        h0, m0 = self.plan_cache.stats.hits, self.plan_cache.stats.misses
+        plans = [self.plan_cache.get_or_plan(
+                     t, self._resolve_planner(t), self.model,
+                     total_records=self.table.n_records)
+                 for t in trees]
+        stats.plan_cache_hits = self.plan_cache.stats.hits - h0
+        stats.plan_cache_misses = self.plan_cache.stats.misses - m0
+
+        # cross-query atom census (per-query *sets*: an atom repeated inside
+        # one query does not make it shared)
+        per_query = [set(atom_key(a) for a in t.atoms) for t in trees]
+        census = Counter(k for keys in per_query for k in keys)
+        stats.unique_atom_keys = len(census)
+        shared = {k for k, c in census.items() if c >= self.share_threshold}
+        stats.shared_atom_keys = len(shared)
+
+        inner = self._make_backend()
+        sb = _SharedAtomBackend(inner, shared, stats)
+        base_applications = inner.stats.atom_applications
+        lockstep = (self.batched is True
+                    or (self.batched == "auto" and self.engine != "numpy"))
+        if lockstep and all(p.planner in _ORDERED for p in plans):
+            bitmaps = self._execute_lockstep(trees, plans, sb, stats)
+        else:
+            bitmaps = [execute_plan(p, sb) for p in plans]
+        stats.physical_atoms = (inner.stats.atom_applications
+                                - base_applications)
+        result = BatchResult(bitmaps=bitmaps, plans=plans, stats=stats,
+                             backend=inner,
+                             wall_s=time.perf_counter() - t0)
+        self.last_result = result
+        return result
+
+    # -- lockstep batched executor --------------------------------------------
+    def _execute_lockstep(self, trees: List[PredicateTree],
+                          plans: List[Plan], sb: _SharedAtomBackend,
+                          stats: BatchStats) -> List[np.ndarray]:
+        """Drive all plans through BestD machines one step per round; same-
+        atom requests in a round run as one multi-bitmap kernel invocation.
+
+        BestD is correct for *any* ordering (Thm 4), so every ordered plan —
+        including ShallowFish's — executes here with identical results to
+        its native executor (a few more set ops for the depth-first orders).
+        """
+        inner = sb.inner
+        machines = [BestDMachine(t, sb) for t in trees]
+        cursors = [0] * len(trees)
+        while True:
+            pending: List[tuple] = []
+            for qi, (m, p) in enumerate(zip(machines, plans)):
+                if cursors[qi] < len(p.order):
+                    aid = p.order[cursors[qi]]
+                    atom, d = m.begin_step(aid)
+                    pending.append((qi, aid, atom, d))
+            if not pending:
+                break
+            stats.lockstep_rounds += 1
+            groups: "OrderedDict[tuple, list]" = OrderedDict()
+            for req in pending:
+                groups.setdefault(atom_key(req[2]), []).append(req)
+            for key, reqs in groups.items():
+                stats.logical_atoms += len(reqs)
+                atom = reqs[0][2]
+                sat_full = sb.cache.get(key)
+                if sat_full is not None:
+                    stats.atom_cache_hits += len(reqs)
+                    sats = [sb.inter(sat_full, d) for (_, _, _, d) in reqs]
+                elif key in sb.shared_keys:
+                    # one fused kernel invocation over the stacked live
+                    # bitmaps, plus a full-table row seeding the atom cache
+                    ds = [d for (_, _, _, d) in reqs] + [inner.full()]
+                    outs = inner.apply_atom_multi(atom, ds)
+                    sb.cache[key] = outs[-1]
+                    sats = outs[:-1]
+                    stats.kernel_batches += 1
+                elif len(reqs) > 1:
+                    stats.kernel_batches += 1
+                    sats = inner.apply_atom_multi(
+                        atom, [d for (_, _, _, d) in reqs])
+                else:
+                    sats = [inner.apply_atom(atom, reqs[0][3])]
+                for (qi, aid, _, d), sat in zip(reqs, sats):
+                    machines[qi].finish_step(aid, d, sat)
+                    cursors[qi] += 1
+        return [m.result() for m in machines]

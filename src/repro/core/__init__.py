@@ -7,7 +7,8 @@ Public API:
     execute_plan                       — run a Plan on any SetBackend
     BestDMachine                       — Algorithms 1+2 (BestD + Update)
 """
-from .predicate import Atom, And, Or, Not, Node, PredicateTree, normalize, tree_copy
+from .predicate import (Atom, And, Or, Not, Node, PredicateTree, normalize,
+                        tree_copy, atom_key, canonical_key)
 from .cost import (CostModel, MemoryCostModel, HddCostModel, PerAtomCostModel,
                    BlockCostModel, check_triangle)
 from .sets import SetBackend, VertexBackend, Stats
@@ -22,6 +23,7 @@ from .nooropt import nooropt, nooropt_execute
 
 __all__ = [
     "Atom", "And", "Or", "Not", "Node", "PredicateTree", "normalize", "tree_copy",
+    "atom_key", "canonical_key",
     "CostModel", "MemoryCostModel", "HddCostModel", "PerAtomCostModel",
     "BlockCostModel", "check_triangle",
     "SetBackend", "VertexBackend", "Stats", "BestDMachine",

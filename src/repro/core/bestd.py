@@ -73,12 +73,26 @@ class BestDMachine:
         return x
 
     # -- Algorithm 2's UPDATE --------------------------------------------------
+    def begin_step(self, aid: int):
+        """First half of a step: BestD's optimal D_i for atom ``aid``.
+
+        Split out so a driver may batch the costed ``apply_atom`` across
+        several machines (the multi-query lockstep executor) before feeding
+        each result back through :meth:`finish_step`.
+        """
+        return self.tree.atoms[aid], self.bestd_region(aid)
+
     def apply_step(self, aid: int):
         """Apply atom ``aid`` on BestD's D_i; run Update.  Returns (D_i, sat)."""
+        atom, d_i = self.begin_step(aid)
+        sat = self.backend.apply_atom(atom, d_i)
+        return self.finish_step(aid, d_i, sat)
+
+    def finish_step(self, aid: int, d_i, sat):
+        """Second half of a step: record ``sat`` = apply_atom(atom, D_i) and
+        run Update's Xi / Delta+ / Delta- bookkeeping.  Returns (D_i, sat)."""
         tree, be = self.tree, self.backend
         atom = tree.atoms[aid]
-        d_i = self.bestd_region(aid)
-        sat = be.apply_atom(atom, d_i)
         self.step_sets.append(d_i)
         self.order.append(aid)
 

@@ -267,3 +267,55 @@ def tree_copy(expr: Node) -> Node:
         return Not(tree_copy(expr.child))
     kind = type(expr)
     return kind([tree_copy(c) for c in expr.children])
+
+
+# ---------------------------------------------------------------------------
+# Canonical hashing — the multi-query layer's plan-cache / dedupe keys
+# ---------------------------------------------------------------------------
+
+def atom_key(atom: Atom) -> Tuple:
+    """Identity of an atom's *data effect*: two atoms with equal keys select
+    exactly the same records, so their results may be shared across queries.
+
+    UDF atoms key on the function object identity (a shared callable is a
+    shared predicate); list/tuple IN-values are normalized to tuples.
+    """
+    value = atom.value
+    if isinstance(value, (list, set)):
+        value = tuple(value)
+    if atom.fn is not None:
+        value = ("fn", id(atom.fn), value)
+    return (atom.column, atom.op, value)
+
+
+def canonical_key(tree: PredicateTree, sel_step: float = 0.05,
+                  cost_step: float = 0.5) -> Tuple[Tuple, list]:
+    """Canonical hashable form of a normalized tree, for plan caching.
+
+    The key encodes exactly what the planners consume — node kinds, tree
+    shape, and per-atom (selectivity, cost_factor) quantized to buckets of
+    ``sel_step`` / ``cost_step`` — and *not* atom identities: two queries
+    with the same shape and bucketed statistics plan identically and can
+    share a plan-cache entry.  A selectivity that drifts past its bucket
+    edge changes the key, so stale cached plans miss naturally.  Children
+    are sorted by their encodings, making the key invariant to sibling
+    order (AND/OR are commutative).
+
+    Returns ``(key, atom_order)`` where ``atom_order`` lists this tree's
+    atom ids in canonical traversal order: a plan stored as canonical
+    *positions* is remapped onto any key-equal tree via its own
+    ``atom_order``.  Ties between identically-encoded siblings are benign —
+    such subtrees are interchangeable to every planner.
+    """
+    def enc(node: Node) -> Tuple[Tuple, list]:
+        if isinstance(node, Atom):
+            sb = round(node.selectivity / sel_step) if sel_step else node.selectivity
+            cb = round(node.cost_factor / cost_step) if cost_step else node.cost_factor
+            return ("A", sb, cb), [node.aid]
+        tag = "&" if isinstance(node, And) else "|"
+        pairs = sorted((enc(c) for c in node.children), key=lambda p: p[0])
+        key = (tag, tuple(p[0] for p in pairs))
+        order = [aid for p in pairs for aid in p[1]]
+        return key, order
+
+    return enc(tree.root)

@@ -35,6 +35,12 @@ class SetBackend:
         """Return the subset of ``d`` satisfying ``atom`` (a *costed* action)."""
         raise NotImplementedError
 
+    def apply_atom_multi(self, atom: Atom, ds: Sequence):
+        """Apply one atom to several record sets.  Backends that can share
+        the column touch across the group (columnar engines) override this;
+        the default just loops."""
+        return [self.apply_atom(atom, d) for d in ds]
+
     def count(self, d) -> float:
         raise NotImplementedError
 

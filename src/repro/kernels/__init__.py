@@ -9,7 +9,7 @@ ref.py            — pure-jnp oracles the tests sweep against
 from . import ops, ref
 from .bitmap_ops import AND, ANDNOT, OR, bitmap_setop
 from .fused_chain import fused_chain_scan
-from .predicate_scan import predicate_scan
+from .predicate_scan import predicate_scan, predicate_scan_multi
 
 __all__ = ["ops", "ref", "AND", "OR", "ANDNOT", "bitmap_setop",
-           "predicate_scan", "fused_chain_scan"]
+           "predicate_scan", "predicate_scan_multi", "fused_chain_scan"]

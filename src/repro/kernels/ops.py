@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from . import ref
 from .bitmap_ops import AND, ANDNOT, OR, bitmap_setop
 from .fused_chain import fused_chain_scan
-from .predicate_scan import predicate_scan
+from .predicate_scan import predicate_scan, predicate_scan_multi
 
 
 @functools.partial(jax.jit, static_argnames=("opcode", "interpret"))
@@ -33,6 +33,26 @@ def predicate_blocks(col: jnp.ndarray, bits: jnp.ndarray, value,
     val = jnp.asarray([value], dtype=col.dtype)
     return predicate_scan(col_bm, bits, pops.astype(jnp.int32), val, opcode,
                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("opcode", "interpret"))
+def predicate_blocks_multi(col: jnp.ndarray, bits: jnp.ndarray, value,
+                           opcode: int, interpret: bool = False) -> jnp.ndarray:
+    """Multi-bitmap ``predicate_blocks``: Q queries' live-block bitmaps
+    stacked into one fused kernel invocation against a single column copy.
+
+    col:  f32[N, B] record-major blocks;  bits: u32[Q, N, W], W = B // 32.
+    """
+    n, b = col.shape
+    q = bits.shape[0]
+    w = b // 32
+    col_bm = col.reshape(n, w, 32).transpose(0, 2, 1)
+    bits_flat = bits.reshape(q * n, w)
+    pops = ref.popcount_ref(bits_flat).astype(jnp.int32)   # i32[Q*N]
+    val = jnp.asarray([value], dtype=col.dtype)
+    out = predicate_scan_multi(col_bm, bits_flat, pops, val, opcode,
+                               interpret=interpret)
+    return out.reshape(q, n, w)
 
 
 @functools.partial(jax.jit, static_argnames=("opcode", "interpret"))

@@ -73,3 +73,35 @@ def predicate_scan(col_bitmajor: jnp.ndarray, bits: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((n, w), jnp.uint32),
         interpret=interpret,
     )(pops, value, col_bitmajor, bits)
+
+
+def predicate_scan_multi(col_bitmajor: jnp.ndarray, bits: jnp.ndarray,
+                         pops: jnp.ndarray, value: jnp.ndarray, opcode: int,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Multi-bitmap variant: Q stacked record sets share one column copy.
+
+    col_bitmajor: f32[N, 32, W];  bits: u32[Q*N, W] (query-major stacking);
+    pops: i32[Q*N]  ->  u32[Q*N, W].  One pallas_call over a (Q*N,) grid:
+    grid step ``k`` loads column block ``k % N`` (the index map re-reads the
+    same column tile for every query) against bitmap row ``k``, so a group
+    of queries needing the same atom costs one kernel invocation, with dead
+    (query, block) pairs still skipped via the prefetched popcounts.
+    """
+    qn, w = bits.shape
+    n = col_bitmajor.shape[0]
+    kernel = functools.partial(_predicate_kernel, opcode=opcode)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(qn,),
+        in_specs=[
+            pl.BlockSpec((1, 32, w), lambda k, pop, val: (k % n, 0, 0)),
+            pl.BlockSpec((1, w), lambda k, pop, val: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w), lambda k, pop, val: (k, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((qn, w), jnp.uint32),
+        interpret=interpret,
+    )(pops, value, col_bitmajor, bits)

@@ -58,6 +58,19 @@ def predicate_blocks_ref(col: jnp.ndarray, bits_in: jnp.ndarray, value,
     return pack_u32(keep)
 
 
+def predicate_blocks_multi_ref(col: jnp.ndarray, bits_in: jnp.ndarray, value,
+                               opcode: int) -> jnp.ndarray:
+    """Multi-bitmap variant of :func:`predicate_blocks_ref`: the comparison
+    is computed once per block and masked against Q stacked record sets.
+
+    col:     f32[N, B]      column values, one row per block
+    bits_in: u32[Q, N, W]   Q packed record bitmaps (W = B // 32)
+    returns  u32[Q, N, W]   packed (D_q ∧ P) bitmaps
+    """
+    keep = compare(col, value, opcode)[None] & unpack_u32(bits_in)
+    return pack_u32(keep)
+
+
 def bitmap_and_ref(a, b):
     return a & b
 

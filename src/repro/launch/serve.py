@@ -30,10 +30,26 @@ def main():
     requests = {"tier": rng.choice(3, n_req).astype(np.int32),
                 "prompt_tokens": rng.integers(8, 4096, n_req).astype(np.int32),
                 "flagged": rng.choice(2, n_req, p=[.9, .1]).astype(np.int32)}
-    expr = ((Atom("tier", "eq", 2) | Atom("prompt_tokens", "lt", 1024))
-            & Atom("flagged", "eq", 0))
-    admit = RequestRouter(expr).admit(requests)
-    print(f"admitted {admit.sum()}/{n_req}")
+    # a rule set, not a single expression: admission + two routing policies
+    # sharing atoms (the multi-query layer dedupes them per batch)
+    rules = [
+        (Atom("tier", "eq", 2) | Atom("prompt_tokens", "lt", 1024))
+        & Atom("flagged", "eq", 0),                              # admit
+        Atom("tier", "eq", 2) & Atom("flagged", "eq", 0),        # fast lane
+        Atom("prompt_tokens", "lt", 1024) & Atom("flagged", "eq", 0),  # small
+    ]
+    router = RequestRouter(rules)
+    routes = router.route(requests)
+    for name, mask in zip(("admit", "fast", "small"), routes):
+        print(f"rule {name:<6s}: {mask.sum()}/{n_req}")
+    st = router.last_result.stats
+    print(f"router batch: atom dedupe {st.dedupe_ratio:.2f}x "
+          f"({st.physical_atoms}/{st.logical_atoms} column touches), "
+          f"plan-cache hit rate {st.plan_hit_rate:.0%}")
+    routes = router.route(requests)        # warm plan cache across calls
+    st = router.last_result.stats
+    print(f"second batch: plan-cache hit rate {st.plan_hit_rate:.0%}")
+    admit = routes[0]
 
     eng = ServeEngine(cfg, params, batch_size=args.batch, max_seq=cfg.max_seq)
     prompts = rng.integers(0, cfg.vocab,

@@ -2,10 +2,11 @@
 
 ``ServeEngine`` runs prefill once then jitted single-token decode steps over
 a fixed batch of slots (static shapes => one compile).  ``RequestRouter``
-evaluates admission/routing predicates over a *request-metadata column
-batch* with the paper's planner — the same ShallowFish/DeepFish plans used
-in the data pipeline, applied at serve time (e.g. "(tier = pro OR
-prompt_tokens < 2k) AND NOT flagged").
+evaluates admission/routing *rule sets* over a request-metadata column
+batch through the multi-query layer (columnar.multiquery): the same
+ShallowFish/DeepFish plans used in the data pipeline, served from a
+cross-call plan cache with per-batch atom dedupe (e.g. "(tier = pro OR
+prompt_tokens < 2k) AND NOT flagged" alongside its sibling routing rules).
 """
 from __future__ import annotations
 
@@ -16,36 +17,54 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..columnar.bitmap import unpack_bits
-from ..columnar.executor import BitmapBackend
-from ..columnar.table import Table, annotate_selectivities
-from ..core import (Node, PerAtomCostModel, deepfish, execute_plan,
-                    normalize, shallowfish)
+from ..columnar.multiquery import BatchResult, LRUPlanCache, QuerySession
+from ..columnar.table import Table
+from ..core import Node
 from ..models import api
 from ..models.config import LMConfig
 
 
 class RequestRouter:
-    """Route a batch of requests through a boolean predicate plan."""
+    """Route batches of requests through a *rule set* of predicate plans.
 
-    def __init__(self, expr: Node, planner: str = "auto"):
-        self.expr = expr
+    A router holds one predicate per route/policy (admission tiers, replica
+    targeting, abuse filters, ...) and evaluates the whole set against a
+    request-metadata column batch in a single :class:`QuerySession` — plans
+    are served from an LRU cache that persists across ``route`` calls, and
+    atoms repeated across rules are evaluated once per batch.  The original
+    single-expression ``admit`` API is kept (a request is admitted if any
+    rule accepts it).
+    """
+
+    def __init__(self, exprs, planner: str = "auto", engine: str = "numpy",
+                 plan_cache: Optional[LRUPlanCache] = None,
+                 share_threshold: int = 2):
+        if isinstance(exprs, Node):
+            exprs = [exprs]
+        self.exprs = list(exprs)
+        if not self.exprs:
+            raise ValueError("RequestRouter needs at least one rule")
         self.planner = planner
+        self.engine = engine
+        # explicit None-check: an empty LRUPlanCache is falsy (len == 0)
+        self.plan_cache = plan_cache if plan_cache is not None else LRUPlanCache()
+        self.share_threshold = share_threshold
+        self.last_result: Optional[BatchResult] = None
+
+    def route(self, requests: Dict[str, np.ndarray]) -> np.ndarray:
+        """requests: columnar dict of per-request metadata arrays.
+        Returns a (n_rules, n_requests) boolean route matrix."""
+        table = Table({k: np.asarray(v) for k, v in requests.items()})
+        session = QuerySession(table, planner=self.planner,
+                               engine=self.engine,
+                               plan_cache=self.plan_cache,
+                               share_threshold=self.share_threshold)
+        self.last_result = session.execute(self.exprs)
+        return self.last_result.masks(table.n_records)
 
     def admit(self, requests: Dict[str, np.ndarray]) -> np.ndarray:
-        """requests: columnar dict of per-request metadata arrays.
-        Returns a boolean admit mask."""
-        table = Table({k: np.asarray(v) for k, v in requests.items()})
-        tree = normalize(self.expr)
-        annotate_selectivities(tree, table)
-        planner = self.planner
-        if planner == "auto":
-            planner = "shallowfish" if tree.depth <= 2 else "deepfish"
-        plan = (shallowfish if planner == "shallowfish" else deepfish)(
-            tree, PerAtomCostModel(), total_records=table.n_records)
-        backend = BitmapBackend(table)
-        bitmap = execute_plan(plan, backend)
-        return unpack_bits(bitmap, table.n_records)
+        """Boolean admit mask: requests accepted by at least one rule."""
+        return self.route(requests).any(axis=0)
 
 
 class ServeEngine:

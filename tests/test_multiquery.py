@@ -1,0 +1,203 @@
+"""Multi-query layer: canonical keys, plan cache, atom dedupe, lockstep."""
+import numpy as np
+import pytest
+
+from repro.columnar import (BitmapBackend, JaxBlockBackend, LRUPlanCache,
+                            QuerySession, bitmap_and, pack_bits, random_tree,
+                            run_query)
+from repro.core import (And, Atom, Or, PerAtomCostModel, atom_key,
+                        canonical_key, execute_plan, normalize, tree_copy)
+from repro.serve import RequestRouter
+
+
+def _tree(sels, shuffle=False):
+    """(a & (b | c)) with given atom selectivities, optionally reordered."""
+    a = Atom("x0", "lt", 1.0, selectivity=sels[0])
+    b = Atom("x1", "lt", 2.0, selectivity=sels[1])
+    c = Atom("x2", "lt", 3.0, selectivity=sels[2])
+    expr = And([Or([c, b]), a]) if shuffle else And([a, Or([b, c])])
+    return normalize(expr)
+
+
+# -- canonical_key -----------------------------------------------------------
+
+def test_canonical_key_invariant_to_sibling_order():
+    t1 = _tree([0.3, 0.5, 0.7])
+    t2 = _tree([0.3, 0.5, 0.7], shuffle=True)
+    k1, o1 = canonical_key(t1)
+    k2, o2 = canonical_key(t2)
+    assert k1 == k2
+    # canonical order maps positions to equivalent atoms in both trees
+    assert [t1.atoms[a].selectivity for a in o1] == \
+           [t2.atoms[a].selectivity for a in o2]
+
+
+def test_canonical_key_quantization_buckets():
+    base, _ = canonical_key(_tree([0.50, 0.5, 0.7]), sel_step=0.05)
+    same, _ = canonical_key(_tree([0.51, 0.5, 0.7]), sel_step=0.05)
+    diff, _ = canonical_key(_tree([0.60, 0.5, 0.7]), sel_step=0.05)
+    assert base == same          # drift inside the bucket: same key
+    assert base != diff          # drift past the bucket edge: new key
+
+
+def test_atom_key_identity():
+    assert atom_key(Atom("a", "lt", 1.0)) == atom_key(
+        Atom("a", "lt", 1.0, selectivity=0.9, cost_factor=3.0))
+    assert atom_key(Atom("a", "lt", 1.0)) != atom_key(Atom("a", "le", 1.0))
+    assert atom_key(Atom("a", "in", (1, 2))) == atom_key(
+        Atom("a", "in", [1, 2]))
+
+
+# -- plan cache --------------------------------------------------------------
+
+def test_plan_cache_hit_is_bit_identical(forest):
+    rng = np.random.default_rng(11)
+    tree = random_tree(forest, n_atoms=6, depth=3, rng=rng)
+    cache = LRUPlanCache()
+    model = PerAtomCostModel()
+    p1 = cache.get_or_plan(tree, "deepfish", model, forest.n_records)
+    assert cache.stats.misses == 1
+    # a structurally identical query (fresh copy, same statistics) must hit
+    # and produce the same bitmap as planning from scratch
+    tree2 = normalize(tree_copy(tree.root))
+    p2 = cache.get_or_plan(tree2, "deepfish", model, forest.n_records)
+    assert cache.stats.hits == 1
+    r1 = execute_plan(p1, BitmapBackend(forest))
+    r2 = execute_plan(p2, BitmapBackend(forest))
+    np.testing.assert_array_equal(r1, r2)
+    fresh, _, _ = run_query(tree2, forest, planner="deepfish")
+    np.testing.assert_array_equal(r2, fresh)
+
+
+def test_plan_cache_stale_on_selectivity_drift():
+    cache = LRUPlanCache(sel_step=0.05)
+    model = PerAtomCostModel()
+    cache.get_or_plan(_tree([0.50, 0.30, 0.70]), "shallowfish", model)
+    cache.get_or_plan(_tree([0.52, 0.30, 0.70]), "shallowfish", model)
+    assert cache.stats.hits == 1          # in-bucket drift: cache hit
+    cache.get_or_plan(_tree([0.60, 0.30, 0.70]), "shallowfish", model)
+    assert cache.stats.misses == 2        # past the bucket: stale, replanned
+
+
+def test_plan_cache_lru_eviction():
+    cache = LRUPlanCache(capacity=2)
+    model = PerAtomCostModel()
+    for s in (0.1, 0.3, 0.5):
+        cache.get_or_plan(_tree([s, 0.4, 0.6]), "shallowfish", model)
+    assert len(cache) == 2
+    assert cache.stats.evictions == 1
+    cache.get_or_plan(_tree([0.1, 0.4, 0.6]), "shallowfish", model)
+    assert cache.stats.hits == 0          # oldest entry was evicted
+
+
+# -- apply_atom_multi --------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["numpy", "jax", "pallas"])
+def test_apply_atom_multi_matches_single(forest, engine):
+    rng = np.random.default_rng(4)
+    atom = Atom("slope_0", "lt", forest.value_at_selectivity("slope_0", 0.4))
+    ds = [pack_bits(rng.random(forest.n_records) < f) for f in (0.2, 0.7, 1.0)]
+    if engine == "numpy":
+        be = BitmapBackend(forest)
+    else:
+        be = JaxBlockBackend(forest, engine=engine)
+    singles = [be.apply_atom(atom, d) for d in ds]
+    n_single = be.stats.atom_applications
+    multi = be.apply_atom_multi(atom, ds)
+    for s, m in zip(singles, multi):
+        np.testing.assert_array_equal(s, m)
+    assert be.stats.atom_applications == n_single + 1   # one column touch
+
+
+# -- batch dedupe ------------------------------------------------------------
+
+def _workload(table, n_queries, n_templates, seed=0):
+    rng = np.random.default_rng(seed)
+    pool = [random_tree(table, n_atoms=5, depth=3, rng=rng)
+            for _ in range(n_templates)]
+    return [pool[rng.integers(n_templates)] for _ in range(n_queries)]
+
+
+def test_batch_dedupe_fewer_atom_applications(forest):
+    queries = _workload(forest, 64, 8)
+    base_bitmaps, base_applications = [], 0
+    for t in queries:
+        bm, _, be = run_query(t, forest, planner="deepfish")
+        base_bitmaps.append(bm)
+        base_applications += be.stats.atom_applications
+    session = QuerySession(forest, planner="deepfish", engine="numpy")
+    res = session.execute(queries)
+    for a, b in zip(base_bitmaps, res.bitmaps):
+        np.testing.assert_array_equal(a, b)
+    # strictly fewer physical apply_atom calls than 64 independent runs
+    assert res.stats.physical_atoms < base_applications
+    assert res.stats.physical_atoms == res.backend.stats.atom_applications
+    assert res.stats.dedupe_ratio > 1.0
+    assert res.stats.plan_cache_hits > 0
+
+
+def test_lockstep_batches_kernel_invocations(forest):
+    queries = _workload(forest, 8, 2, seed=3)
+    base = [run_query(t, forest, planner="deepfish", engine="numpy")[0]
+            for t in queries]
+    session = QuerySession(forest, planner="deepfish", engine="jax",
+                           batched=True)
+    res = session.execute(queries)
+    for a, b in zip(base, res.bitmaps):
+        np.testing.assert_array_equal(a, b)
+    assert res.stats.kernel_batches >= 1
+    assert res.stats.dedupe_ratio > 1.0
+
+
+def test_share_threshold_disables_sharing(forest):
+    queries = _workload(forest, 8, 2, seed=5)
+    session = QuerySession(forest, planner="deepfish", engine="numpy",
+                           share_threshold=10**9, batched=False)
+    res = session.execute(queries)
+    # nothing shared: every logical application touched the column
+    assert res.stats.shared_atom_keys == 0
+    assert res.stats.physical_atoms == res.stats.logical_atoms
+    base = [run_query(t, forest, planner="deepfish")[0] for t in queries]
+    for a, b in zip(base, res.bitmaps):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_shared_atom_cache_is_bit_exact(forest):
+    # one query's atom result ANDed from the full-table cache must equal the
+    # gather path even when D is tiny
+    atom = Atom("slope_0", "lt", forest.value_at_selectivity("slope_0", 0.3))
+    rng = np.random.default_rng(9)
+    d = pack_bits(rng.random(forest.n_records) < 0.01)
+    be = BitmapBackend(forest)
+    want = be.apply_atom(atom, d)
+    full = be.apply_atom(atom, be.full())
+    np.testing.assert_array_equal(want, bitmap_and(full, d))
+
+
+# -- serve integration -------------------------------------------------------
+
+def test_router_routes_rule_sets():
+    rng = np.random.default_rng(0)
+    n = 128
+    reqs = {"tier": rng.choice(3, n).astype(np.int32),
+            "tokens": rng.integers(8, 4096, n).astype(np.int32),
+            "flagged": rng.choice(2, n, p=[.9, .1]).astype(np.int32)}
+    rules = [
+        (Atom("tier", "eq", 2) | Atom("tokens", "lt", 1024))
+        & Atom("flagged", "eq", 0),
+        Atom("tier", "eq", 2) & Atom("flagged", "eq", 0),
+        Atom("tokens", "lt", 1024),
+    ]
+    router = RequestRouter(rules)
+    routes = router.route(reqs)
+    t, p, f = reqs["tier"], reqs["tokens"], reqs["flagged"]
+    np.testing.assert_array_equal(routes[0], ((t == 2) | (p < 1024)) & (f == 0))
+    np.testing.assert_array_equal(routes[1], (t == 2) & (f == 0))
+    np.testing.assert_array_equal(routes[2], p < 1024)
+    assert router.last_result.stats.dedupe_ratio > 1.0   # rules share atoms
+    # plan cache persists across route calls
+    router.route(reqs)
+    assert router.last_result.stats.plan_hit_rate == 1.0
+    # single-expression admit API unchanged
+    admit = RequestRouter(rules[0]).admit(reqs)
+    np.testing.assert_array_equal(admit, routes[0])

@@ -1,5 +1,8 @@
 """Hypothesis property tests on the planner/executor invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep: see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (And, Atom, HddCostModel, MemoryCostModel, Or,

@@ -65,3 +65,67 @@ def test_parse_errors():
         parse_select("SELECT FROM t")
     with pytest.raises(ValueError):
         parse_select("SELECT a FROM t WHERE a <")
+
+
+# -- edge cases ---------------------------------------------------------------
+
+def test_not_binds_tighter_than_or(table):
+    """``NOT a = 1 OR b = 2`` is ``(NOT a = 1) OR b = 2``: NOT applies to
+    the comparison, and AND/OR never end up inside the negation."""
+    _, _, expr = parse_select("SELECT a FROM t WHERE NOT c = 1 OR c = 2")
+    tree = normalize(expr)
+    assert type(tree.root).__name__ == "Or"
+    assert sorted(a.op for a in tree.atoms) == ["eq", "ne"]
+    be = BitmapBackend(table)
+    plan = shallowfish(annotate_selectivities(tree, table),
+                       PerAtomCostModel(), total_records=table.n_records)
+    got = unpack_bits(execute_plan(plan, be), table.n_records)
+    c = table["c"]
+    np.testing.assert_array_equal(got, ~(c == 1) | (c == 2))
+
+
+def test_not_and_or_nesting(table):
+    _, _, expr = parse_select(
+        "SELECT a FROM t WHERE NOT (c = 1 OR c = 2) AND a < 0")
+    tree = normalize(expr)
+    got_mask = unpack_bits(
+        execute_plan(shallowfish(annotate_selectivities(tree, table),
+                                 PerAtomCostModel(),
+                                 total_records=table.n_records),
+                     BitmapBackend(table)), table.n_records)
+    a, c = table["a"], table["c"]
+    np.testing.assert_array_equal(got_mask, ~((c == 1) | (c == 2)) & (a < 0))
+
+
+def test_in_with_single_element(table):
+    _, _, expr = parse_select("SELECT a FROM t WHERE c IN (3)")
+    tree = normalize(expr)
+    assert tree.atoms[0].op == "in"
+    assert tree.atoms[0].value == (3,)
+    hits = table.eval_atom(tree.atoms[0], None)
+    np.testing.assert_array_equal(hits, table["c"] == 3)
+
+
+def test_ilike_percent_both_ends():
+    from repro.columnar.table import Table
+    names = np.array(["alice", "MALICE", "bob", "Alistair", "chalice"])
+    t = Table({"name": names})
+    _, _, expr = parse_select("SELECT name FROM t WHERE name ILIKE '%lic%'")
+    atom = normalize(expr).atoms[0]
+    assert atom.op == "like"
+    hits = t.eval_atom(atom, None)
+    np.testing.assert_array_equal(
+        hits, np.char.find(np.char.lower(names), "lic") >= 0)
+
+
+def test_malformed_inputs_raise_clear_errors():
+    with pytest.raises(ValueError, match="bad SQL"):
+        parse_select("SELECT a FROM t WHERE a @ 1")
+    with pytest.raises(ValueError, match="expected"):
+        parse_select("SELECT a FROM t WHERE (a < 1")      # unclosed paren
+    with pytest.raises(ValueError, match="expected"):
+        parse_select("SELECT a FROM t WHERE NOT")         # dangling NOT
+    with pytest.raises(ValueError, match="expected"):
+        parse_select("SELECT a FROM t WHERE c IN 1, 2")   # IN without parens
+    with pytest.raises(ValueError, match="expected"):
+        parse_select("WHERE a < 1")                       # missing SELECT
