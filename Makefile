@@ -11,3 +11,4 @@ test:
 bench-smoke:
 	$(PY) benchmarks/bench_multiquery.py --queries 48 --templates 6 \
 		--rows 20000 --repeats 1
+	$(PY) benchmarks/bench_device.py --smoke

@@ -1,0 +1,215 @@
+"""Device-tape engine benchmark: one device program per query vs per-step
+kernel dispatch.
+
+Compares the compiled-tape engine (``engine="tape"``:
+``core.tape.compile_tape`` + ``columnar.device.DeviceTapeBackend``, all
+bitmaps device-resident, ONE host sync per query) against the per-step
+``JaxBlockBackend`` (``engine="jax"``: one kernel dispatch + host bitmap
+round-trip per plan step) on
+
+* a single 16-atom mixed AND/OR tree over ``--rows`` records, and
+* a ``--batch``-query serving-shaped workload through ``QuerySession``
+  (device-resident lockstep vs host-resident lockstep),
+
+plus a differential sweep asserting the two engines produce bit-identical
+bitmaps.  Wall-clock is best-of ``--repeats`` after a warmup run (the tape
+engine's compile cost is reported separately as ``tape_cold_ms``).  Writes
+``BENCH_device.json``.
+
+    PYTHONPATH=src python benchmarks/bench_device.py --rows 1000000
+    PYTHONPATH=src python benchmarks/bench_device.py --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.columnar import (DeviceTapeBackend, JaxBlockBackend, QuerySession,
+                            make_forest_table, random_tree, run_query)
+from repro.columnar.table import annotate_selectivities
+from repro.core import PerAtomCostModel, compile_tape, deepfish, execute_plan
+from repro.core.tape import ATOM, CHAIN
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_single(table, tree, repeats: int, block: int) -> dict:
+    model = PerAtomCostModel()
+    plan = deepfish(tree, model, total_records=table.n_records)
+
+    jax_be = JaxBlockBackend(table, block=block, engine="jax")
+    execute_plan(plan, jax_be)                       # warm column uploads
+    jax_be.kernel_invocations = jax_be.host_syncs = 0
+    base = execute_plan(plan, jax_be)
+    jax_kernels, jax_syncs = jax_be.kernel_invocations, jax_be.host_syncs
+    jax_ms = _best_of(lambda: execute_plan(plan, jax_be), repeats) * 1e3
+
+    tape = compile_tape(plan)
+    tape_be = DeviceTapeBackend(table, block=block)
+    t0 = time.perf_counter()
+    res = tape_be.run_tape(tape)                     # cold: compile included
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    tape_be.device_dispatches = tape_be.host_syncs = 0
+    res = tape_be.run_tape(tape)
+    tape_dispatches, tape_syncs = (tape_be.device_dispatches,
+                                   tape_be.host_syncs)
+    tape_ms = _best_of(lambda: tape_be.run_tape(tape), repeats) * 1e3
+
+    identical = bool(np.array_equal(res, base))
+    return {
+        "atoms": tree.n,
+        "tape_ops": len(tape.ops),
+        "tape_chains": tape.n_chains,
+        "jax_ms": round(jax_ms, 3),
+        "tape_ms": round(tape_ms, 3),
+        "tape_cold_ms": round(cold_ms, 3),
+        "speedup": round(jax_ms / tape_ms, 2) if tape_ms else float("inf"),
+        "jax_kernel_invocations": jax_kernels,
+        "jax_host_syncs": jax_syncs,
+        "tape_device_dispatches": tape_dispatches,
+        "tape_host_syncs_per_query": tape_syncs,
+        "identical": identical,
+    }
+
+
+def _workload(table, n_queries, n_templates, n_atoms, depth, seed):
+    rng = np.random.default_rng(seed)
+    pool = [random_tree(table, n_atoms, depth, rng)
+            for _ in range(n_templates)]
+    return [pool[rng.integers(n_templates)] for _ in range(n_queries)]
+
+
+def bench_batch(table, queries, repeats: int, block: int) -> dict:
+    """Per-step lockstep (jax) vs compiled tapes (tape) vs device-resident
+    lockstep (tape_lockstep).  Cross-batch atom caching is disabled so each
+    timed batch performs real kernel work; columns/plans/programs stay warm
+    across repeats."""
+    sessions = {
+        "jax": QuerySession(table, planner="deepfish", engine="jax",
+                            block=block, persist_atom_cache=False),
+        "tape": QuerySession(table, planner="deepfish", engine="tape",
+                            block=block, persist_atom_cache=False),
+        "tape_lockstep": QuerySession(table, planner="deepfish",
+                                      engine="tape", block=block,
+                                      batched=True,
+                                      persist_atom_cache=False),
+    }
+    out, results = {}, {}
+    for name, sess in sessions.items():
+        sess.execute(queries)                        # warm plans + columns
+        be = sess._backend
+        syncs0 = be.host_syncs if be is not None else 0
+        r = sess.execute(queries)
+        results[name] = r
+        syncs = (be.host_syncs - syncs0) if be is not None else None
+        best = r.wall_s
+        for _ in range(max(repeats - 1, 0)):
+            best = min(best, sess.execute(queries).wall_s)
+        out[f"{name}_ms"] = round(best * 1e3, 3)
+        out[f"{name}_host_syncs_per_batch"] = syncs
+    out["queries"] = len(queries)
+    out["speedup"] = round(out["jax_ms"] / out["tape_ms"], 2)
+    out["identical"] = all(
+        np.array_equal(a, b)
+        for other in ("tape", "tape_lockstep")
+        for a, b in zip(results["jax"].bitmaps, results[other].bitmaps))
+    return out
+
+
+def bench_differential(table, n_seeds: int, block: int) -> dict:
+    """Bit-identical sweep: tape vs JaxBlockBackend across random trees."""
+    mismatches = 0
+    for seed in range(n_seeds):
+        rng = np.random.default_rng(seed)
+        tree = random_tree(table, int(rng.integers(4, 9)),
+                           int(rng.integers(2, 4)), rng)
+        base, _, _ = run_query(tree, table, planner="deepfish", engine="jax")
+        got, _, be = run_query(tree, table, planner="deepfish",
+                               engine="tape")
+        if not np.array_equal(base, got) or be.host_syncs != 1:
+            mismatches += 1
+    return {"seeds": n_seeds, "mismatches": mismatches,
+            "identical": mismatches == 0}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=1_000_000)
+    ap.add_argument("--atoms", type=int, default=16)
+    ap.add_argument("--depth", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--templates", type=int, default=8)
+    ap.add_argument("--block", type=int, default=8192)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--diff-seeds", type=int, default=6)
+    ap.add_argument("--out", default="BENCH_device.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: small table, tiny batch")
+    args = ap.parse_args()
+    if args.smoke:
+        args.rows, args.batch, args.repeats = 50_000, 8, 1
+        args.templates, args.diff_seeds = 2, 2
+
+    table = make_forest_table(args.rows, n_dup=2, seed=7)
+    rng = np.random.default_rng(0)
+    tree = random_tree(table, args.atoms, args.depth, rng)
+    annotate_selectivities(tree, table)
+
+    print(f"table: {table.n_records} rows; single query: {args.atoms} atoms "
+          f"depth {args.depth}")
+    single = bench_single(table, tree, args.repeats, args.block)
+    print(f"single: jax {single['jax_ms']:.1f} ms "
+          f"({single['jax_kernel_invocations']} kernels, "
+          f"{single['jax_host_syncs']} syncs)  vs  tape "
+          f"{single['tape_ms']:.1f} ms "
+          f"({single['tape_device_dispatches']} dispatch, "
+          f"{single['tape_host_syncs_per_query']} sync; "
+          f"cold {single['tape_cold_ms']:.0f} ms)  ->  "
+          f"{single['speedup']:.2f}x  identical={single['identical']}")
+
+    queries = _workload(table, args.batch, args.templates, 6, 3, seed=1)
+    batch = bench_batch(table, queries, args.repeats, args.block)
+    print(f"batch{batch['queries']}: jax {batch['jax_ms']:.1f} ms "
+          f"({batch['jax_host_syncs_per_batch']} syncs)  vs  tape "
+          f"{batch['tape_ms']:.1f} ms "
+          f"({batch['tape_host_syncs_per_batch']} syncs)  vs  "
+          f"tape-lockstep {batch['tape_lockstep_ms']:.1f} ms "
+          f"({batch['tape_lockstep_host_syncs_per_batch']} sync)  ->  "
+          f"{batch['speedup']:.2f}x  identical={batch['identical']}")
+
+    diff = bench_differential(table, args.diff_seeds, args.block)
+    print(f"differential sweep: {diff['seeds']} seeds, "
+          f"{diff['mismatches']} mismatches")
+
+    report = {
+        "rows": table.n_records,
+        "block": args.block,
+        "single": single,
+        "batch": batch,
+        "differential": diff,
+        "acceptance": {
+            "bit_identical": bool(single["identical"] and batch["identical"]
+                                  and diff["identical"]),
+            "single_speedup_ge_2x": bool(single["speedup"] >= 2.0),
+            "tape_host_syncs_per_query": single["tape_host_syncs_per_query"],
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    if not report["acceptance"]["bit_identical"]:
+        raise SystemExit("FAIL: tape engine diverged from JaxBlockBackend")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ from .bitmap import (pack_bits, unpack_bits, popcount, bitmap_and, bitmap_or,
 from .table import Table, annotate_selectivities, empirical_selectivity
 from .forest import make_forest_table
 from .executor import BitmapBackend, JaxBlockBackend, run_query
+from .device import DeviceTapeBackend
 from .queries import random_tree, random_query_suite
 from .multiquery import (QuerySession, LRUPlanCache, BatchResult, BatchStats,
                          PlanCacheStats)
@@ -39,7 +40,7 @@ __all__ = [
     "bitmap_andnot", "bitmap_full", "bitmap_empty", "WORD",
     "Table", "annotate_selectivities", "empirical_selectivity",
     "make_forest_table",
-    "BitmapBackend", "JaxBlockBackend", "run_query",
+    "BitmapBackend", "JaxBlockBackend", "DeviceTapeBackend", "run_query",
     "random_tree", "random_query_suite",
     "QuerySession", "LRUPlanCache", "BatchResult", "BatchStats",
     "PlanCacheStats",

@@ -61,3 +61,18 @@ def bitmap_or(a: np.ndarray, b: np.ndarray) -> np.ndarray:
 def bitmap_andnot(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """a \\ b."""
     return a & ~b
+
+
+def next_pow2(x: int) -> int:
+    """Next power of two >= x — the block engines' shape bucket, so jitted
+    kernels compile once per (opcode, bucket) instead of per exact size."""
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+def live_block_count(words: np.ndarray, nblocks: int, wpb: int) -> int:
+    """Number of blocks with any set bit in flat packed ``words`` — the
+    block-granular touch count shared by every engine's host-fallback
+    accounting (keeps jax / pallas / tape cost reporting identical)."""
+    padded = np.zeros(nblocks * wpb, dtype=np.uint32)
+    padded[: len(words)] = words
+    return int((padded.reshape(nblocks, wpb) != 0).any(axis=1).sum())

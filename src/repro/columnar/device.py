@@ -1,0 +1,635 @@
+"""Device-resident plan execution: compiled tapes + a device SetBackend.
+
+``DeviceTapeBackend`` keeps every record bitmap a plan touches *on the
+device* and talks to the host exactly once per query.  It plays two roles:
+
+1. **Whole-tape executor** — :meth:`run_tape` takes a
+   :class:`~repro.core.tape.PlanTape` and runs it as ONE jitted device
+   program: a functional slot file of ``u32[N, W]`` bitmaps (plus per-block
+   popcounts for kernel-side dead-block skipping), ATOM ops lowered to the
+   fused compare∧bitmap kernel, CHAIN ops to ``fused_chain_scan``, SETOPs to
+   ``bitmap_setop`` — then a single ``device_get`` fetches the result bitmap
+   together with the per-step cost counters.  This is the
+   dispatch-count-O(1), host-sync-count-1 path ``run_query(engine="tape")``
+   uses.
+
+2. **Device-resident SetBackend** — the generic
+   :class:`~repro.core.sets.SetBackend` interface over device sets
+   (``_DevSet`` = bitmap + per-block popcounts, both ``jnp`` arrays), so the
+   *multi-query lockstep executor* runs BestD bookkeeping and fused
+   multi-bitmap atom kernels entirely on device: one dispatch per fused
+   step, no transfers until the batch's single final
+   :meth:`materialize` call.
+
+Design note — slot allocation and the one-sync-per-query contract
+-----------------------------------------------------------------
+The tape compiler emits SSA ops and then linear-scan-allocates them onto a
+minimal physical slot set, so a tape's working set is a dense
+``u32[S, N, W]`` slot file whose ``S`` is typically far below the op count
+(BestD's Delta bookkeeping is mostly dead-code-eliminated; survivors reuse
+recycled slots).  During execution nothing leaves the device: popcounts ride
+along as ``i32[N]`` vectors (feeding the Pallas kernels' scalar-prefetch
+dead-block skip), per-step record/block counts accumulate into device
+vectors, and the final transfer bundles ``(result bitmap, counters)`` into
+one ``device_get`` — exactly one host sync per query.  The contract is
+relaxed only by **host fallbacks**: atoms a device kernel cannot evaluate
+(string/LIKE/UDF predicates, non-numeric columns) round-trip their source
+slot through the host gather path, each adding one sync and incrementing
+``host_fallbacks``.  String/UDF fallback *semantics* match the oracle
+backend bit-for-bit; making them device-resident (dictionary-encoded
+columns) is an open ROADMAP item, as are tape size limits (slots are
+allocated eagerly: a pathological plan with thousands of live intermediate
+sets would want spilling, which the compiler does not yet do).
+
+Shapes are **bucketed**: the block count is padded up to a power of two, so
+one compiled program serves every table whose padded shape matches — e.g.
+the request router's per-call metadata tables of drifting row counts hit
+the jit cache instead of retracing per size.  Padded blocks carry zero
+bitmaps (their popcounts are 0, so kernels skip them) and zero column
+values (masked by the zero bitmaps), keeping results exact.
+"""
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.predicate import Atom
+from ..core.sets import SetBackend, Stats
+from ..core.tape import (ATOM, CHAIN, CMP_OPCODE, EMPTY, FULL, SETOP,
+                         OP_AND, OP_ANDNOT, OP_OR, PlanTape, device_atom)
+from .bitmap import (WORD, bitmap_full, live_block_count, n_words,
+                     next_pow2, pack_bits, unpack_bits)
+from .table import Table
+
+_CMP_OPCODE = CMP_OPCODE
+
+
+class _DevSet(NamedTuple):
+    """A device-resident record set: packed bitmap + per-block popcounts."""
+
+    bits: "object"        # u32[N, W]
+    pops: "object"        # i32[N]
+
+
+# ---------------------------------------------------------------------------
+# Device primitives (raw impls shared by the whole-tape program and the
+# jitted per-op wrappers)
+# ---------------------------------------------------------------------------
+
+def _setop_impl(a, b, setop: int, pallas: bool, interpret: bool):
+    import jax.numpy as jnp
+    if pallas:
+        from ..kernels.bitmap_ops import bitmap_setop
+        out, pops = bitmap_setop(a, b, setop, interpret=interpret)
+        return out, pops[:, 0]
+    from ..kernels import ref
+    if setop == OP_AND:
+        out = a & b
+    elif setop == OP_OR:
+        out = a | b
+    elif setop == OP_ANDNOT:
+        out = a & jnp.bitwise_not(b)
+    else:  # pragma: no cover
+        raise ValueError(f"bad setop {setop}")
+    return out, ref.popcount_ref(out)
+
+
+def _atom_ref_bitmajor(col_bm, bits, value, opcode: int):
+    """Pure-jnp ATOM on bit-major columns: col_bm f32[N, 32, W],
+    bits u32[N, W] -> u32[N, W]."""
+    import jax.numpy as jnp
+    from ..kernels import ref
+    bitpos = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    in_set = ((bits[:, None, :] >> bitpos) & jnp.uint32(1)).astype(jnp.bool_)
+    keep = ref.compare(col_bm, value, opcode) & in_set
+    return (keep.astype(jnp.uint32) << bitpos).sum(axis=1, dtype=jnp.uint32)
+
+
+def _atom_impl(col_bm, bits, pops, value, opcode: int, pallas: bool,
+               interpret: bool):
+    import jax.numpy as jnp
+    from ..kernels import ref
+    if pallas:
+        from ..kernels.predicate_scan import predicate_scan
+        val = jnp.asarray(value, dtype=jnp.float32).reshape(1)
+        out = predicate_scan(col_bm, bits, pops, val, opcode,
+                             interpret=interpret)
+    else:
+        out = _atom_ref_bitmajor(col_bm, bits, value, opcode)
+    return out, ref.popcount_ref(out)
+
+
+def _chain_impl(cols_bm, bits, pops, values, opcodes: tuple, conj: bool,
+                pallas: bool, interpret: bool):
+    """cols_bm f32[N, K, 32, W]; bits u32[N, W]; values f32[K]."""
+    import jax.numpy as jnp
+    from ..kernels import ref
+    if pallas:
+        from ..kernels.fused_chain import fused_chain_scan
+        out = fused_chain_scan(cols_bm, bits, pops,
+                               jnp.asarray(values, dtype=jnp.float32),
+                               opcodes, conj=conj, interpret=interpret)
+    else:
+        acc = None
+        for k, op in enumerate(opcodes):
+            cmp = ref.compare(cols_bm[:, k], values[k], op)
+            acc = cmp if acc is None else (acc & cmp if conj else acc | cmp)
+        bitpos = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+        in_set = ((bits[:, None, :] >> bitpos)
+                  & jnp.uint32(1)).astype(jnp.bool_)
+        out = ((acc & in_set).astype(jnp.uint32) << bitpos).sum(
+            axis=1, dtype=jnp.uint32)
+    return out, ref.popcount_ref(out)
+
+
+def _multi_atom_impl(col_bm, bits, pops, value, opcode: int, pallas: bool,
+                     interpret: bool):
+    """col_bm f32[N, 32, W]; bits u32[Q, N, W]; pops i32[Q, N]."""
+    import jax.numpy as jnp
+    from ..kernels import ref
+    q, n, w = bits.shape
+    if pallas:
+        from ..kernels.predicate_scan import predicate_scan_multi
+        val = jnp.asarray(value, dtype=jnp.float32).reshape(1)
+        out = predicate_scan_multi(col_bm, bits.reshape(q * n, w),
+                                   pops.reshape(-1), val, opcode,
+                                   interpret=interpret).reshape(q, n, w)
+    else:
+        bitpos = jnp.arange(32, dtype=jnp.uint32)[None, None, :, None]
+        in_set = ((bits[:, :, None, :] >> bitpos)
+                  & jnp.uint32(1)).astype(jnp.bool_)
+        keep = ref.compare(col_bm, value, opcode)[None] & in_set
+        out = (keep.astype(jnp.uint32) << bitpos).sum(axis=2,
+                                                      dtype=jnp.uint32)
+    return out, ref.popcount_ref(out)
+
+
+def _union_impl(bits, pops):
+    """Union-reduce Q stacked device sets in ONE dispatch (the union is
+    only needed for fallback detection + cost accounting)."""
+    from ..kernels import ref
+    out = bits[0]
+    for j in range(1, bits.shape[0]):
+        out = out | bits[j]
+    return out, ref.popcount_ref(out)
+
+
+def _jit(fn, static):
+    import jax
+    return functools.partial(jax.jit, static_argnames=static)(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_prims():
+    """Per-op jitted wrappers (built lazily so importing this module does
+    not pull in jax)."""
+    return {
+        "setop": _jit(_setop_impl, ("setop", "pallas", "interpret")),
+        "atom": _jit(_atom_impl, ("opcode", "pallas", "interpret")),
+        "chain": _jit(_chain_impl, ("opcodes", "conj", "pallas",
+                                    "interpret")),
+        "multi": _jit(_multi_atom_impl, ("opcode", "pallas", "interpret")),
+        "union": _jit(_union_impl, ()),
+    }
+
+
+# Whole-tape compiled programs, shared across backends/tables: keyed by
+# (tape structural key, kernel flavor, interpret) — jax.jit then caches per
+# concrete (bucketed) shape underneath.  LRU-bounded so a long-lived server
+# seeing evolving query shapes cannot grow it without bound.
+_TAPE_PROGRAMS: "OrderedDict[tuple, object]" = OrderedDict()
+_TAPE_PROGRAM_CAP = 256
+
+
+class DeviceTapeBackend(SetBackend):
+    """Device-resident executor: whole-plan tapes + a device SetBackend.
+
+    Parameters
+    ----------
+    table:     the columnar table (numeric columns are uploaded once, as
+               bit-major f32 blocks, and cached for the backend's lifetime)
+    block:     records per block (multiple of 32; the padded block count is
+               bucketed to a power of two for jit-cache sharing)
+    kernels:   "jax" = pure-jnp ops fused by XLA; "pallas" = the Pallas
+               kernels (interpret mode off-TPU)
+    interpret: force Pallas interpret mode (default: auto-detect non-TPU)
+    """
+
+    def __init__(self, table: Table, block: int = 8192,
+                 kernels: str = "jax", interpret: Optional[bool] = None):
+        if block % WORD:
+            raise ValueError("block must be a multiple of 32")
+        if kernels not in ("jax", "pallas"):
+            raise ValueError(f"unknown kernels {kernels!r}")
+        import jax
+        self.table = table
+        self.n = table.n_records
+        self.block = block
+        self.kernels = kernels
+        self.pallas = kernels == "pallas"
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
+        self.wpb = block // WORD
+        self.nblocks = next_pow2((self.n + block - 1) // block)
+        self._padded = self.nblocks * block
+        self.stats = Stats()
+        self.blocks_touched = 0.0
+        self.records_touched = 0.0
+        self.host_syncs = 0
+        self.host_fallbacks = 0
+        self.device_dispatches = 0
+        self.last_tape: Optional[PlanTape] = None
+        self._jcols: Dict[str, "object"] = {}
+        self._full: Optional[_DevSet] = None
+        self._empty: Optional[_DevSet] = None
+        # device-side pending cost counters, flushed by materialize()
+        self._pend_records: List[object] = []
+        self._pend_k: List[int] = []
+        self._pend_weights: List[float] = []
+        self._pend_blocks: List[object] = []
+
+    # -- conversions -----------------------------------------------------------
+    def _col_bitmajor(self, name: str):
+        """Column as bit-major f32[N, 32, W] device blocks (None if the
+        column is not numeric)."""
+        col = self._jcols.get(name)
+        if col is None:
+            import jax.numpy as jnp
+            raw = self.table.columns[name]
+            if not np.issubdtype(raw.dtype, np.number):
+                self._jcols[name] = False
+                return None
+            arr = np.zeros(self._padded, dtype=np.float32)
+            arr[: self.n] = raw.astype(np.float32)
+            col = jnp.asarray(arr.reshape(self.nblocks, self.wpb, 32)
+                              .transpose(0, 2, 1))
+            self._jcols[name] = col
+        elif col is False:
+            return None
+        return col
+
+    def _from_flat(self, words: np.ndarray) -> _DevSet:
+        """Host flat packed words -> device blocked set."""
+        import jax.numpy as jnp
+        from ..kernels import ref
+        padded = np.zeros(self.nblocks * self.wpb, dtype=np.uint32)
+        padded[: n_words(self.n)] = words
+        bits = jnp.asarray(padded.reshape(self.nblocks, self.wpb))
+        return _DevSet(bits, ref.popcount_ref(bits))
+
+    def _flat_device(self, d: _DevSet):
+        """Blocked device bitmap -> flat device words (real length)."""
+        return d.bits.reshape(-1)[: n_words(self.n)]
+
+    def _pull_flat(self, d: _DevSet) -> np.ndarray:
+        """One host sync: fetch a device set as host flat packed words."""
+        import jax
+        self.host_syncs += 1
+        return np.asarray(jax.device_get(self._flat_device(d)))
+
+    # -- SetBackend ------------------------------------------------------------
+    def full(self) -> _DevSet:
+        if self._full is None:
+            self._full = self._from_flat(bitmap_full(self.n))
+        return self._full
+
+    def empty(self) -> _DevSet:
+        if self._empty is None:
+            import jax.numpy as jnp
+            bits = jnp.zeros((self.nblocks, self.wpb), dtype=jnp.uint32)
+            pops = jnp.zeros((self.nblocks,), dtype=jnp.int32)
+            self._empty = _DevSet(bits, pops)
+        return self._empty
+
+    def _setop(self, a: _DevSet, b: _DevSet, code: int) -> _DevSet:
+        self.stats.setops += 1
+        self.device_dispatches += 1
+        out, pops = _jitted_prims()["setop"](a.bits, b.bits, setop=code,
+                                             pallas=self.pallas,
+                                             interpret=self.interpret)
+        return _DevSet(out, pops)
+
+    def inter(self, a, b):
+        return self._setop(a, b, OP_AND)
+
+    def union(self, a, b):
+        return self._setop(a, b, OP_OR)
+
+    def diff(self, a, b):
+        return self._setop(a, b, OP_ANDNOT)
+
+    def count(self, d: _DevSet) -> float:
+        import jax
+        self.host_syncs += 1
+        return float(jax.device_get(d.pops.sum()))
+
+    def _account(self, atoms: Sequence[Atom], pops, device: bool = True):
+        """Queue device-side cost counters for one costed application of
+        ``atoms`` (K > 1 for a fused chain: every chain atom evaluates on
+        all of src's live blocks, so counts scale by K — the fused trade of
+        +evaluations for -passes stays visible in the paper metrics).
+
+        ``device=False`` (host fallback) still counts records_evaluated —
+        count(D) is engine-independent — but leaves blocks/records_touched
+        to the fallback's own gather accounting.
+        """
+        import jax.numpy as jnp
+        self.stats.atom_applications += len(atoms)
+        self._pend_records.append(pops.sum())
+        self._pend_k.append(len(atoms))
+        self._pend_weights.append(sum(a.cost_factor for a in atoms))
+        self._pend_blocks.append((pops > 0).sum() if device
+                                 else jnp.int32(0))
+
+    def _apply_host(self, atom: Atom, ds: Sequence[_DevSet],
+                    union: _DevSet) -> List[_DevSet]:
+        """Host-gather fallback for atoms a device kernel cannot run."""
+        self.host_fallbacks += 1
+        uw = self._pull_flat(union)
+        mask = unpack_bits(uw, self.n)
+        idx = np.nonzero(mask)[0]
+        hits = self.table.eval_atom(atom, idx)
+        out = np.zeros(self.n, dtype=bool)
+        out[idx[hits]] = True
+        sat = self._from_flat(pack_bits(out))
+        # gather cost: count(union) records, block-granular touch count
+        self.records_touched += len(idx)
+        self.blocks_touched += live_block_count(uw, self.nblocks, self.wpb)
+        return [self._setop(sat, d, OP_AND) for d in ds]
+
+    def apply_atom(self, atom: Atom, d: _DevSet) -> _DevSet:
+        col = (self._col_bitmajor(atom.column)
+               if device_atom(atom) else None)
+        self._account([atom], d.pops, device=col is not None)
+        if col is None:
+            return self._apply_host(atom, [d], d)[0]
+        self.device_dispatches += 1
+        out, pops = _jitted_prims()["atom"](col, d.bits, d.pops,
+                                            float(atom.value),
+                                            opcode=_CMP_OPCODE[atom.op],
+                                            pallas=self.pallas,
+                                            interpret=self.interpret)
+        return _DevSet(out, pops)
+
+    def apply_atom_multi(self, atom: Atom, ds: Sequence[_DevSet]
+                         ) -> List[_DevSet]:
+        """Q device record sets against one atom in one fused kernel."""
+        if len(ds) == 1:
+            return [self.apply_atom(atom, ds[0])]
+        import jax.numpy as jnp
+        bits = jnp.stack([d.bits for d in ds])
+        pops = jnp.stack([d.pops for d in ds])
+        # one reduce dispatch (not Q-1 setops): the union only feeds the
+        # fallback path and cost accounting, mirroring the block engines'
+        # uncounted host union
+        self.device_dispatches += 1
+        ubits, upops = _jitted_prims()["union"](bits, pops)
+        union = _DevSet(ubits, upops)
+        col = (self._col_bitmajor(atom.column)
+               if device_atom(atom) else None)
+        self._account([atom], union.pops, device=col is not None)
+        if col is None:
+            return self._apply_host(atom, ds, union)
+        self.device_dispatches += 1
+        out, opops = _jitted_prims()["multi"](col, bits, pops,
+                                              float(atom.value),
+                                              opcode=_CMP_OPCODE[atom.op],
+                                              pallas=self.pallas,
+                                              interpret=self.interpret)
+        return [_DevSet(out[j], opops[j]) for j in range(len(ds))]
+
+    # -- the single end-of-query (or end-of-batch) host sync -------------------
+    def materialize(self, sets: Sequence[_DevSet]) -> List[np.ndarray]:
+        """Fetch result bitmaps AND flush pending cost counters in one
+        bundled transfer — the query/batch's single host sync."""
+        import jax
+        import jax.numpy as jnp
+        flats = [self._flat_device(d) for d in sets]
+        if self._pend_records:
+            rec = jnp.stack(self._pend_records)
+            blk = jnp.stack(self._pend_blocks)
+        else:
+            rec = jnp.zeros((0,), dtype=jnp.int32)
+            blk = jnp.zeros((0,), dtype=jnp.int32)
+        self.host_syncs += 1
+        flats, rec, blk = jax.device_get((flats, rec, blk))
+        rec = np.asarray(rec, dtype=np.float64)
+        blk = np.asarray(blk, dtype=np.float64)
+        ks = np.asarray(self._pend_k, dtype=np.float64)
+        self.stats.records_evaluated += float((rec * ks).sum())
+        self.stats.weighted_cost += float(
+            (rec * np.asarray(self._pend_weights)).sum())
+        self.blocks_touched += float((blk * ks).sum())
+        self.records_touched += float((blk * ks).sum() * self.block)
+        self._pend_records, self._pend_weights = [], []
+        self._pend_k, self._pend_blocks = [], []
+        return [np.asarray(f) for f in flats]
+
+    def _host_atom_group(self, op, src: _DevSet) -> _DevSet:
+        """Host fallback for a tape ATOM/CHAIN op: gather src's records
+        once, evaluate the group's atoms on them, combine (∧/∨), scatter."""
+        atoms = self.last_tape.tree.atoms
+        self.host_fallbacks += 1
+        self._account([atoms[a] for a in op.aids], src.pops, device=False)
+        sw = self._pull_flat(src)
+        mask = unpack_bits(sw, self.n)
+        idx = np.nonzero(mask)[0]
+        acc = None
+        for a in op.aids:
+            hits = self.table.eval_atom(atoms[a], idx)
+            acc = hits if acc is None else (
+                (acc & hits) if op.conj else (acc | hits))
+        out = np.zeros(self.n, dtype=bool)
+        out[idx[acc]] = True
+        self.records_touched += len(idx) * len(op.aids)
+        self.blocks_touched += live_block_count(sw, self.nblocks, self.wpb)
+        return self._from_flat(pack_bits(out))
+
+    # -- whole-tape execution --------------------------------------------------
+    def _tape_bindings(self, tape: PlanTape):
+        """Column arrays, value vector and per-op metadata for ``tape``.
+
+        Returns (cols, values, meta, device_ok) where meta[i] is
+        (col_indices, value_indices, opcodes) for op i (empty for SETOPs)
+        and device_ok[i] says the op can run on device.
+        """
+        atoms = tape.tree.atoms
+        col_ix: Dict[str, int] = {}
+        cols: List[object] = []
+        values: List[float] = []
+        meta: List[Tuple[tuple, tuple, tuple]] = []
+        device_ok: List[bool] = []
+        for op in tape.ops:
+            if op.kind not in (ATOM, CHAIN):
+                meta.append(((), (), ()))
+                device_ok.append(True)
+                continue
+            ok = all(device_atom(atoms[a]) for a in op.aids)
+            bound = []
+            if ok:
+                for a in op.aids:
+                    c = self._col_bitmajor(atoms[a].column)
+                    if c is None:
+                        ok = False
+                        break
+                    bound.append(atoms[a].column)
+            if not ok:
+                meta.append(((), (), ()))
+                device_ok.append(False)
+                continue
+            cixs, vixs, opcodes = [], [], []
+            for a, name in zip(op.aids, bound):
+                if name not in col_ix:
+                    col_ix[name] = len(cols)
+                    cols.append(self._col_bitmajor(name))
+                cixs.append(col_ix[name])
+                vixs.append(len(values))
+                values.append(float(atoms[a].value))
+                opcodes.append(_CMP_OPCODE[atoms[a].op])
+            meta.append((tuple(cixs), tuple(vixs), tuple(opcodes)))
+            device_ok.append(True)
+        return cols, values, meta, device_ok
+
+    def _tape_program(self, tape: PlanTape, meta):
+        """Build (or fetch) the jitted whole-tape program for ``tape``."""
+        import jax
+        key = (tape.key, self.pallas, self.interpret)
+        prog = _TAPE_PROGRAMS.get(key)
+        if prog is not None:
+            _TAPE_PROGRAMS.move_to_end(key)
+            return prog
+        ops = tape.ops
+        result = tape.result
+        n_slots = tape.n_slots
+        pallas, interpret = self.pallas, self.interpret
+
+        def program(cols, values, full_bits, full_pops):
+            import jax.numpy as jnp
+            bits: List[object] = [None] * n_slots
+            pops: List[object] = [None] * n_slots
+            recs, blks = [], []
+            for oi, op in enumerate(ops):
+                if op.kind == FULL:
+                    b, p = full_bits, full_pops
+                elif op.kind == EMPTY:
+                    b = jnp.zeros_like(full_bits)
+                    p = jnp.zeros_like(full_pops)
+                elif op.kind == SETOP:
+                    b, p = _setop_impl(bits[op.a], bits[op.b], op.setop,
+                                       pallas, interpret)
+                else:
+                    cixs, vixs, opcodes = meta[oi]
+                    sb, sp = bits[op.a], pops[op.a]
+                    recs.append(sp.sum())
+                    blks.append((sp > 0).sum())
+                    if op.kind == ATOM:
+                        b, p = _atom_impl(cols[cixs[0]], sb, sp,
+                                          values[vixs[0]], opcodes[0],
+                                          pallas, interpret)
+                    else:
+                        stack = jnp.stack([cols[c] for c in cixs], axis=1)
+                        vals = jnp.stack([values[v] for v in vixs])
+                        b, p = _chain_impl(stack, sb, sp, vals, opcodes,
+                                           op.conj, pallas, interpret)
+                bits[op.dst] = b
+                pops[op.dst] = p
+            rec = (jnp.stack(recs) if recs
+                   else jnp.zeros((0,), dtype=jnp.int32))
+            blk = (jnp.stack(blks) if blks
+                   else jnp.zeros((0,), dtype=jnp.int32))
+            return bits[result], rec, blk
+
+        prog = jax.jit(program)
+        _TAPE_PROGRAMS[key] = prog
+        if len(_TAPE_PROGRAMS) > _TAPE_PROGRAM_CAP:
+            _TAPE_PROGRAMS.popitem(last=False)
+        return prog
+
+    def run_tape(self, tape: PlanTape) -> np.ndarray:
+        """Execute a compiled tape; returns the host packed result bitmap.
+
+        All-device tapes run as ONE jitted dispatch and ONE host sync.
+        Tapes with host-fallback ops (string/UDF atoms, non-numeric
+        columns) run op-by-op with device slots, syncing only at each
+        fallback and at the end.
+        """
+        import jax.numpy as jnp
+        self.last_tape = tape
+        cols, values, meta, device_ok = self._tape_bindings(tape)
+        atoms = tape.tree.atoms
+        full = self.full()
+        if all(device_ok):
+            costed = [op for op in tape.ops if op.kind in (ATOM, CHAIN)]
+            # a K-atom CHAIN evaluates K atoms on all of src's live blocks:
+            # counts scale by K, matching the fused +evaluations trade
+            ks = np.asarray([len(op.aids) for op in costed],
+                            dtype=np.float64)
+            self.stats.atom_applications += int(ks.sum())
+            self.stats.setops += sum(1 for op in tape.ops
+                                     if op.kind == SETOP)
+            prog = self._tape_program(tape, tuple(meta))
+            self.device_dispatches += 1
+            res, rec, blk = prog(tuple(cols),
+                                 jnp.asarray(values, dtype=jnp.float32),
+                                 full.bits, full.pops)
+            import jax
+            self.host_syncs += 1
+            res, rec, blk = jax.device_get(
+                (res.reshape(-1)[: n_words(self.n)], rec, blk))
+            rec = np.asarray(rec, dtype=np.float64)
+            weights = np.asarray([sum(atoms[a].cost_factor
+                                      for a in op.aids) for op in costed])
+            self.stats.records_evaluated += float((rec * ks).sum())
+            self.stats.weighted_cost += float((rec * weights).sum())
+            blk_total = float((np.asarray(blk, dtype=np.float64) * ks).sum())
+            self.blocks_touched += blk_total
+            self.records_touched += blk_total * self.block
+            return np.asarray(res)
+        return self._run_tape_mixed(tape, meta, device_ok)
+
+    def _run_tape_mixed(self, tape: PlanTape, meta, device_ok
+                        ) -> np.ndarray:
+        """Op-by-op tape execution with host fallbacks interleaved."""
+        import jax.numpy as jnp
+        prims = _jitted_prims()
+        slots: List[Optional[_DevSet]] = [None] * tape.n_slots
+        atoms = tape.tree.atoms
+        for oi, op in enumerate(tape.ops):
+            if op.kind == FULL:
+                s = self.full()
+            elif op.kind == EMPTY:
+                s = self.empty()
+            elif op.kind == SETOP:
+                s = self._setop(slots[op.a], slots[op.b], op.setop)
+            else:
+                src = slots[op.a]
+                cixs, vixs, opcodes = meta[oi]
+                if not device_ok[oi]:
+                    s = self._host_atom_group(op, src)
+                else:
+                    self._account([atoms[a] for a in op.aids], src.pops)
+                    cols = [self._col_bitmajor(atoms[a].column)
+                            for a in op.aids]
+                    self.device_dispatches += 1
+                    if op.kind == ATOM:
+                        out, pops = prims["atom"](
+                            cols[0], src.bits, src.pops,
+                            float(atoms[op.aids[0]].value),
+                            opcode=opcodes[0], pallas=self.pallas,
+                            interpret=self.interpret)
+                    else:
+                        stack = jnp.stack(cols, axis=1)
+                        vals = jnp.asarray(
+                            [float(atoms[a].value) for a in op.aids],
+                            dtype=jnp.float32)
+                        out, pops = prims["chain"](
+                            stack, src.bits, src.pops, vals,
+                            opcodes=opcodes, conj=op.conj,
+                            pallas=self.pallas, interpret=self.interpret)
+                    s = _DevSet(out, pops)
+            slots[op.dst] = s
+        return self.materialize([slots[tape.result]])[0]

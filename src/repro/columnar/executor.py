@@ -27,8 +27,8 @@ from ..core.plan import Plan, execute_plan
 from ..core.predicate import Atom, PredicateTree
 from ..core.sets import SetBackend, Stats
 from .bitmap import (WORD, bitmap_and, bitmap_andnot, bitmap_empty,
-                     bitmap_full, bitmap_or, n_words, pack_bits, popcount,
-                     unpack_bits)
+                     bitmap_full, bitmap_or, live_block_count, n_words,
+                     next_pow2, pack_bits, popcount, unpack_bits)
 from .table import Table
 
 _OPCODE = {"lt": 0, "le": 1, "gt": 2, "ge": 3, "eq": 4, "ne": 5}
@@ -129,9 +129,17 @@ class JaxBlockBackend(SetBackend):
         self.engine = engine
         self.stats = Stats()
         self.blocks_touched = 0
+        self.records_touched = 0.0
+        self.kernel_invocations = 0   # fused predicate kernel dispatches
+        self.host_syncs = 0           # device->host transfers (per-step tax)
         self.nblocks = (self.n + block - 1) // block
         self._padded = self.nblocks * block
         self._jcols: Dict[str, "object"] = {}
+        # preallocated padded bitmap scratch, reused across applies (grown
+        # on demand for larger lockstep groups)
+        self._words = np.zeros((1, self.nblocks * (block // WORD)),
+                               dtype=np.uint32)
+        self._uw = np.zeros(self.nblocks * (block // WORD), dtype=np.uint32)
 
     # -- set algebra (host, packed words) -------------------------------------
     def full(self):
@@ -169,6 +177,26 @@ class JaxBlockBackend(SetBackend):
             self._jcols[name] = col
         return col
 
+    def _live_blocks(self, union) -> np.ndarray:
+        """Indices of blocks with any live record in ``union``: per-block
+        popcounts run on device (fused ``bitmap_op`` popcount on the pallas
+        engine, jnp ref otherwise); only the tiny i32[N] vector returns to
+        the host — not the full unpacked bitmap."""
+        import jax.numpy as jnp
+        wpb = self.block // WORD
+        uw = self._uw
+        uw[:] = 0
+        uw[: n_words(self.n)] = union
+        uw2d = jnp.asarray(uw.reshape(self.nblocks, wpb))
+        if self.engine == "pallas":
+            from ..kernels import ops as kops
+            _, pops = kops.bitmap_op(uw2d, uw2d, 0, interpret=True)
+        else:
+            from ..kernels import ref as kref
+            pops = kref.popcount_ref(uw2d)
+        self.host_syncs += 1
+        return np.nonzero(np.asarray(pops) > 0)[0]
+
     def _eval_blocked(self, atom: Atom, ds, union):
         """One column touch: evaluate ``atom`` on the blocks live in
         ``union`` against each packed set in ``ds`` (ds[j] ⊆ union)."""
@@ -176,9 +204,14 @@ class JaxBlockBackend(SetBackend):
         col = self._blocked_column(atom.column) if opcode is not None else None
         if col is None:
             # LIKE/UDF/categorical-string fallback: gather only the union's
-            # records on the host (cost ∝ count(union), the oracle path)
+            # records on the host (cost ∝ count(union), the oracle path).
+            # Accounted identically on both block engines: count(union)
+            # records, block-granular touch count.
             mask = unpack_bits(union, self.n)
             idx = np.nonzero(mask)[0]
+            self.records_touched += len(idx)
+            self.blocks_touched += live_block_count(
+                union, self.nblocks, self.block // WORD)
             hits = self.table.eval_atom(atom, idx)
             out = np.zeros(self.n, dtype=bool)
             out[idx[hits]] = True
@@ -187,24 +220,31 @@ class JaxBlockBackend(SetBackend):
 
         q = len(ds)
         wpb = self.block // WORD
-        words = np.zeros((q, self.nblocks * wpb), dtype=np.uint32)
+        if q > self._words.shape[0]:
+            self._words = np.zeros((q, self.nblocks * wpb), dtype=np.uint32)
+        words = self._words[:q]
+        words[:] = 0
         for j, d in enumerate(ds):
             words[j, : n_words(self.n)] = d
         words3d = words.reshape(q, self.nblocks, wpb)
-        uw = np.zeros(self.nblocks * wpb, dtype=np.uint32)
-        uw[: n_words(self.n)] = union
-        upops = np.unpackbits(uw.reshape(self.nblocks, wpb).view(np.uint8)
-                              .reshape(self.nblocks, -1),
-                              axis=1, bitorder="little").sum(axis=1)
-        live = np.nonzero(upops > 0)[0]
+        live = self._live_blocks(union)
         self.blocks_touched += len(live)
-        out3d = np.zeros_like(words3d)
+        self.records_touched += len(live) * self.block
+        out3d = np.zeros((q, self.nblocks, wpb), dtype=np.uint32)
         if len(live):
             import jax.numpy as jnp
-            col_live = col[live]
+            # pad the live-block batch to a power-of-two bucket: padding
+            # rows carry zero bitmaps (dead, kernels skip them) and the
+            # jitted kernel retraces once per (opcode, bucket) only
+            pb = next_pow2(len(live))
+            lpad = np.zeros(pb, dtype=np.int64)
+            lpad[: len(live)] = live
+            col_live = col[lpad]
             value = float(atom.value)
             if q == 1:
-                bits_live = jnp.asarray(words3d[0, live, :])
+                bits_live = np.zeros((pb, wpb), dtype=np.uint32)
+                bits_live[: len(live)] = words3d[0, live, :]
+                bits_live = jnp.asarray(bits_live)
                 if self.engine == "pallas":
                     from ..kernels import ops as kops
                     res = kops.predicate_blocks(col_live, bits_live, value,
@@ -213,9 +253,13 @@ class JaxBlockBackend(SetBackend):
                     from ..kernels import ref as kref
                     res = kref.predicate_blocks_ref(col_live, bits_live,
                                                     value, opcode)
-                out3d[0, live, :] = np.asarray(res)
+                self.kernel_invocations += 1
+                self.host_syncs += 1
+                out3d[0, live, :] = np.asarray(res)[: len(live)]
             else:
-                bits_live = jnp.asarray(words3d[:, live, :])
+                bits_live = np.zeros((q, pb, wpb), dtype=np.uint32)
+                bits_live[:, : len(live)] = words3d[:, live, :]
+                bits_live = jnp.asarray(bits_live)
                 if self.engine == "pallas":
                     from ..kernels import ops as kops
                     res = kops.predicate_blocks_multi(col_live, bits_live,
@@ -225,7 +269,11 @@ class JaxBlockBackend(SetBackend):
                     from ..kernels import ref as kref
                     res = kref.predicate_blocks_multi_ref(col_live, bits_live,
                                                           value, opcode)
-                out3d[:, live, :] = np.asarray(res)
+                self.kernel_invocations += 1
+                self.host_syncs += 1
+                out3d[:, live, :] = np.asarray(res)[:, : len(live)]
+        # copy: results escape into Xi/Delta maps and caches — a view would
+        # pin the whole (q, nblocks, wpb) buffer per retained bitmap
         return [out3d[j].reshape(-1)[: n_words(self.n)].copy()
                 for j in range(q)]
 
@@ -253,17 +301,44 @@ class JaxBlockBackend(SetBackend):
 
 
 def run_query(tree: PredicateTree, table: Table, planner: str = "shallowfish",
-              engine: str = "numpy", model=None) -> tuple:
-    """Plan + execute; returns (record bitmap, plan, backend-with-stats)."""
+              engine: str = "numpy", model=None, backend=None) -> tuple:
+    """Plan + execute; returns (record bitmap, plan, backend-with-stats).
+
+    Engines: ``numpy`` (oracle), ``jax`` / ``pallas`` (per-step block
+    engine), ``tape`` / ``tape-pallas`` (plan compiled to a device tape and
+    executed as one device program with a single host sync — see
+    ``core.tape`` / ``columnar.device``).  ``backend`` optionally reuses an
+    existing engine backend (keeps device-resident columns warm across
+    calls); it must match ``engine``.
+    """
     from ..core import deepfish, nooropt, optimal_plan, shallowfish
     from ..core.cost import PerAtomCostModel
     model = model or PerAtomCostModel()
     planners = {"shallowfish": shallowfish, "deepfish": deepfish,
                 "optimal": optimal_plan, "nooropt": nooropt}
     plan = planners[planner](tree, model, total_records=table.n_records)
+    if backend is not None and backend.table is not table:
+        raise ValueError("backend was built for a different table")
+    if engine in ("tape", "tape-pallas"):
+        from ..core.tape import compile_tape
+        from .device import DeviceTapeBackend
+        if backend is not None and not isinstance(backend,
+                                                  DeviceTapeBackend):
+            raise ValueError(f"engine {engine!r} needs a DeviceTapeBackend")
+        be = backend or DeviceTapeBackend(
+            table, kernels="pallas" if engine == "tape-pallas" else "jax")
+        result = be.run_tape(compile_tape(plan))
+        return result, plan, be
     if engine == "numpy":
-        be = BitmapBackend(table)
+        if backend is not None and not isinstance(backend, BitmapBackend):
+            raise ValueError("engine 'numpy' needs a BitmapBackend")
+        be = backend or BitmapBackend(table)
     else:
-        be = JaxBlockBackend(table, engine=engine)
+        if backend is not None and not (
+                isinstance(backend, JaxBlockBackend)
+                and backend.engine == engine):
+            raise ValueError(f"engine {engine!r} needs a matching "
+                             "JaxBlockBackend")
+        be = backend or JaxBlockBackend(table, engine=engine)
     result = execute_plan(plan, be)
     return result, plan, be

@@ -174,21 +174,25 @@ class BatchResult:
 
 
 class _SharedAtomBackend(SetBackend):
-    """Wraps an engine backend with a batch-scoped atom-result cache.
+    """Wraps an engine backend with an atom-result cache.
 
     Atoms whose key is in ``shared_keys`` are evaluated once on the full
     table; every application then reduces to a set-AND against the cached
     bitmap.  Exclusive atoms pass straight through to the engine's
     count(D) path.  Set algebra delegates to the engine unchanged, so the
     wrapper plugs into every existing executor.
+
+    ``cache`` may be a session-owned dict that outlives the batch
+    (cross-batch result reuse); entries cached in an earlier batch hit even
+    for atoms below this batch's share threshold.
     """
 
     def __init__(self, inner: SetBackend, shared_keys: set,
-                 bstats: BatchStats):
+                 bstats: BatchStats, cache: Optional[Dict] = None):
         self.inner = inner
         self.shared_keys = shared_keys
         self.bstats = bstats
-        self.cache: Dict[tuple, object] = {}
+        self.cache: Dict[tuple, object] = {} if cache is None else cache
         self.stats = inner.stats      # executors introspect .stats
 
     def full(self):
@@ -238,25 +242,41 @@ class QuerySession:
     table:            the columnar table every query in a batch targets
     planner:          shallowfish | deepfish | optimal | nooropt | auto
                       (auto = shallowfish for depth <= 2, else deepfish)
-    engine:           numpy | jax | pallas (pallas runs interpret on CPU)
+    engine:           numpy | jax | pallas | tape | tape-pallas.  The block
+                      engines (jax/pallas) run one fused kernel per step
+                      with host-resident bitmaps; the tape engines keep
+                      every bitmap device-resident
+                      (:class:`~repro.columnar.device.DeviceTapeBackend`):
+                      by default each plan compiles to a
+                      :class:`~repro.core.tape.PlanTape` executed as ONE
+                      device program with one host sync per query, while
+                      ``batched=True`` instead drives the lockstep executor
+                      over device sets (fused multi-query atom kernels, one
+                      bundled host sync per batch).
     plan_cache:       an :class:`LRUPlanCache`; persists across ``execute``
                       calls (and may be shared between sessions)
     share_threshold:  min queries an atom key must appear in to get the
                       full-table shared evaluation (default 2)
-    batched:          True = lockstep multi-bitmap execution, False =
-                      sequential per-query execution, "auto" = lockstep on
-                      the block engines only
+    batched:          True = lockstep multi-bitmap execution (device-
+                      resident on the tape engines), False = sequential
+                      per-query execution, "auto" = lockstep on jax/pallas,
+                      per-query compiled tapes on the tape engines
+    persist_atom_cache: keep shared-atom results across ``execute`` calls,
+                      invalidated when ``table.version`` moves (any
+                      ``set_column`` write)
     """
+
+    _ENGINES = ("numpy", "jax", "pallas", "tape", "tape-pallas")
 
     def __init__(self, table: Table, planner: str = "shallowfish",
                  engine: str = "numpy", model: Optional[CostModel] = None,
                  plan_cache: Optional[LRUPlanCache] = None,
                  share_threshold: int = 2,
                  batched: Union[bool, str] = "auto", block: int = 8192,
-                 annotate: bool = True):
+                 annotate: bool = True, persist_atom_cache: bool = True):
         if planner not in ("auto",) + tuple(_PLANNERS):
             raise ValueError(f"unknown planner {planner!r}")
-        if engine not in ("numpy", "jax", "pallas"):
+        if engine not in self._ENGINES:
             raise ValueError(f"unknown engine {engine!r}")
         self.table = table
         self.planner = planner
@@ -268,14 +288,42 @@ class QuerySession:
         self.batched = batched
         self.block = block
         self.annotate = annotate
+        self.persist_atom_cache = persist_atom_cache
         self.last_result: Optional[BatchResult] = None
+        self._atom_cache: Dict[tuple, object] = {}
+        self._cache_version = self._table_fingerprint()
+        self._backend: Optional[SetBackend] = None
+        self._backend_version: Optional[tuple] = None
 
     # -- helpers --------------------------------------------------------------
+    def _table_fingerprint(self) -> tuple:
+        """Write detector for the session's caches: the ``version`` counter
+        (``set_column`` writes) plus column-array identities, so the
+        ``table.columns[name] = arr`` rebinding idiom also invalidates.
+        In-place element writes (``table[name][:] = v``) are not detectable
+        — use :meth:`Table.set_column` for those."""
+        return (self.table.version,
+                tuple((k, id(v)) for k, v in self.table.columns.items()))
+
     def _make_backend(self) -> SetBackend:
         if self.engine == "numpy":
             return BitmapBackend(self.table)
-        return JaxBlockBackend(self.table, block=self.block,
-                               engine=self.engine)
+        # the block/device engines hold uploaded columns: reuse one backend
+        # across batches until a table write invalidates it
+        fp = self._table_fingerprint()
+        if self._backend is not None and self._backend_version == fp:
+            return self._backend
+        if self.engine in ("tape", "tape-pallas"):
+            from .device import DeviceTapeBackend
+            be = DeviceTapeBackend(
+                self.table, block=self.block,
+                kernels="pallas" if self.engine == "tape-pallas" else "jax")
+        else:
+            be = JaxBlockBackend(self.table, block=self.block,
+                                 engine=self.engine)
+        self._backend = be
+        self._backend_version = fp
+        return be
 
     def _resolve_planner(self, tree: PredicateTree) -> str:
         if self.planner == "auto":
@@ -316,15 +364,38 @@ class QuerySession:
         shared = {k for k, c in census.items() if c >= self.share_threshold}
         stats.shared_atom_keys = len(shared)
 
+        # cross-batch atom-result reuse: results persist across execute()
+        # calls until a table write is detected
+        if self._table_fingerprint() != self._cache_version:
+            self._atom_cache.clear()
+            self._cache_version = self._table_fingerprint()
         inner = self._make_backend()
-        sb = _SharedAtomBackend(inner, shared, stats)
+        sb = _SharedAtomBackend(
+            inner, shared, stats,
+            cache=self._atom_cache if self.persist_atom_cache else None)
         base_applications = inner.stats.atom_applications
+        # "auto": lockstep for the per-step block engines (their win is the
+        # fused multi-query kernel); compiled whole-plan tapes for the
+        # device engines (their win is one dispatch + one sync per query).
+        # batched=True forces device-resident lockstep on any block engine.
+        tape_engine = self.engine in ("tape", "tape-pallas")
         lockstep = (self.batched is True
-                    or (self.batched == "auto" and self.engine != "numpy"))
+                    or (self.batched == "auto"
+                        and self.engine in ("jax", "pallas")))
         if lockstep and all(p.planner in _ORDERED for p in plans):
             bitmaps = self._execute_lockstep(trees, plans, sb, stats)
+        elif tape_engine:
+            # one compiled device program per query: plan-cache hits reuse
+            # jitted programs (no cross-query atom sharing on this path)
+            from ..core.tape import compile_tape
+            bitmaps = [inner.run_tape(compile_tape(p)) for p in plans]
+            stats.logical_atoms += sum(len(p.tree.atoms) for p in plans)
         else:
             bitmaps = [execute_plan(p, sb) for p in plans]
+        if hasattr(inner, "materialize") and bitmaps and not isinstance(
+                bitmaps[0], np.ndarray):
+            # device engines: ONE bundled host sync for the whole batch
+            bitmaps = inner.materialize(bitmaps)
         stats.physical_atoms = (inner.stats.atom_applications
                                 - base_applications)
         result = BatchResult(bitmaps=bitmaps, plans=plans, stats=stats,

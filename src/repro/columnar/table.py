@@ -25,7 +25,13 @@ class ColumnStats:
 
 
 class Table:
-    """Dict of equal-length columns + stats + predicate-atom evaluation."""
+    """Dict of equal-length columns + stats + predicate-atom evaluation.
+
+    Write through :meth:`set_column` — it bumps ``version`` so session
+    caches (shared atom results, device-resident column uploads)
+    invalidate.  Rebinding ``table.columns[name]`` is also detected (array
+    identity), but *in-place* element writes to a column array are not.
+    """
 
     def __init__(self, columns: Dict[str, np.ndarray]):
         if not columns:
@@ -36,9 +42,24 @@ class Table:
         self.columns = columns
         self.n_records = lens.pop()
         self._stats: Dict[str, ColumnStats] = {}
+        # monotonically increasing write counter: caches keyed on table
+        # contents (atom-result caches, device-resident column uploads)
+        # invalidate when it moves
+        self.version = 0
 
     def __getitem__(self, name: str) -> np.ndarray:
         return self.columns[name]
+
+    def set_column(self, name: str, values: np.ndarray) -> None:
+        """Add or overwrite a column (a *write*: bumps ``version`` so
+        dependent caches — shared atom results, uploaded device columns —
+        invalidate)."""
+        values = np.asarray(values)
+        if len(values) != self.n_records:
+            raise ValueError("column length mismatch")
+        self.columns[name] = values
+        self._stats.pop(name, None)
+        self.version += 1
 
     @property
     def column_names(self):

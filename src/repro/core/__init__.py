@@ -6,6 +6,7 @@ Public API:
     shallowfish / deepfish / optimal_plan / nooropt — planners -> Plan
     execute_plan                       — run a Plan on any SetBackend
     BestDMachine                       — Algorithms 1+2 (BestD + Update)
+    compile_tape / PlanTape            — plan -> static device-executable tape
 """
 from .predicate import (Atom, And, Or, Not, Node, PredicateTree, normalize,
                         tree_copy, atom_key, canonical_key)
@@ -20,6 +21,7 @@ from .shallowfish import shallowfish, shallowfish_execute
 from .deepfish import deepfish, one_lookahead_order
 from .optimal import optimal_plan, optimal_bruteforce
 from .nooropt import nooropt, nooropt_execute
+from .tape import PlanTape, TapeOp, compile_tape
 
 __all__ = [
     "Atom", "And", "Or", "Not", "Node", "PredicateTree", "normalize", "tree_copy",
@@ -34,4 +36,5 @@ __all__ = [
     "deepfish", "one_lookahead_order",
     "optimal_plan", "optimal_bruteforce",
     "nooropt", "nooropt_execute",
+    "PlanTape", "TapeOp", "compile_tape",
 ]

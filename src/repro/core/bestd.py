@@ -102,8 +102,53 @@ class BestDMachine:
 
         applied2 = self.applied | {aid}
         lineage = tree.lineage(aid)
-        inner = lineage[:-1]
-        for j in range(len(inner) - 1, -1, -1):
+        self._update_ancestors(aid, len(lineage) - 2, applied2)
+        self.applied = applied2
+        return d_i, sat
+
+    def absorb_chain(self, node: Node, aids: Sequence[int], d_i, sat):
+        """Record a *fused* application of a whole sibling-atom group.
+
+        ``node`` must be an inner node whose children are exactly the atoms
+        ``aids``, none previously applied, and ``sat`` the result of
+        evaluating the AND/OR of the group on ``d_i`` (one fused chain
+        scan).  Because every lineage outside the group passes through
+        ``node``'s parent — never through an individual group atom — Update
+        only ever needs the node-level Xi / Delta maps, which follow in
+        closed form from the chain result:
+
+          Xi[node]  = sat             Delta+[node] = sat
+          Delta-[node] = d_i \\ sat
+
+        (For AND the per-atom sats telescope to their intersection == sat;
+        for OR the bypass pieces union to sat and the Delta- sets intersect
+        to d_i \\ sat.)  Ancestors above ``node`` then update exactly as in
+        :meth:`finish_step`.
+        """
+        tree, be = self.tree, self.backend
+        aids = list(aids)
+        if set(a.aid for a in node.children) != set(aids):
+            raise ValueError("absorb_chain: aids must be exactly the "
+                             "children of node")
+        self.step_sets.append(d_i)
+        self.order.extend(aids)
+        self.xi[id(node)] = sat
+        self.dplus[id(node)] = sat
+        self.dminus[id(node)] = be.diff(d_i, sat)
+        applied2 = self.applied | set(aids)
+        lineage = tree.lineage(aids[-1])
+        # lineage = [root, ..., node, atom]; node sits at position -2, so
+        # ancestor updates start one level above it
+        self._update_ancestors(aids[-1], len(lineage) - 3, applied2)
+        self.applied = applied2
+        return d_i, sat
+
+    def _update_ancestors(self, aid: int, start_j: int, applied2: frozenset):
+        """Update's upward sweep: refresh Xi / Delta+ / Delta- for the inner
+        lineage nodes of atom ``aid`` from position ``start_j`` to the root."""
+        tree, be = self.tree, self.backend
+        inner = tree.lineage(aid)[:-1]
+        for j in range(start_j, -1, -1):
             node = inner[j]
             z = self.bestd_region(aid, j)
             is_and = isinstance(node, And)
@@ -138,8 +183,6 @@ class BestDMachine:
                         acc = v if acc is None else be.inter(acc, v)
                 if acc is not None:
                     self.dminus[id(node)] = be.inter(acc, z)
-        self.applied = applied2
-        return d_i, sat
 
     def run(self, order: Sequence[int]):
         """Execute a full ordering; return Xi[root] (== psi*(D), Thm 4)."""

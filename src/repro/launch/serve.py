@@ -15,6 +15,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--engine", default="numpy",
+                    choices=["numpy", "jax", "pallas", "tape", "tape-pallas"],
+                    help="predicate-router engine (tape = device-resident)")
     args = ap.parse_args()
 
     from ..configs import get_config, get_smoke
@@ -38,7 +41,7 @@ def main():
         Atom("tier", "eq", 2) & Atom("flagged", "eq", 0),        # fast lane
         Atom("prompt_tokens", "lt", 1024) & Atom("flagged", "eq", 0),  # small
     ]
-    router = RequestRouter(rules)
+    router = RequestRouter(rules, engine=args.engine)
     routes = router.route(requests)
     for name, mask in zip(("admit", "fast", "small"), routes):
         print(f"rule {name:<6s}: {mask.sum()}/{n_req}")

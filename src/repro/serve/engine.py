@@ -39,6 +39,10 @@ class RequestRouter:
     def __init__(self, exprs, planner: str = "auto", engine: str = "numpy",
                  plan_cache: Optional[LRUPlanCache] = None,
                  share_threshold: int = 2):
+        """``engine`` accepts every :class:`QuerySession` engine; with
+        ``"tape"`` the rule set runs device-resident — the power-of-two
+        shape bucketing in the device backend means routers seeing
+        drifting batch sizes reuse compiled kernels across calls."""
         if isinstance(exprs, Node):
             exprs = [exprs]
         self.exprs = list(exprs)

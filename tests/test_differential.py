@@ -59,9 +59,30 @@ def test_pallas_engine_matches_oracle(forest, planner):
         np.testing.assert_array_equal(res, want, err_msg=f"seed={seed}")
 
 
+@pytest.mark.parametrize("planner", PLANNERS)
+def test_tape_engine_matches_oracle(forest, planner):
+    """Compiled-tape device engine (one jitted program per query) vs the
+    full-scan oracle, across every planner."""
+    for seed, tree in seeded_trees(forest, range(2)):
+        res, _, be = run_query(tree, forest, planner=planner, engine="tape")
+        want = pack_bits(oracle_mask(forest, tree.root))
+        np.testing.assert_array_equal(res, want, err_msg=f"seed={seed}")
+        assert be.host_syncs == 1       # the one-sync-per-query contract
+
+
+def test_tape_pallas_engine_matches_oracle(forest):
+    for seed, tree in seeded_trees(forest, range(1)):
+        res, _, _ = run_query(tree, forest, planner="deepfish",
+                              engine="tape-pallas")
+        want = pack_bits(oracle_mask(forest, tree.root))
+        np.testing.assert_array_equal(res, want, err_msg=f"seed={seed}")
+
+
 @pytest.mark.parametrize("engine,batched", [("numpy", False),
                                             ("numpy", True),
-                                            ("jax", True)])
+                                            ("jax", True),
+                                            ("tape", True),
+                                            ("tape", False)])
 def test_query_session_matches_oracle(forest, engine, batched):
     trees = [t for _, t in seeded_trees(forest, range(5))]
     trees += trees[:2]                      # repeats: exercise the plan cache

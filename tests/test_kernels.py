@@ -101,6 +101,55 @@ def test_fused_chain_ref():
     np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.parametrize("n,w", [(2, 16), (4, 64)])
+@pytest.mark.parametrize("opcode", [0, 1, 2])
+def test_bitmap_setop_kernel_direct(n, w, opcode):
+    """bitmap_setop itself (not the jitted wrapper): result + fused pops."""
+    from repro.kernels.bitmap_ops import bitmap_setop
+    rng = np.random.default_rng(10 * n + opcode)
+    a = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    b = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    out, pops = bitmap_setop(jnp.asarray(a), jnp.asarray(b), opcode,
+                             interpret=True)
+    ref_fn = [kref.bitmap_and_ref, kref.bitmap_or_ref,
+              kref.bitmap_andnot_ref][opcode]
+    want = np.asarray(ref_fn(a, b))
+    np.testing.assert_array_equal(np.asarray(out), want)
+    assert pops.shape == (n, 1)
+    want_pops = [popcount(row) for row in want]
+    np.testing.assert_array_equal(np.asarray(pops)[:, 0], want_pops)
+
+
+@pytest.mark.parametrize("n,w,k", [(2, 16, 2), (3, 8, 4)])
+@pytest.mark.parametrize("conj", [True, False])
+def test_fused_chain_scan_kernel_direct(n, w, k, conj):
+    """fused_chain_scan itself, pre-layouted bit-major inputs + prefetch
+    pops (incl. a dead block exercising the pl.when skip)."""
+    from repro.kernels.fused_chain import fused_chain_scan
+    rng = np.random.default_rng(n * 7 + k)
+    cols_bm = rng.normal(size=(n, k, 32, w)).astype(np.float32)
+    bits = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    if n > 1:
+        bits[-1] = 0
+    pops = np.asarray(kref.popcount_ref(jnp.asarray(bits)), dtype=np.int32)
+    vals = rng.normal(size=(k,)).astype(np.float32)
+    opcodes = tuple(int(rng.integers(0, 6)) for _ in range(k))
+    got = np.asarray(fused_chain_scan(
+        jnp.asarray(cols_bm), jnp.asarray(bits), jnp.asarray(pops),
+        jnp.asarray(vals), opcodes, conj=conj, interpret=True))
+    # oracle on the same bit-major layout
+    acc = None
+    for i, op in enumerate(opcodes):
+        cmp = np.asarray(kref.compare(jnp.asarray(cols_bm[:, i]),
+                                      vals[i], op))
+        acc = cmp if acc is None else (acc & cmp if conj else acc | cmp)
+    bitpos = np.arange(32, dtype=np.uint32)[None, :, None]
+    in_set = ((bits[:, None, :] >> bitpos) & 1).astype(bool)
+    want = ((acc & in_set).astype(np.uint32) << bitpos).sum(
+        axis=1, dtype=np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
 @pytest.mark.parametrize("n,b,k", [(2, 512, 2), (3, 1024, 3), (1, 256, 4)])
 @pytest.mark.parametrize("conj", [True, False])
 def test_fused_chain_kernel_matches_ref(n, b, k, conj):
