@@ -1,14 +1,34 @@
-# One-command entry points for the tier-1 verify and a quick benchmark smoke.
+# One-command entry points mirroring the CI workflow (.github/workflows/ci.yml).
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke
+.PHONY: test lint bench-smoke ci
 
 # tier-1 verify (ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
 
+# same check as the CI lint job (skipped with a warning if ruff is absent —
+# CI installs it; the container image may not have it)
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check .; \
+	elif $(PY) -c "import ruff" >/dev/null 2>&1; then \
+		$(PY) -m ruff check .; \
+	else \
+		echo "WARNING: ruff not installed; skipping lint (CI runs it)"; \
+	fi
+
+# the CI benchmark steps: both smokes + the regression gate against the
+# committed BENCH_device.json baseline
 bench-smoke:
 	$(PY) benchmarks/bench_multiquery.py --queries 48 --templates 6 \
-		--rows 20000 --repeats 1
-	$(PY) benchmarks/bench_device.py --smoke
+		--rows 20000 --repeats 1 --out BENCH_multiquery.fresh.json
+	$(PY) benchmarks/bench_device.py --smoke --out BENCH_device.fresh.json
+	$(PY) benchmarks/check_regression.py \
+		--fresh-device BENCH_device.fresh.json \
+		--baseline-device BENCH_device.json \
+		--fresh-multiquery BENCH_multiquery.fresh.json
+
+# everything CI runs, in CI order: lint -> tests -> bench smokes -> gate
+ci: lint test bench-smoke

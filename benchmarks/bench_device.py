@@ -7,14 +7,22 @@ bitmaps device-resident, ONE host sync per query) against the per-step
 ``JaxBlockBackend`` (``engine="jax"``: one kernel dispatch + host bitmap
 round-trip per plan step) on
 
-* a single 16-atom mixed AND/OR tree over ``--rows`` records, and
+* a single 16-atom mixed AND/OR tree over ``--rows`` records,
 * a ``--batch``-query serving-shaped workload through ``QuerySession``
-  (device-resident lockstep vs host-resident lockstep),
+  (device-resident lockstep vs host-resident lockstep), and
+* a dict-string workload (``strings`` section): a mixed 16-atom AND/OR tree
+  with ~30% string atoms (equality / IN / prefix-LIKE / sort-order range)
+  over a table with string attributes — the paper's showcase shape that PR 2
+  could only run with one host fallback per string atom.  The
+  dictionary-code rewrite keeps it ONE device program / ONE sync
+  (``host_fallbacks == 0``); the unrewritten fallback path is timed
+  alongside as ``norewrite_*`` for reference.
 
 plus a differential sweep asserting the two engines produce bit-identical
 bitmaps.  Wall-clock is best-of ``--repeats`` after a warmup run (the tape
 engine's compile cost is reported separately as ``tape_cold_ms``).  Writes
-``BENCH_device.json``.
+``BENCH_device.json`` (``--out``), which doubles as the committed baseline
+for the CI regression gate (``benchmarks/check_regression.py``).
 
     PYTHONPATH=src python benchmarks/bench_device.py --rows 1000000
     PYTHONPATH=src python benchmarks/bench_device.py --smoke   # CI
@@ -27,10 +35,12 @@ import time
 
 import numpy as np
 
-from repro.columnar import (DeviceTapeBackend, JaxBlockBackend, QuerySession,
-                            make_forest_table, random_tree, run_query)
+from repro.columnar import (BitmapBackend, DeviceTapeBackend, JaxBlockBackend,
+                            QuerySession, make_forest_table, random_tree,
+                            rewrite_string_atoms, run_query)
 from repro.columnar.table import annotate_selectivities
 from repro.core import PerAtomCostModel, compile_tape, deepfish, execute_plan
+from repro.core.predicate import And, Atom, Or, normalize
 from repro.core.tape import ATOM, CHAIN
 
 
@@ -60,6 +70,7 @@ def bench_single(table, tree, repeats: int, block: int) -> dict:
     res = tape_be.run_tape(tape)                     # cold: compile included
     cold_ms = (time.perf_counter() - t0) * 1e3
     tape_be.device_dispatches = tape_be.host_syncs = 0
+    tape_be.host_fallbacks = 0
     res = tape_be.run_tape(tape)
     tape_dispatches, tape_syncs = (tape_be.device_dispatches,
                                    tape_be.host_syncs)
@@ -78,7 +89,100 @@ def bench_single(table, tree, repeats: int, block: int) -> dict:
         "jax_host_syncs": jax_syncs,
         "tape_device_dispatches": tape_dispatches,
         "tape_host_syncs_per_query": tape_syncs,
+        "host_fallbacks": tape_be.host_fallbacks,
         "identical": identical,
+    }
+
+
+def _string_workload_tree(table):
+    """Mixed 16-atom AND/OR tree, 5/16 string atoms (eq / IN / prefix-LIKE /
+    sort-order range) — the CH-benchmark-style disjunctive showcase."""
+    def num(col, g):
+        return Atom(col, "lt", table.value_at_selectivity(col, g),
+                    selectivity=g)
+    return normalize(Or([
+        And([num("elevation_0", 0.4), num("slope_0", 0.5),
+             Atom("cover_0", "eq", "spruce"),
+             num("h_dist_road_0", 0.6)]),
+        And([Atom("district_0", "in",
+                  ("district_03", "district_04", "district_05")),
+             num("hillshade_9am_0", 0.7), num("aspect_0", 0.5)]),
+        And([num("h_dist_hydro_0", 0.3), Atom("cover_0", "like", "p%"),
+             num("hillshade_noon_0", 0.6), num("v_dist_hydro_0", 0.5)]),
+        And([Atom("district_0", "ge", "district_12"),
+             Atom("cover_0", "in", ("fir", "hemlock", "larch", "oak")),
+             num("hillshade_3pm_0", 0.5), num("h_dist_fire_0", 0.4),
+             num("elevation_0", 0.7)]),
+    ]))
+
+
+def bench_strings(table, repeats: int, block: int) -> dict:
+    """Dict-string workload: the rewritten one-device-program path (tape)
+    vs the per-step block engine (jax, also rewritten) vs the PR 2
+    fallback path (tape without the rewrite, one host sync per string
+    atom).  Ground truth is the numpy oracle on the ORIGINAL tree."""
+    model = PerAtomCostModel()
+    tree = _string_workload_tree(table)
+    annotate_selectivities(tree, table)
+    n_strings = sum(1 for a in tree.atoms
+                    if not np.issubdtype(table.columns[a.column].dtype,
+                                         np.number))
+    oracle = execute_plan(deepfish(tree, model,
+                                   total_records=table.n_records),
+                          BitmapBackend(table))
+
+    rtree = rewrite_string_atoms(tree, table)
+    rplan = deepfish(rtree, model, total_records=table.n_records)
+
+    jax_be = JaxBlockBackend(table, block=block, engine="jax")
+    execute_plan(rplan, jax_be)                      # warm column uploads
+    jax_be.host_syncs = 0
+    r_jax = execute_plan(rplan, jax_be)
+    jax_syncs = jax_be.host_syncs
+    jax_ms = _best_of(lambda: execute_plan(rplan, jax_be), repeats) * 1e3
+
+    tape = compile_tape(rplan)
+    tape_be = DeviceTapeBackend(table, block=block)
+    t0 = time.perf_counter()
+    tape_be.run_tape(tape)                           # cold: compile included
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    tape_be.device_dispatches = tape_be.host_syncs = 0
+    tape_be.host_fallbacks = 0
+    r_tape = tape_be.run_tape(tape)
+    dispatches, syncs = tape_be.device_dispatches, tape_be.host_syncs
+    fallbacks = tape_be.host_fallbacks
+    tape_ms = _best_of(lambda: tape_be.run_tape(tape), repeats) * 1e3
+
+    # reference: the unrewritten PR 2 path (host gather per string atom)
+    plan0 = deepfish(tree, model, total_records=table.n_records)
+    tape0 = compile_tape(plan0)
+    nr_be = DeviceTapeBackend(table, block=block)
+    nr_be.run_tape(tape0)
+    nr_be.host_syncs = nr_be.host_fallbacks = 0
+    r_nr = nr_be.run_tape(tape0)
+    nr_syncs, nr_fallbacks = nr_be.host_syncs, nr_be.host_fallbacks
+    nr_ms = _best_of(lambda: nr_be.run_tape(tape0), repeats) * 1e3
+
+    return {
+        "atoms": tree.n,
+        "string_atoms": n_strings,
+        "tape_ops": len(tape.ops),
+        "jax_ms": round(jax_ms, 3),
+        "tape_ms": round(tape_ms, 3),
+        "tape_cold_ms": round(cold_ms, 3),
+        "norewrite_tape_ms": round(nr_ms, 3),
+        "speedup": round(jax_ms / tape_ms, 2) if tape_ms else float("inf"),
+        "norewrite_speedup": round(nr_ms / tape_ms, 2) if tape_ms
+        else float("inf"),
+        "jax_host_syncs": jax_syncs,
+        "tape_device_dispatches": dispatches,
+        "tape_host_syncs_per_query": syncs,
+        "host_fallbacks": fallbacks,
+        "norewrite_host_syncs": nr_syncs,
+        "norewrite_host_fallbacks": nr_fallbacks,
+        "identical": bool(np.array_equal(r_tape, oracle)
+                          and np.array_equal(r_jax, oracle)
+                          and np.array_equal(r_nr, oracle)),
     }
 
 
@@ -153,11 +257,17 @@ def main():
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--diff-seeds", type=int, default=6)
     ap.add_argument("--out", default="BENCH_device.json")
+    ap.add_argument("--strings", dest="strings", action="store_true",
+                    default=True,
+                    help="run the dict-string workload (default: on)")
+    ap.add_argument("--no-strings", dest="strings", action="store_false")
     ap.add_argument("--smoke", action="store_true",
                     help="CI preset: small table, tiny batch")
     args = ap.parse_args()
     if args.smoke:
-        args.rows, args.batch, args.repeats = 50_000, 8, 1
+        # best-of-2 repeats: a single measurement of the small batch is too
+        # noisy for the CI regression gate's speedup floors
+        args.rows, args.batch, args.repeats = 50_000, 8, 2
         args.templates, args.diff_seeds = 2, 2
 
     table = make_forest_table(args.rows, n_dup=2, seed=7)
@@ -187,6 +297,24 @@ def main():
           f"({batch['tape_lockstep_host_syncs_per_batch']} sync)  ->  "
           f"{batch['speedup']:.2f}x  identical={batch['identical']}")
 
+    strings = None
+    if args.strings:
+        strings_table = make_forest_table(args.rows, n_dup=1, seed=13,
+                                          strings=True)
+        strings = bench_strings(strings_table, args.repeats, args.block)
+        print(f"strings ({strings['string_atoms']}/{strings['atoms']} string "
+              f"atoms): jax {strings['jax_ms']:.1f} ms  vs  tape "
+              f"{strings['tape_ms']:.1f} ms "
+              f"({strings['tape_device_dispatches']} dispatch, "
+              f"{strings['tape_host_syncs_per_query']} sync, "
+              f"{strings['host_fallbacks']} fallbacks)  vs  no-rewrite "
+              f"{strings['norewrite_tape_ms']:.1f} ms "
+              f"({strings['norewrite_host_syncs']} syncs, "
+              f"{strings['norewrite_host_fallbacks']} fallbacks)  ->  "
+              f"{strings['speedup']:.2f}x / "
+              f"{strings['norewrite_speedup']:.2f}x "
+              f"identical={strings['identical']}")
+
     diff = bench_differential(table, args.diff_seeds, args.block)
     print(f"differential sweep: {diff['seeds']} seeds, "
           f"{diff['mismatches']} mismatches")
@@ -199,16 +327,28 @@ def main():
         "differential": diff,
         "acceptance": {
             "bit_identical": bool(single["identical"] and batch["identical"]
-                                  and diff["identical"]),
+                                  and diff["identical"]
+                                  and (strings is None
+                                       or strings["identical"])),
             "single_speedup_ge_2x": bool(single["speedup"] >= 2.0),
             "tape_host_syncs_per_query": single["tape_host_syncs_per_query"],
         },
     }
+    if strings is not None:
+        report["strings"] = strings
+        report["acceptance"]["strings_one_device_program"] = bool(
+            strings["tape_device_dispatches"] == 1
+            and strings["tape_host_syncs_per_query"] == 1
+            and strings["host_fallbacks"] == 0)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {args.out}")
     if not report["acceptance"]["bit_identical"]:
         raise SystemExit("FAIL: tape engine diverged from JaxBlockBackend")
+    if strings is not None and not report["acceptance"][
+            "strings_one_device_program"]:
+        raise SystemExit("FAIL: dict-string workload left the one-sync "
+                         "device path")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ asserts the batched bitmaps are bit-identical to the per-query ones.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -48,6 +49,9 @@ def main():
     ap.add_argument("--repeats", type=int, default=3,
                     help="batches per run (plan cache persists across them)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write a machine-readable JSON report (consumed by "
+                         "benchmarks/check_regression.py)")
     args = ap.parse_args()
 
     table = make_forest_table(args.rows, n_dup=2, seed=7)
@@ -88,6 +92,22 @@ def main():
     print(f"wall-clock            : batch {best_s * 1e3:.1f} ms vs "
           f"independent {base_s * 1e3:.1f} ms "
           f"({base_s / best_s:.2f}x)")
+    if args.out:
+        report = {
+            "rows": table.n_records,
+            "queries": args.queries,
+            "engine": args.engine,
+            "planner": args.planner,
+            "identical": bad == 0,
+            "plan_hit_rate": round(st.plan_hit_rate, 4),
+            "dedupe_ratio": round(st.dedupe_ratio, 4),
+            "batch_ms": round(best_s * 1e3, 3),
+            "independent_ms": round(base_s * 1e3, 3),
+            "speedup": round(base_s / best_s, 3) if best_s else float("inf"),
+        }
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.out}")
     if bad:
         raise SystemExit("FAIL: batched results diverged from run_query")
 

@@ -1,0 +1,171 @@
+"""Benchmark-regression gate: fresh smoke-run results vs committed baseline.
+
+Compares a fresh ``bench_device.py`` report (and optionally a fresh
+``bench_multiquery.py`` report) against the committed ``BENCH_device.json``
+baseline and exits non-zero on regression.  Two kinds of checks:
+
+contract (exact, noise-free — these ARE the paper-level guarantees):
+  * every ``identical`` flag in the fresh run is true (bit-identical to the
+    numpy oracle / block engines)
+  * the tape engine's sync counts: one host sync + one device dispatch per
+    single query, one sync per query in a tape batch, one bundled sync per
+    lockstep batch — compared *per query*, so a smoke run (8-query batch)
+    checks against a full baseline (64-query batch)
+  * ``host_fallbacks == 0`` on the numeric and dict-string workloads (the
+    dictionary rewrite keeps mixed plans device-resident)
+
+throughput (tolerance-gated — CI machines and smoke sizes differ from the
+committed 1M-row baseline, so this is a coarse floor, not a tight bound):
+  * fresh speedup >= ``--speedup-tolerance`` x baseline speedup for the
+    single / strings / batch sections
+  * fresh multiquery speedup >= ``--min-multiquery-speedup`` and its
+    dedupe ratio >= 1 (sharing still pays)
+
+    PYTHONPATH=src python benchmarks/bench_device.py --smoke --out fresh.json
+    python benchmarks/check_regression.py \
+        --fresh-device fresh.json --baseline-device BENCH_device.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+class Gate:
+    """Collects named pass/fail checks and renders a report."""
+
+    def __init__(self):
+        self.failures = []
+        self.passes = []
+
+    def check(self, name: str, ok: bool, detail: str = "") -> None:
+        (self.passes if ok else self.failures).append((name, detail))
+
+    def report(self) -> int:
+        for name, detail in self.passes:
+            print(f"  ok    {name}" + (f"  ({detail})" if detail else ""))
+        for name, detail in self.failures:
+            print(f"  FAIL  {name}" + (f"  ({detail})" if detail else ""))
+        if self.failures:
+            print(f"REGRESSION: {len(self.failures)} check(s) failed")
+            return 1
+        print(f"all {len(self.passes)} checks passed")
+        return 0
+
+
+def _per_query_syncs(batch: dict) -> float:
+    q = max(batch.get("queries", 1), 1)
+    return batch.get("tape_host_syncs_per_batch", -1) / q
+
+
+def check_device(gate: Gate, fresh: dict, base: dict, tol: float) -> None:
+    single, bsingle = fresh.get("single", {}), base.get("single", {})
+    batch, bbatch = fresh.get("batch", {}), base.get("batch", {})
+
+    # -- contract: bit-identical everywhere ----------------------------------
+    for section in ("single", "batch", "strings", "differential"):
+        sec = fresh.get(section)
+        if sec is not None:
+            gate.check(f"{section}.identical", bool(sec.get("identical")))
+
+    # -- contract: the one-sync tape guarantees ------------------------------
+    gate.check("single.tape_host_syncs_per_query",
+               single.get("tape_host_syncs_per_query")
+               == bsingle.get("tape_host_syncs_per_query"),
+               f"fresh={single.get('tape_host_syncs_per_query')} "
+               f"baseline={bsingle.get('tape_host_syncs_per_query')}")
+    gate.check("single.tape_device_dispatches",
+               single.get("tape_device_dispatches")
+               == bsingle.get("tape_device_dispatches"),
+               f"fresh={single.get('tape_device_dispatches')} "
+               f"baseline={bsingle.get('tape_device_dispatches')}")
+    gate.check("single.host_fallbacks == 0",
+               single.get("host_fallbacks", -1) == 0,
+               f"fresh={single.get('host_fallbacks')}")
+    gate.check("batch.tape syncs per query",
+               _per_query_syncs(batch) == _per_query_syncs(bbatch),
+               f"fresh={_per_query_syncs(batch):g} "
+               f"baseline={_per_query_syncs(bbatch):g}")
+    gate.check("batch.tape_lockstep_host_syncs_per_batch",
+               batch.get("tape_lockstep_host_syncs_per_batch")
+               == bbatch.get("tape_lockstep_host_syncs_per_batch"),
+               f"fresh={batch.get('tape_lockstep_host_syncs_per_batch')} "
+               f"baseline={bbatch.get('tape_lockstep_host_syncs_per_batch')}")
+
+    # -- contract: the dict-string workload stays device-resident ------------
+    strings, bstrings = fresh.get("strings"), base.get("strings")
+    gate.check("strings section present", strings is not None)
+    if strings is not None:
+        gate.check("strings.host_fallbacks == 0",
+                   strings.get("host_fallbacks", -1) == 0,
+                   f"fresh={strings.get('host_fallbacks')}")
+        gate.check("strings.tape_host_syncs_per_query == 1",
+                   strings.get("tape_host_syncs_per_query") == 1,
+                   f"fresh={strings.get('tape_host_syncs_per_query')}")
+        gate.check("strings.tape_device_dispatches == 1",
+                   strings.get("tape_device_dispatches") == 1,
+                   f"fresh={strings.get('tape_device_dispatches')}")
+
+    # -- throughput floors ----------------------------------------------------
+    for name, sec, bsec in (("single", single, bsingle),
+                            ("batch", batch, bbatch),
+                            ("strings", strings, bstrings)):
+        if not sec or not bsec:
+            continue
+        floor = tol * bsec.get("speedup", 0.0)
+        gate.check(f"{name}.speedup >= {tol:g} x baseline",
+                   sec.get("speedup", 0.0) >= floor,
+                   f"fresh={sec.get('speedup')} baseline={bsec.get('speedup')}"
+                   f" floor={floor:.2f}")
+
+
+def check_multiquery(gate: Gate, fresh: dict, min_speedup: float) -> None:
+    gate.check("multiquery.identical", bool(fresh.get("identical")))
+    gate.check("multiquery.dedupe_ratio >= 1",
+               fresh.get("dedupe_ratio", 0.0) >= 1.0,
+               f"fresh={fresh.get('dedupe_ratio')}")
+    gate.check(f"multiquery.speedup >= {min_speedup:g}",
+               fresh.get("speedup", 0.0) >= min_speedup,
+               f"fresh={fresh.get('speedup')}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-device", required=True,
+                    help="BENCH_device.json from the fresh smoke run")
+    ap.add_argument("--baseline-device", default="BENCH_device.json",
+                    help="committed baseline (default: BENCH_device.json)")
+    ap.add_argument("--fresh-multiquery", default=None,
+                    help="optional fresh bench_multiquery.py --out report")
+    ap.add_argument("--speedup-tolerance", type=float, default=0.2,
+                    help="fresh speedup must reach this fraction of the "
+                         "baseline speedup (default 0.2 — a coarse "
+                         "collapse detector: smoke tables and CI machines "
+                         "differ from the committed 1M-row baseline and "
+                         "small batches are noisy; the sync/fallback "
+                         "contract checks are exact)")
+    ap.add_argument("--min-multiquery-speedup", type=float, default=1.0,
+                    help="floor on the batched-vs-independent multiquery "
+                         "speedup (default 1.0: batching must still pay)")
+    args = ap.parse_args()
+
+    with open(args.fresh_device) as f:
+        fresh = json.load(f)
+    with open(args.baseline_device) as f:
+        base = json.load(f)
+    gate = Gate()
+    print(f"device: {args.fresh_device} (rows={fresh.get('rows')}) vs "
+          f"baseline {args.baseline_device} (rows={base.get('rows')})")
+    check_device(gate, fresh, base, args.speedup_tolerance)
+    if args.fresh_multiquery:
+        with open(args.fresh_multiquery) as f:
+            mq = json.load(f)
+        print(f"multiquery: {args.fresh_multiquery} "
+              f"(rows={mq.get('rows')}, queries={mq.get('queries')})")
+        check_multiquery(gate, mq, args.min_multiquery_speedup)
+    return gate.report()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

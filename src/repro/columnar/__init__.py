@@ -27,7 +27,8 @@ Shared results are bit-identical to per-query execution on every engine —
 """
 from .bitmap import (pack_bits, unpack_bits, popcount, bitmap_and, bitmap_or,
                      bitmap_andnot, bitmap_full, bitmap_empty, WORD)
-from .table import Table, annotate_selectivities, empirical_selectivity
+from .table import (Table, DictColumn, annotate_selectivities,
+                    empirical_selectivity, rewrite_string_atoms)
 from .forest import make_forest_table
 from .executor import BitmapBackend, JaxBlockBackend, run_query
 from .device import DeviceTapeBackend
@@ -38,8 +39,8 @@ from .multiquery import (QuerySession, LRUPlanCache, BatchResult, BatchStats,
 __all__ = [
     "pack_bits", "unpack_bits", "popcount", "bitmap_and", "bitmap_or",
     "bitmap_andnot", "bitmap_full", "bitmap_empty", "WORD",
-    "Table", "annotate_selectivities", "empirical_selectivity",
-    "make_forest_table",
+    "Table", "DictColumn", "annotate_selectivities", "empirical_selectivity",
+    "rewrite_string_atoms", "make_forest_table",
     "BitmapBackend", "JaxBlockBackend", "DeviceTapeBackend", "run_query",
     "random_tree", "random_query_suite",
     "QuerySession", "LRUPlanCache", "BatchResult", "BatchStats",

@@ -31,15 +31,20 @@ recycled slots).  During execution nothing leaves the device: popcounts ride
 along as ``i32[N]`` vectors (feeding the Pallas kernels' scalar-prefetch
 dead-block skip), per-step record/block counts accumulate into device
 vectors, and the final transfer bundles ``(result bitmap, counters)`` into
-one ``device_get`` — exactly one host sync per query.  The contract is
-relaxed only by **host fallbacks**: atoms a device kernel cannot evaluate
-(string/LIKE/UDF predicates, non-numeric columns) round-trip their source
-slot through the host gather path, each adding one sync and incrementing
-``host_fallbacks``.  String/UDF fallback *semantics* match the oracle
-backend bit-for-bit; making them device-resident (dictionary-encoded
-columns) is an open ROADMAP item, as are tape size limits (slots are
-allocated eagerly: a pathological plan with thousands of live intermediate
-sets would want spilling, which the compiler does not yet do).
+one ``device_get`` — exactly one host sync per query.  String predicates
+over dictionary-encodable columns do NOT relax the contract: the planner
+entry points rewrite them into numeric comparisons over the columns' int32
+dictionary codes (``columnar.table.rewrite_string_atoms``), which this
+backend uploads and executes like any other numeric column — a mixed
+numeric/string plan is one device program, one sync, ``host_fallbacks ==
+0``.  The contract is relaxed only by genuine **host fallbacks**: opaque
+atoms no code-space rewrite exists for (UDFs, fragmented dictionary hit
+sets, unrewritten non-numeric columns) round-trip their source slot through
+the host gather path, each adding one sync and incrementing
+``host_fallbacks``, with semantics matching the oracle backend bit-for-bit.
+Tape size limits remain open (slots are allocated eagerly: a pathological
+plan with thousands of live intermediate sets would want spilling, which
+the compiler does not yet do).
 
 Shapes are **bucketed**: the block count is padded up to a power of two, so
 one compiled program serves every table whose padded shape matches — e.g.
@@ -255,11 +260,13 @@ class DeviceTapeBackend(SetBackend):
     # -- conversions -----------------------------------------------------------
     def _col_bitmajor(self, name: str):
         """Column as bit-major f32[N, 32, W] device blocks (None if the
-        column is not numeric)."""
+        column is not numeric).  Resolves derived dictionary-code columns
+        through ``Table.column_data``, so rewritten string atoms upload the
+        int32 codes and run the same fused comparison kernels."""
         col = self._jcols.get(name)
         if col is None:
             import jax.numpy as jnp
-            raw = self.table.columns[name]
+            raw = self.table.column_data(name)
             if not np.issubdtype(raw.dtype, np.number):
                 self._jcols[name] = False
                 return None
@@ -552,10 +559,11 @@ class DeviceTapeBackend(SetBackend):
     def run_tape(self, tape: PlanTape) -> np.ndarray:
         """Execute a compiled tape; returns the host packed result bitmap.
 
-        All-device tapes run as ONE jitted dispatch and ONE host sync.
-        Tapes with host-fallback ops (string/UDF atoms, non-numeric
-        columns) run op-by-op with device slots, syncing only at each
-        fallback and at the end.
+        All-device tapes — including dictionary-rewritten string atoms —
+        run as ONE jitted dispatch and ONE host sync.  Tapes with host-
+        fallback ops (opaque UDF atoms, unrewritten non-numeric columns)
+        run op-by-op with device slots, syncing only at each fallback and
+        at the end.
         """
         import jax.numpy as jnp
         self.last_tape = tape

@@ -29,7 +29,7 @@ from ..core.sets import SetBackend, Stats
 from .bitmap import (WORD, bitmap_and, bitmap_andnot, bitmap_empty,
                      bitmap_full, bitmap_or, live_block_count, n_words,
                      next_pow2, pack_bits, popcount, unpack_bits)
-from .table import Table
+from .table import Table, rewrite_string_atoms
 
 _OPCODE = {"lt": 0, "le": 1, "gt": 2, "ge": 3, "eq": 4, "ne": 5}
 
@@ -168,7 +168,9 @@ class JaxBlockBackend(SetBackend):
         import jax.numpy as jnp
         col = self._jcols.get(name)
         if col is None:
-            raw = self.table.columns[name]
+            # column_data resolves derived dictionary-code columns, so
+            # rewritten string atoms run the fused numeric kernels
+            raw = self.table.column_data(name)
             if not np.issubdtype(raw.dtype, np.number):
                 return None
             arr = np.zeros(self._padded, dtype=np.float32)
@@ -301,7 +303,8 @@ class JaxBlockBackend(SetBackend):
 
 
 def run_query(tree: PredicateTree, table: Table, planner: str = "shallowfish",
-              engine: str = "numpy", model=None, backend=None) -> tuple:
+              engine: str = "numpy", model=None, backend=None,
+              rewrite_strings: bool = True) -> tuple:
     """Plan + execute; returns (record bitmap, plan, backend-with-stats).
 
     Engines: ``numpy`` (oracle), ``jax`` / ``pallas`` (per-step block
@@ -310,10 +313,18 @@ def run_query(tree: PredicateTree, table: Table, planner: str = "shallowfish",
     ``core.tape`` / ``columnar.device``).  ``backend`` optionally reuses an
     existing engine backend (keeps device-resident columns warm across
     calls); it must match ``engine``.
+
+    ``rewrite_strings`` (default on) rewrites dict-encodable string atoms
+    into numeric comparisons over the columns' dictionary codes before
+    planning (:func:`~repro.columnar.table.rewrite_string_atoms`), so mixed
+    numeric/string plans stay on the fused device path on every engine —
+    results are bit-identical either way.
     """
     from ..core import deepfish, nooropt, optimal_plan, shallowfish
     from ..core.cost import PerAtomCostModel
     model = model or PerAtomCostModel()
+    if rewrite_strings:
+        tree = rewrite_string_atoms(tree, table)
     planners = {"shallowfish": shallowfish, "deepfish": deepfish,
                 "optimal": optimal_plan, "nooropt": nooropt}
     plan = planners[planner](tree, model, total_records=table.n_records)

@@ -22,6 +22,15 @@ QUANT_BASE = ["elevation", "aspect", "slope", "h_dist_hydro", "v_dist_hydro",
               "hillshade_3pm", "h_dist_fire"]
 QUAL_BASE = [("wilderness", 4), ("soil", 7)]
 
+# string attributes for the dictionary-encoding workloads (CH-benchmark
+# style: species / district names instead of pre-coded categoricals)
+STRING_VOCAB = {
+    "cover": np.array(["aspen", "birch", "cedar", "fir", "hemlock",
+                       "juniper", "larch", "maple", "oak", "pine",
+                       "spruce", "willow"]),
+    "district": np.array([f"district_{i:02d}" for i in range(24)]),
+}
+
 
 def _base_columns(n: int, rng: np.random.Generator):
     cols = {}
@@ -43,10 +52,20 @@ def _base_columns(n: int, rng: np.random.Generator):
 
 
 def make_forest_table(n_records: int = 100_000, n_dup: int = 12,
-                      seed: int = 0) -> Table:
-    """Forest-style table: (10 quant + 2 qual) x ``n_dup`` attributes."""
+                      seed: int = 0, strings: bool = False) -> Table:
+    """Forest-style table: (10 quant + 2 qual) x ``n_dup`` attributes.
+
+    ``strings=True`` additionally adds skewed *string* attributes (see
+    ``STRING_VOCAB``) to each duplicate — the dictionary-encoding
+    workloads.  String columns are drawn after the numeric ones, so a
+    ``strings=False`` table of the same seed is bit-identical to before.
+    """
     rng = np.random.default_rng(seed)
     base = _base_columns(n_records, rng)
+    if strings:
+        for name, vocab in STRING_VOCAB.items():
+            p = rng.dirichlet(np.ones(len(vocab)) * 0.8)
+            base[name] = rng.choice(vocab, size=n_records, p=p)
     cols = {}
     for d in range(n_dup):
         if d == 0:

@@ -50,7 +50,7 @@ from ..core.predicate import (Node, PredicateTree, atom_key, canonical_key,
                               normalize, tree_copy)
 from ..core.sets import SetBackend
 from .executor import BitmapBackend, JaxBlockBackend
-from .table import Table, annotate_selectivities
+from .table import Table, annotate_selectivities, rewrite_string_atoms
 
 _PLANNERS = {"shallowfish": shallowfish, "deepfish": deepfish,
              "optimal": optimal_plan, "nooropt": nooropt}
@@ -264,6 +264,13 @@ class QuerySession:
     persist_atom_cache: keep shared-atom results across ``execute`` calls,
                       invalidated when ``table.version`` moves (any
                       ``set_column`` write)
+    rewrite_strings:  rewrite dict-encodable string atoms into numeric
+                      comparisons over dictionary codes before planning
+                      (:func:`~repro.columnar.table.rewrite_string_atoms`).
+                      Applied before the atom census, so code-space atoms
+                      share ``atom_key`` results across queries exactly
+                      like native numeric atoms — and the tape engines keep
+                      their one-sync contract on mixed plans.
     """
 
     _ENGINES = ("numpy", "jax", "pallas", "tape", "tape-pallas")
@@ -273,7 +280,8 @@ class QuerySession:
                  plan_cache: Optional[LRUPlanCache] = None,
                  share_threshold: int = 2,
                  batched: Union[bool, str] = "auto", block: int = 8192,
-                 annotate: bool = True, persist_atom_cache: bool = True):
+                 annotate: bool = True, persist_atom_cache: bool = True,
+                 rewrite_strings: bool = True):
         if planner not in ("auto",) + tuple(_PLANNERS):
             raise ValueError(f"unknown planner {planner!r}")
         if engine not in self._ENGINES:
@@ -289,6 +297,7 @@ class QuerySession:
         self.block = block
         self.annotate = annotate
         self.persist_atom_cache = persist_atom_cache
+        self.rewrite_strings = rewrite_strings
         self.last_result: Optional[BatchResult] = None
         self._atom_cache: Dict[tuple, object] = {}
         self._cache_version = self._table_fingerprint()
@@ -347,6 +356,10 @@ class QuerySession:
         else:
             trees = [q if isinstance(q, PredicateTree)
                      else normalize(tree_copy(q)) for q in queries]
+        if self.rewrite_strings:
+            # after annotation: the rewrite stamps exact selectivities on
+            # the code-space atoms from the dictionary value frequencies
+            trees = [rewrite_string_atoms(t, self.table) for t in trees]
         stats = BatchStats(n_queries=len(trees))
         h0, m0 = self.plan_cache.stats.hits, self.plan_cache.stats.misses
         plans = [self.plan_cache.get_or_plan(

@@ -19,6 +19,30 @@ from .table import Table
 _SELS = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
 
 
+def _string_atom(name: str, vals: np.ndarray, rng: np.random.Generator,
+                 cost: float) -> Atom:
+    """A string-column atom: equality, IN, prefix-LIKE or a range over the
+    value sort order — the dictionary-rewritable shapes (plus the odd
+    case-flipped LIKE exercising the dictionary-hit-mask path)."""
+    r = float(rng.random())
+    if r < 0.40 or len(vals) < 3:
+        return Atom(name, "eq", str(vals[rng.integers(len(vals))]),
+                    cost_factor=cost)
+    if r < 0.65:
+        k = int(rng.integers(2, min(3, len(vals) - 1) + 1))
+        pick = rng.choice(len(vals), size=k, replace=False)
+        return Atom(name, "in", tuple(str(vals[i]) for i in sorted(pick)),
+                    cost_factor=cost)
+    if r < 0.85:
+        v = str(vals[rng.integers(len(vals))])
+        prefix = v[: int(rng.integers(1, min(3, len(v)) + 1))]
+        if rng.random() < 0.25:
+            prefix = prefix.upper()       # LIKE is case-insensitive
+        return Atom(name, "like", prefix + "%", cost_factor=cost)
+    return Atom(name, rng.choice(["lt", "le", "ge"]),
+                str(vals[rng.integers(1, len(vals))]), cost_factor=cost)
+
+
 def _make_atom(table: Table, rng: np.random.Generator,
                varying_cost: bool, used: set) -> Atom:
     cols = table.column_names
@@ -30,6 +54,11 @@ def _make_atom(table: Table, rng: np.random.Generator,
             gamma = float(rng.choice(_SELS))
             value = table.value_at_selectivity(name, gamma)
             atom = Atom(name, "lt", value, selectivity=gamma, cost_factor=cost)
+        elif col.dtype.kind in ("U", "S", "O"):
+            # the cached dictionary IS the sorted unique-value array
+            atom = _string_atom(name, table.dict_column(name).values, rng,
+                                cost)
+            atom.selectivity = table.estimate_selectivity(atom)
         else:
             vals = np.unique(col)
             v = vals[rng.integers(len(vals))]

@@ -1,19 +1,31 @@
-"""Columnar tables + column statistics.
+"""Columnar tables + column statistics + dictionary encoding.
 
 A :class:`Table` stores each attribute as a separate numpy array (the
 column-store layout, paper §2.1) plus lazily computed per-column stats
 (quantile sketch, distinct values) from which atom selectivities are
 estimated — the paper's footnote 14 assumption, made concrete.
+
+Non-numeric columns additionally carry a lazily built :class:`DictColumn`
+— sorted unique values + an int32 code per record — which is what lets
+string predicates execute on device: :func:`rewrite_string_atoms` evaluates
+each string atom on the (small) sorted dictionary and re-expresses it as
+plain numeric comparisons over the derived code column
+(:func:`repro.core.predicate.code_column`), which every engine resolves
+through :meth:`Table.column_data`.  Dictionaries are versioned exactly like
+the columns they encode: :meth:`Table.set_column` drops them together with
+the stats, and the ``version`` counter bump invalidates session caches.
 """
 from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
-from ..core.predicate import Atom, Node, PredicateTree
+from ..core.predicate import (Atom, Node, Not, PredicateTree, code_column,
+                              codes_expression, decode_column, normalize,
+                              tree_copy)
 
 _QUANTILE_GRID = 512
 
@@ -22,6 +34,45 @@ _QUANTILE_GRID = 512
 class ColumnStats:
     quantiles: Optional[np.ndarray] = None      # numeric columns
     value_freqs: Optional[Dict[Any, float]] = None  # categorical columns
+
+
+@dataclass
+class DictColumn:
+    """Dictionary encoding of a non-numeric column.
+
+    ``values`` is the *sorted* unique-value dictionary, ``codes`` the int32
+    code of every record (``values[codes]`` reconstructs the column), and
+    ``freqs[c]`` the fraction of records holding code ``c``.  Sortedness is
+    the load-bearing property: it makes ``<``/``<=`` and prefix ranges
+    order-preserving in code space, so string atoms rewrite to the same
+    numeric comparisons the fused device kernels already execute.
+    """
+
+    values: np.ndarray        # sorted unique values
+    codes: np.ndarray         # int32[n_records]
+    freqs: np.ndarray         # float64[len(values)], sums to 1
+
+    @property
+    def n(self) -> int:
+        return len(self.values)
+
+    def decode(self, codes: Optional[np.ndarray] = None) -> np.ndarray:
+        """Materialize values from codes (the whole column by default)."""
+        return self.values[self.codes if codes is None else codes]
+
+    def encode(self, value) -> Optional[int]:
+        """Code of ``value``, or None if absent from the dictionary."""
+        i = int(np.searchsorted(self.values, value))
+        if i < len(self.values) and self.values[i] == value:
+            return i
+        return None
+
+
+def build_dict_column(col: np.ndarray) -> DictColumn:
+    values, codes, counts = np.unique(col, return_inverse=True,
+                                      return_counts=True)
+    return DictColumn(values=values, codes=codes.astype(np.int32),
+                      freqs=counts / max(len(col), 1))
 
 
 class Table:
@@ -42,6 +93,7 @@ class Table:
         self.columns = columns
         self.n_records = lens.pop()
         self._stats: Dict[str, ColumnStats] = {}
+        self._dicts: Dict[str, Tuple[np.ndarray, DictColumn]] = {}
         # monotonically increasing write counter: caches keyed on table
         # contents (atom-result caches, device-resident column uploads)
         # invalidate when it moves
@@ -53,30 +105,74 @@ class Table:
     def set_column(self, name: str, values: np.ndarray) -> None:
         """Add or overwrite a column (a *write*: bumps ``version`` so
         dependent caches — shared atom results, uploaded device columns —
-        invalidate)."""
+        invalidate; the column's stats and dictionary rebuild lazily)."""
         values = np.asarray(values)
         if len(values) != self.n_records:
             raise ValueError("column length mismatch")
         self.columns[name] = values
         self._stats.pop(name, None)
+        self._stats.pop(code_column(name), None)
+        self._dicts.pop(name, None)
         self.version += 1
 
     @property
     def column_names(self):
         return list(self.columns)
 
+    # -- dictionary encoding ---------------------------------------------------
+    def dict_column(self, name: str) -> Optional[DictColumn]:
+        """The dictionary encoding of column ``name`` (None for numeric
+        columns).  Built lazily, cached until the column changes — via
+        :meth:`set_column` or the ``table.columns[name] = arr`` rebinding
+        idiom (detected by array identity, like the session caches)."""
+        col = self.columns[name]
+        if np.issubdtype(col.dtype, np.number):
+            return None
+        ent = self._dicts.get(name)
+        if ent is None or ent[0] is not col:
+            if ent is not None:
+                # rebind detected: the cached stats describe the old array
+                self._stats.pop(name, None)
+                self._stats.pop(code_column(name), None)
+            dc = build_dict_column(col)
+            self._dicts[name] = (col, dc)
+            return dc
+        return ent[1]
+
+    def column_data(self, name: str) -> np.ndarray:
+        """Physical data for ``name``: the stored column, or — for a derived
+        code column (:func:`repro.core.predicate.code_column`) — the base
+        column's int32 dictionary codes.  Every engine reads columns through
+        this, so rewritten code-space atoms evaluate everywhere."""
+        if name in self.columns:
+            return self.columns[name]
+        base = decode_column(name)
+        if base is not None and base in self.columns:
+            dc = self.dict_column(base)
+            if dc is not None:
+                return dc.codes
+        return self.columns[name]   # raises KeyError with the given name
+
     # -- statistics ----------------------------------------------------------
     def stats(self, name: str) -> ColumnStats:
+        # dictionary-encoded columns (and their derived code columns) touch
+        # dict_column() BEFORE the cache read: its array-identity check
+        # pops stale stats when the column was rebound, so a rebind is
+        # detected here exactly as set_column writes are
+        col = self.column_data(name)
+        if not np.issubdtype(col.dtype, np.number):
+            dc = self.dict_column(name)
+            st = self._stats.get(name)
+            if st is None:
+                # the dictionary already holds the sorted distinct values
+                # and their exact frequencies — one scan serves both
+                st = ColumnStats(value_freqs=dict(zip(dc.values, dc.freqs)))
+                self._stats[name] = st
+            return st
         st = self._stats.get(name)
         if st is None:
-            col = self.columns[name]
-            if np.issubdtype(col.dtype, np.number):
-                qs = np.quantile(col, np.linspace(0.0, 1.0, _QUANTILE_GRID))
-                st = ColumnStats(quantiles=qs)
-            else:
-                vals, counts = np.unique(col, return_counts=True)
-                st = ColumnStats(value_freqs={v: c / self.n_records
-                                              for v, c in zip(vals, counts)})
+            qs = np.quantile(col, np.linspace(0.0, 1.0, _QUANTILE_GRID))
+            st = ColumnStats(quantiles=qs)
             self._stats[name] = st
         return st
 
@@ -103,17 +199,21 @@ class Table:
             else:
                 g = 0.5
         else:
+            # categorical: the distinct-value frequencies ARE the full
+            # distribution, so any non-opaque predicate estimates *exactly*
+            # by evaluating it on the |dict| distinct values (ranges over
+            # the sort order and LIKE included — the dictionary-rewrite's
+            # selectivity story)
             freqs = st.value_freqs
-            if atom.op == "eq":
-                g = freqs.get(atom.value, 0.0)
-            elif atom.op == "ne":
-                g = 1.0 - freqs.get(atom.value, 0.0)
-            elif atom.op == "in":
-                g = sum(freqs.get(v, 0.0) for v in atom.value)
-            elif atom.op == "not_in":
-                g = 1.0 - sum(freqs.get(v, 0.0) for v in atom.value)
-            else:
+            if atom.fn is not None or atom.op in ("udf", "not_udf"):
                 g = 0.5
+            else:
+                try:
+                    hits = _apply_op(atom, np.array(list(freqs)))
+                    g = float(sum(f for f, h in zip(freqs.values(), hits)
+                                  if h))
+                except (TypeError, ValueError):
+                    g = 0.5
         return float(min(max(g, 1e-6), 1.0 - 1e-6))
 
     # -- atom evaluation (the costed action) ----------------------------------
@@ -124,7 +224,7 @@ class Table:
         records from the column (gather) and applies the comparison —
         cost proportional to count(D), as the paper's cost model assumes.
         """
-        col = self.columns[atom.column]
+        col = self.column_data(atom.column)
         vals = col if idx is None else col[idx]
         return _apply_op(atom, vals)
 
@@ -196,3 +296,63 @@ def annotate_selectivities(tree: PredicateTree, table: Table,
         else:
             atom.selectivity = table.estimate_selectivity(atom)
     return tree
+
+
+# ---------------------------------------------------------------------------
+# String-atom -> code-space rewrite (the device-resident string path)
+# ---------------------------------------------------------------------------
+
+def _rewrite_node(node: Node, table: Table):
+    """Recursive rewrite; returns (node, changed).  Unchanged subtrees are
+    returned by reference — the caller copies before re-normalizing."""
+    if isinstance(node, Atom):
+        if node.fn is not None or node.op in ("udf", "not_udf"):
+            return node, False              # opaque UDFs keep the host path
+        if decode_column(node.column) is not None:
+            return node, False              # already in code space
+        if node.column not in table.columns:
+            return node, False
+        dc = table.dict_column(node.column)
+        if dc is None:
+            return node, False              # numeric column
+        try:
+            # the predicate evaluated on the *dictionary* — |dict| work,
+            # exact for every op incl. case-insensitive LIKE
+            hits = _apply_op(node, dc.values)
+        except (TypeError, ValueError):
+            return node, False              # uncomparable value: host path
+        new = codes_expression(node, hits, dc.freqs)
+        if new is None:
+            return node, False              # fragmented hit set: host path
+        return new, True
+    if isinstance(node, Not):
+        child, changed = _rewrite_node(node.child, table)
+        return (Not(child), True) if changed else (node, False)
+    children, changed = [], False
+    for c in node.children:
+        c2, ch = _rewrite_node(c, table)
+        children.append(c2)
+        changed |= ch
+    if not changed:
+        return node, False
+    return type(node)(children), True
+
+
+def rewrite_string_atoms(tree: PredicateTree, table: Table) -> PredicateTree:
+    """Rewrite dict-encodable string atoms of ``tree`` into code-space
+    numeric atoms over the derived code columns (see
+    :func:`repro.core.predicate.codes_expression`).
+
+    Equality, IN, ``<``/``<=`` over the sorted dictionary and (prefix-)LIKE
+    all become plain comparisons the fused device kernels execute — a mixed
+    numeric/string plan then compiles to a single device program with zero
+    host fallbacks.  Only opaque UDFs and atoms whose dictionary hit set is
+    too fragmented keep the host gather path.  Returns ``tree`` itself when
+    nothing rewrites; otherwise a freshly normalized tree (the input and its
+    atoms are never mutated), with exact selectivities on the new atoms from
+    the dictionary's value frequencies.
+    """
+    root, changed = _rewrite_node(tree.root, table)
+    if not changed:
+        return tree
+    return normalize(tree_copy(root))

@@ -16,7 +16,9 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterator, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 # ---------------------------------------------------------------------------
 # Comparison operators for predicate atoms
@@ -319,3 +321,134 @@ def canonical_key(tree: PredicateTree, sel_step: float = 0.05,
         return key, order
 
     return enc(tree.root)
+
+
+# ---------------------------------------------------------------------------
+# Dictionary code-space rewrites
+# ---------------------------------------------------------------------------
+# A dictionary-encoded string column stores sorted unique values plus an
+# int32 code per record (columnar.table.DictColumn).  Because the dictionary
+# is *sorted*, any string predicate reduces to a boolean hit mask over the
+# dictionary, and a mask whose hits form few contiguous runs reduces further
+# to plain numeric comparisons on the code column — exactly the atoms the
+# fused device kernels execute.  ``codes_expression`` performs that last
+# step; evaluating the predicate on the dictionary values (host work
+# proportional to |dict|, not |R|) is the caller's job
+# (columnar.table.rewrite_string_atoms).
+
+#: suffix of the derived column holding a string column's int32 codes
+CODE_SUFFIX = "#codes"
+
+#: a hit mask fragmented into more runs than this keeps the host path —
+#: the rewrite would explode into a wide OR of ranges
+MAX_CODE_RUNS = 4
+
+
+def code_column(name: str) -> str:
+    """Name of the derived column holding ``name``'s dictionary codes."""
+    return name + CODE_SUFFIX
+
+
+def decode_column(name: str) -> Optional[str]:
+    """Base column of a derived code column (None if not a code column)."""
+    if name.endswith(CODE_SUFFIX):
+        return name[: -len(CODE_SUFFIX)]
+    return None
+
+
+def _hit_runs(hits: np.ndarray) -> List[Tuple[int, int]]:
+    """Maximal runs of consecutive True in ``hits`` as [lo, hi) pairs."""
+    h = np.asarray(hits, dtype=bool)
+    if h.size == 0:
+        return []
+    d = np.diff(h.astype(np.int8))
+    starts = (np.flatnonzero(d == 1) + 1).tolist()
+    ends = (np.flatnonzero(d == -1) + 1).tolist()
+    if h[0]:
+        starts.insert(0, 0)
+    if h[-1]:
+        ends.append(int(h.size))
+    return list(zip(starts, ends))
+
+
+def _clamp(g: float) -> float:
+    return float(min(max(g, 1e-6), 1.0 - 1e-6))
+
+
+def _mass(freqs: Optional[np.ndarray], lo: int, hi: int, n: int) -> float:
+    """Fraction of records whose code falls in [lo, hi)."""
+    if freqs is None:
+        return (hi - lo) / max(n, 1)
+    return float(np.asarray(freqs)[lo:hi].sum())
+
+
+def _code_atom(src: "Atom", op: str, value: float, sel: float) -> "Atom":
+    return Atom(code_column(src.column), op, float(value),
+                selectivity=_clamp(sel), cost_factor=src.cost_factor)
+
+
+def _range_expr(src: "Atom", lo: int, hi: int, n: int,
+                freqs: Optional[np.ndarray]) -> Node:
+    """code in [lo, hi) as comparison atom(s) over the code column."""
+    sel = _mass(freqs, lo, hi, n)
+    if hi - lo == 1:
+        return _code_atom(src, "eq", lo, freqs[lo] if freqs is not None
+                          else 1.0 / max(n, 1))
+    if lo == 0:
+        return _code_atom(src, "lt", hi, sel)
+    if hi == n:
+        return _code_atom(src, "ge", lo, sel)
+    return And([_code_atom(src, "ge", lo, _mass(freqs, lo, n, n)),
+                _code_atom(src, "le", hi - 1, _mass(freqs, 0, hi, n))])
+
+
+def _anti_range_expr(src: "Atom", lo: int, hi: int, n: int,
+                     freqs: Optional[np.ndarray]) -> Node:
+    """code NOT in [lo, hi) as comparison atom(s) over the code column."""
+    sel = 1.0 - _mass(freqs, lo, hi, n)
+    if hi - lo == 1:
+        return _code_atom(src, "ne", lo, sel)
+    if lo == 0:
+        return _code_atom(src, "ge", hi, sel)
+    if hi == n:
+        return _code_atom(src, "lt", lo, sel)
+    return Or([_code_atom(src, "lt", lo, _mass(freqs, 0, lo, n)),
+               _code_atom(src, "ge", hi, _mass(freqs, hi, n, n))])
+
+
+def codes_expression(atom: "Atom", hits: np.ndarray,
+                     freqs: Optional[np.ndarray] = None) -> Optional[Node]:
+    """Rewrite a string atom into code-space numeric atoms.
+
+    ``hits[c]`` says whether dictionary value ``c`` satisfies the atom's
+    predicate (computed by evaluating the predicate on the sorted dictionary
+    values — exact for ``==``/``IN``, ``<``/``<=`` over the sort order,
+    LIKE incl. case-insensitivity, everything short of an opaque UDF).
+    ``freqs[c]`` optionally gives the fraction of records holding code ``c``
+    so the emitted atoms carry *exact* selectivities.
+
+    Returns an expression over :func:`code_column` made solely of plain
+    comparison atoms (the device kernels' vocabulary), or None when the hit
+    set fragments into more than :data:`MAX_CODE_RUNS` runs on both sides —
+    such atoms keep the host fallback path.  Degenerate masks become
+    constant-foldable single comparisons (codes are always >= 0, so
+    ``code < 0`` is the empty set and ``code >= 0`` the full one).
+    """
+    hits = np.asarray(hits, dtype=bool)
+    n = int(hits.size)
+    if not hits.any():
+        return _code_atom(atom, "lt", 0, 0.0)
+    if hits.all():
+        return _code_atom(atom, "ge", 0, 1.0)
+    runs = _hit_runs(hits)
+    if len(runs) == 1:
+        return _range_expr(atom, runs[0][0], runs[0][1], n, freqs)
+    gaps = _hit_runs(~hits)
+    if len(gaps) == 1:
+        return _anti_range_expr(atom, gaps[0][0], gaps[0][1], n, freqs)
+    if len(runs) <= min(len(gaps), MAX_CODE_RUNS):
+        return Or([_range_expr(atom, lo, hi, n, freqs) for lo, hi in runs])
+    if len(gaps) <= MAX_CODE_RUNS:
+        return And([_anti_range_expr(atom, lo, hi, n, freqs)
+                    for lo, hi in gaps])
+    return None

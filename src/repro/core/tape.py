@@ -73,7 +73,14 @@ def _numeric_value(value) -> bool:
 
 def device_atom(atom: Atom) -> bool:
     """True iff ``atom`` is a plain comparison a device kernel can run
-    (column numeric-ness is only known at bind time, see the backend)."""
+    (column numeric-ness is only known at bind time, see the backend).
+
+    String atoms rewritten into dictionary code space
+    (``columnar.table.rewrite_string_atoms``) are plain numeric comparisons
+    over the derived code column, so they pass this predicate and fuse into
+    CHAIN groups like any native numeric atom — the tape compiler needs no
+    special casing for them.
+    """
     return (atom.op in CMP_OPCODE and atom.fn is None
             and _numeric_value(atom.value))
 

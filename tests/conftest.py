@@ -17,3 +17,9 @@ def forest():
 @pytest.fixture(scope="session")
 def forest_big():
     return make_forest_table(100_000, n_dup=3, seed=11)
+
+
+@pytest.fixture(scope="session")
+def string_forest():
+    """Forest table with string attributes (dictionary-encoding workloads)."""
+    return make_forest_table(8_000, n_dup=2, seed=7, strings=True)

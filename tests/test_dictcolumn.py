@@ -1,0 +1,270 @@
+"""Dictionary-encoded string columns + the code-space rewrite.
+
+Covers: DictColumn round-trip invariants, Table dictionary caching and
+invalidation (set_column / rebinding), code-column resolution, the
+``codes_expression`` rewrite (exact masks, run fragmentation, degenerate
+always-true/false atoms) and — when hypothesis is installed — property
+tests asserting rewritten masks equal the oracle on random vocabularies.
+"""
+import numpy as np
+import pytest
+
+from repro.columnar import Table, rewrite_string_atoms
+from repro.columnar.table import _apply_op, build_dict_column
+from repro.core.predicate import (And, Atom, Node, code_column,
+                                  codes_expression, decode_column, normalize)
+
+VOCAB = np.array(["bergen", "oslo", "stavanger", "tromso", "trondheim"])
+
+
+@pytest.fixture()
+def city_table():
+    rng = np.random.default_rng(3)
+    n = 2000
+    return Table({
+        "x": rng.normal(size=n).astype(np.float32),
+        "city": rng.choice(VOCAB, n),
+    })
+
+
+def eval_code_expr(node: Node, codes: np.ndarray) -> np.ndarray:
+    """Evaluate a code-space expression directly on a codes vector."""
+    if isinstance(node, Atom):
+        return _apply_op(node, codes)
+    combine = np.logical_and if isinstance(node, And) else np.logical_or
+    out = None
+    for c in node.children:
+        m = eval_code_expr(c, codes)
+        out = m if out is None else combine(out, m)
+    return out
+
+
+# -- DictColumn --------------------------------------------------------------
+
+def test_dict_column_round_trip(city_table):
+    dc = city_table.dict_column("city")
+    assert dc is not None
+    # sorted unique dictionary, int32 codes, exact decode
+    assert np.array_equal(dc.values, np.sort(np.unique(city_table["city"])))
+    assert dc.codes.dtype == np.int32
+    np.testing.assert_array_equal(dc.decode(), city_table["city"])
+    assert abs(dc.freqs.sum() - 1.0) < 1e-9
+    for i, v in enumerate(dc.values):
+        assert dc.encode(v) == i
+    assert dc.encode("nowhere") is None
+
+
+def test_numeric_columns_have_no_dictionary(city_table):
+    assert city_table.dict_column("x") is None
+
+
+def test_dict_cache_and_invalidation(city_table):
+    dc1 = city_table.dict_column("city")
+    assert city_table.dict_column("city") is dc1          # cached
+    v0 = city_table.version
+    city_table.set_column("city", city_table["city"][::-1].copy())
+    assert city_table.version == v0 + 1                   # versioned write
+    dc2 = city_table.dict_column("city")
+    assert dc2 is not dc1                                 # rebuilt
+    np.testing.assert_array_equal(dc2.decode(), city_table["city"])
+
+
+def test_dict_rebind_idiom_invalidates(city_table):
+    dc1 = city_table.dict_column("city")
+    city_table.columns["city"] = city_table["city"][::-1].copy()
+    dc2 = city_table.dict_column("city")                  # identity change
+    assert dc2 is not dc1
+    np.testing.assert_array_equal(dc2.decode(), city_table["city"])
+
+
+def test_stats_detect_rebound_string_column():
+    # regression: stats() must not serve the old distribution after the
+    # documented `table.columns[name] = arr` rebinding idiom
+    t = Table({"s": np.array(["a", "a", "a", "b"])})
+    atom = Atom("s", "eq", "a", selectivity=0.5)
+    assert abs(t.estimate_selectivity(atom) - 0.75) < 1e-6
+    t.columns["s"] = np.array(["b", "b", "b", "a"])
+    assert abs(t.estimate_selectivity(atom) - 0.25) < 1e-6
+
+
+def test_column_data_resolves_code_columns(city_table):
+    dc = city_table.dict_column("city")
+    np.testing.assert_array_equal(city_table.column_data(code_column("city")),
+                                  dc.codes)
+    # plain columns resolve to themselves; unknown names raise
+    assert city_table.column_data("x") is city_table.columns["x"]
+    with pytest.raises(KeyError):
+        city_table.column_data(code_column("nope"))
+    assert decode_column(code_column("city")) == "city"
+    assert decode_column("city") is None
+
+
+# -- codes_expression --------------------------------------------------------
+
+def _mask_cases():
+    return [
+        np.array(m, dtype=bool) for m in (
+            [1, 0, 0, 0, 0],      # single value -> eq
+            [1, 1, 0, 0, 0],      # prefix run -> lt
+            [0, 0, 0, 1, 1],      # suffix run -> ge
+            [0, 1, 1, 0, 0],      # interior run -> ge & le
+            [1, 0, 1, 1, 1],      # single gap -> ne/anti-range
+            [1, 0, 1, 0, 1],      # fragmented both ways
+            [1, 1, 1, 1, 1],      # always true
+            [0, 0, 0, 0, 0],      # always false
+        )
+    ]
+
+
+@pytest.mark.parametrize("hits", _mask_cases(),
+                         ids=lambda h: "".join(str(int(x)) for x in h))
+def test_codes_expression_mask_equivalence(hits):
+    atom = Atom("city", "eq", "whatever", selectivity=0.5)
+    expr = codes_expression(atom, hits)
+    assert expr is not None
+    codes = np.arange(len(hits), dtype=np.int32)
+    np.testing.assert_array_equal(eval_code_expr(expr, codes), hits)
+    # and on a realistic repeated-codes vector
+    rep = np.repeat(codes, 3)
+    np.testing.assert_array_equal(eval_code_expr(expr, rep), hits[rep])
+
+
+def test_codes_expression_fragmented_mask_bails():
+    # > MAX_CODE_RUNS runs on both sides -> host fallback (None)
+    hits = np.array([1, 0] * 6, dtype=bool)
+    atom = Atom("city", "eq", "v", selectivity=0.5)
+    assert codes_expression(atom, hits) is None
+
+
+def test_codes_expression_exact_selectivities():
+    freqs = np.array([0.5, 0.25, 0.125, 0.0625, 0.0625])
+    atom = Atom("city", "eq", "v", selectivity=0.9)   # deliberately wrong
+    # interior range [1, 3) -> ge 1 (mass 0.5) AND le 2 (mass 0.875)
+    expr = codes_expression(atom, np.array([0, 1, 1, 0, 0], bool), freqs)
+    assert isinstance(expr, And)
+    ge, le = expr.children
+    assert ge.op == "ge" and abs(ge.selectivity - 0.5) < 1e-9
+    assert le.op == "le" and abs(le.selectivity - 0.875) < 1e-9
+    # single value -> eq carrying the value's exact frequency
+    eq = codes_expression(atom, np.array([0, 1, 0, 0, 0], bool), freqs)
+    assert eq.op == "eq" and abs(eq.selectivity - 0.25) < 1e-9
+
+
+# -- rewrite_string_atoms ----------------------------------------------------
+
+def test_rewrite_returns_same_tree_when_nothing_rewrites(city_table):
+    tree = normalize(And([Atom("x", "lt", 0.0, selectivity=0.5),
+                          Atom("x", "gt", -1.0, selectivity=0.5)]))
+    assert rewrite_string_atoms(tree, city_table) is tree
+
+
+def test_rewrite_does_not_mutate_input_tree(city_table):
+    tree = normalize(And([Atom("x", "lt", 0.0, selectivity=0.5),
+                          Atom("city", "eq", "oslo", selectivity=0.3)]))
+    aids = [a.aid for a in tree.atoms]
+    names = [a.column for a in tree.atoms]
+    out = rewrite_string_atoms(tree, city_table)
+    assert out is not tree
+    assert [a.aid for a in tree.atoms] == aids
+    assert [a.column for a in tree.atoms] == names
+    assert any(decode_column(a.column) == "city" for a in out.atoms)
+
+
+def test_rewrite_skips_udf_atoms(city_table):
+    udf = Atom("city", "udf", fn=lambda v: v == "oslo", selectivity=0.3)
+    tree = normalize(And([Atom("x", "lt", 0.0, selectivity=0.5), udf]))
+    out = rewrite_string_atoms(tree, city_table)
+    assert all(decode_column(a.column) is None for a in out.atoms)
+
+
+def test_rewrite_mask_matches_oracle_all_ops(city_table):
+    cases = [
+        Atom("city", "eq", "oslo"),
+        Atom("city", "eq", "nowhere"),            # always-false atom
+        Atom("city", "ne", "tromso"),
+        Atom("city", "in", ("bergen", "oslo", "trondheim")),
+        Atom("city", "not_in", ("stavanger",)),
+        Atom("city", "lt", "stavanger"),
+        Atom("city", "le", "oslo"),
+        Atom("city", "gt", "bergen"),
+        Atom("city", "ge", "tromso"),
+        Atom("city", "like", "tr%"),
+        Atom("city", "like", "TRO%"),             # case-insensitive LIKE
+        Atom("city", "not_like", "%heim"),
+        Atom("city", "like", "%o%"),              # non-prefix pattern
+    ]
+    for atom in cases:
+        tree = normalize(And([atom, Atom("x", "lt", 10.0, selectivity=0.9)]))
+        out = rewrite_string_atoms(tree, city_table)
+        assert all(a.column != "city" for a in out.atoms), repr(atom)
+        want = _apply_op(atom, city_table["city"]) & (city_table["x"] < 10.0)
+        got = eval_code_expr_tree(out, city_table)
+        np.testing.assert_array_equal(got, want, err_msg=repr(atom))
+
+
+def eval_code_expr_tree(tree, table):
+    """Oracle-evaluate a rewritten tree against the table (resolving code
+    columns through column_data)."""
+    def ev(node):
+        if isinstance(node, Atom):
+            return _apply_op(node, table.column_data(node.column))
+        combine = np.logical_and if isinstance(node, And) else np.logical_or
+        out = None
+        for c in node.children:
+            m = ev(c)
+            out = m if out is None else combine(out, m)
+        return out
+    return ev(tree.root)
+
+
+# -- hypothesis property tests -----------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    words = st.text(alphabet="abcdxyz", min_size=1, max_size=6)
+
+    @given(st.lists(words, min_size=1, max_size=40),
+           st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_dict_round_trip_property(vocab, seed):
+        rng = np.random.default_rng(seed)
+        col = np.asarray(rng.choice(np.asarray(vocab, dtype="U8"), 64))
+        dc = build_dict_column(col)
+        np.testing.assert_array_equal(dc.decode(), col)
+        assert np.all(dc.values[:-1] < dc.values[1:])  # strictly sorted
+        assert dc.codes.min() >= 0 and dc.codes.max() < dc.n
+
+    @given(st.lists(words, min_size=2, max_size=25, unique=True),
+           st.data())
+    @settings(max_examples=80, deadline=None)
+    def test_rewritten_mask_equals_oracle_property(vocab, data):
+        """The rewrite is semantics-preserving for every drawable atom."""
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+        col = np.asarray(rng.choice(np.asarray(vocab, dtype="U8"), 128))
+        table = Table({"s": col})
+        op = data.draw(st.sampled_from(
+            ["eq", "ne", "in", "not_in", "lt", "le", "gt", "ge",
+             "like", "not_like"]))
+        if op in ("in", "not_in"):
+            value = tuple(data.draw(
+                st.lists(st.sampled_from(vocab), min_size=1, max_size=4,
+                         unique=True)))
+        elif op in ("like", "not_like"):
+            base = data.draw(st.sampled_from(vocab))
+            value = base[: data.draw(st.integers(1, len(base)))] + "%"
+        else:
+            value = data.draw(st.sampled_from(vocab))
+        atom = Atom("s", op, value, selectivity=0.5)
+        want = _apply_op(atom, col)
+        tree = normalize(And([atom, Atom("s", "ne", "\x00zzz",
+                                         selectivity=0.999)]))
+        out = rewrite_string_atoms(tree, table)
+        got = eval_code_expr_tree(out, table)
+        np.testing.assert_array_equal(got, want)

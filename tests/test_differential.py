@@ -102,3 +102,54 @@ def test_query_session_pallas_matches_oracle(forest):
     for tree, bm in zip(trees, res.bitmaps):
         want = pack_bits(oracle_mask(forest, tree.root))
         np.testing.assert_array_equal(bm, want)
+
+
+# -- string atoms (dictionary code-space rewrite) ----------------------------
+# ``string_forest`` has string attributes, so the seeded random trees mix
+# numeric atoms with string equality / IN / prefix-LIKE / sort-order ranges.
+# Every engine must still match the naive full-scan oracle evaluated on the
+# ORIGINAL (unrewritten) tree.
+
+@pytest.mark.parametrize("planner", PLANNERS)
+def test_string_atoms_numpy_engine_matches_oracle(string_forest, planner):
+    for seed, tree in seeded_trees(string_forest, range(4)):
+        res, _, _ = run_query(tree, string_forest, planner=planner,
+                              engine="numpy")
+        want = pack_bits(oracle_mask(string_forest, tree.root))
+        np.testing.assert_array_equal(res, want, err_msg=f"seed={seed}")
+
+
+@pytest.mark.parametrize("planner", ["shallowfish", "deepfish"])
+def test_string_atoms_jax_engine_matches_oracle(string_forest, planner):
+    for seed, tree in seeded_trees(string_forest, range(2)):
+        res, _, _ = run_query(tree, string_forest, planner=planner,
+                              engine="jax")
+        want = pack_bits(oracle_mask(string_forest, tree.root))
+        np.testing.assert_array_equal(res, want, err_msg=f"seed={seed}")
+
+
+@pytest.mark.parametrize("planner", PLANNERS)
+def test_string_atoms_tape_engine_one_sync(string_forest, planner):
+    """Dict-rewritten string atoms keep the one-sync contract: zero host
+    fallbacks, one sync per query, bit-identical to the oracle."""
+    for seed, tree in seeded_trees(string_forest, range(2)):
+        res, _, be = run_query(tree, string_forest, planner=planner,
+                               engine="tape")
+        want = pack_bits(oracle_mask(string_forest, tree.root))
+        np.testing.assert_array_equal(res, want, err_msg=f"seed={seed}")
+        assert be.host_fallbacks == 0
+        assert be.host_syncs == 1
+
+
+@pytest.mark.parametrize("engine,batched", [("numpy", True),
+                                            ("tape", True),
+                                            ("tape", False)])
+def test_string_query_session_matches_oracle(string_forest, engine, batched):
+    trees = [t for _, t in seeded_trees(string_forest, range(4))]
+    trees += trees[:2]                      # repeats: shared string atoms
+    session = QuerySession(string_forest, planner="deepfish", engine=engine,
+                           batched=batched)
+    res = session.execute(trees)
+    for tree, bm in zip(trees, res.bitmaps):
+        want = pack_bits(oracle_mask(string_forest, tree.root))
+        np.testing.assert_array_equal(bm, want)

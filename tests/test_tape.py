@@ -134,7 +134,7 @@ def test_backend_reuse_across_queries(forest):
     assert be.host_syncs == 2           # still one per query
 
 
-# -- host fallbacks (string / non-numeric columns) ---------------------------
+# -- dictionary-encoded strings: the one-sync contract on mixed plans --------
 
 @pytest.fixture(scope="module")
 def string_table():
@@ -148,6 +148,7 @@ def string_table():
 
 
 def _mixed_tree():
+    """Mixed numeric/string plan: dict-rewritable, no opaque atoms."""
     return normalize(And([
         Atom("x", "lt", 0.5, selectivity=0.7),
         Or([Atom("city", "eq", "oslo", selectivity=0.3),
@@ -155,8 +156,43 @@ def _mixed_tree():
     ]))
 
 
-def test_tape_engine_host_fallback_matches_oracle(string_table):
+def _udf_tree():
+    """Plan with a genuinely opaque atom: keeps the host fallback path."""
+    udf = Atom("y", "udf", fn=lambda v: np.abs(v) < 0.7, selectivity=0.5)
+    return normalize(And([
+        Atom("x", "lt", 0.5, selectivity=0.7),
+        Or([udf, Atom("y", "gt", 1.0, selectivity=0.15)]),
+    ]))
+
+
+def test_tape_engine_dict_strings_zero_fallbacks_one_sync(string_table):
+    """The acceptance criterion: a mixed numeric+string (dict-encodable)
+    plan executes as ONE device program — one dispatch, one host sync,
+    host_fallbacks == 0 — bit-identical to the numpy oracle."""
     tree = _mixed_tree()
+    res, _, be = run_query(tree, string_table, planner="deepfish",
+                           engine="tape")
+    want = pack_bits(oracle_mask(string_table, tree.root))
+    np.testing.assert_array_equal(res, want)
+    assert be.host_fallbacks == 0
+    assert be.host_syncs == 1
+    assert be.device_dispatches == 1
+
+
+def test_tape_engine_unrewritten_strings_still_fall_back(string_table):
+    # rewrite_strings=False restores the PR 2 behavior: same bits, one
+    # host round-trip per string atom
+    tree = _mixed_tree()
+    res, _, be = run_query(tree, string_table, planner="deepfish",
+                           engine="tape", rewrite_strings=False)
+    want = pack_bits(oracle_mask(string_table, tree.root))
+    np.testing.assert_array_equal(res, want)
+    assert be.host_fallbacks > 0
+    assert be.records_touched > 0 and be.blocks_touched > 0
+
+
+def test_tape_engine_udf_fallback_matches_oracle(string_table):
+    tree = _udf_tree()
     res, _, be = run_query(tree, string_table, planner="deepfish",
                            engine="tape")
     want = pack_bits(oracle_mask(string_table, tree.root))
@@ -168,7 +204,8 @@ def test_tape_engine_host_fallback_matches_oracle(string_table):
 def test_block_engines_account_fallback_cost_consistently(string_table):
     # regression: the host-fallback path used to skip blocks_touched /
     # records_touched entirely, silently diverging between jax and pallas
-    tree = _mixed_tree()
+    # (UDF atoms are the remaining fallback now that strings dict-rewrite)
+    tree = _udf_tree()
     want = pack_bits(oracle_mask(string_table, tree.root))
     touched = {}
     for engine in ("jax", "pallas"):
@@ -179,6 +216,21 @@ def test_block_engines_account_fallback_cost_consistently(string_table):
         assert be.blocks_touched > 0
         touched[engine] = (be.records_touched, be.blocks_touched)
     assert touched["jax"] == touched["pallas"]
+
+
+def test_string_atoms_share_across_queries_in_code_space(string_table):
+    # the same string atom in two different queries dedupes through
+    # atom_key after the code-space rewrite
+    t1 = normalize(And([Atom("x", "lt", 0.5, selectivity=0.6),
+                        Atom("city", "eq", "oslo", selectivity=0.3)]))
+    t2 = normalize(And([Atom("y", "gt", 0.0, selectivity=0.5),
+                        Atom("city", "eq", "oslo", selectivity=0.3)]))
+    session = QuerySession(string_table, planner="deepfish", engine="numpy")
+    r = session.execute([t1, t2])
+    assert r.stats.shared_atom_keys >= 1
+    for tree, bm in zip((t1, t2), r.bitmaps):
+        want = pack_bits(oracle_mask(string_table, tree.root))
+        np.testing.assert_array_equal(bm, want)
 
 
 # -- cross-batch atom cache + invalidation (table.version) -------------------
