@@ -25,10 +25,12 @@ bench-smoke:
 	$(PY) benchmarks/bench_multiquery.py --queries 48 --templates 6 \
 		--rows 20000 --repeats 1 --out BENCH_multiquery.fresh.json
 	$(PY) benchmarks/bench_device.py --smoke --out BENCH_device.fresh.json
+	$(PY) benchmarks/bench_stream.py --smoke --out BENCH_stream.fresh.json
 	$(PY) benchmarks/check_regression.py \
 		--fresh-device BENCH_device.fresh.json \
 		--baseline-device BENCH_device.json \
-		--fresh-multiquery BENCH_multiquery.fresh.json
+		--fresh-multiquery BENCH_multiquery.fresh.json \
+		--fresh-stream BENCH_stream.fresh.json
 
 # everything CI runs, in CI order: lint -> tests -> bench smokes -> gate
 ci: lint test bench-smoke

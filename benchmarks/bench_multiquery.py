@@ -18,7 +18,7 @@ import time
 
 import numpy as np
 
-from repro.columnar import (QuerySession, LRUPlanCache, make_forest_table,
+from repro.columnar import (LRUPlanCache, QuerySession, make_forest_table,
                             random_tree, run_query)
 
 

@@ -1,0 +1,224 @@
+"""Streaming-ingest benchmark: append-heavy serving vs rebuild-from-scratch.
+
+Interleaves row appends with fixed-template query batches over one table
+(strings included, so dictionary merges run on every append) and compares
+
+* **stream** — one long-lived :class:`StreamSession` draining through the
+  device-resident lockstep tape executor (one bundled host sync per batch):
+  cached atom results splice in only appended rows, the device backend
+  re-uploads only dirty tail blocks, and the plan cache persists;
+* **naive**  — a fresh ``QuerySession`` per round (the pre-ingest behavior:
+  full column re-upload, full-table atom evaluation, cold plan cache).
+
+Reports the delta-reuse ratio (fraction of cached-atom rows served without
+re-evaluation), re-upload bytes vs the naive full uploads, per-batch sync
+counts, and a tape-rebind microsection (plan-cache hits skipping the
+trace/DCE/slot-allocation pipeline on the per-query tape path).  The
+``stream`` section of the committed ``BENCH_device.json`` baseline is
+produced with ``--update-baseline`` and gated by
+``benchmarks/check_regression.py --fresh-stream``.
+
+    PYTHONPATH=src python benchmarks/bench_stream.py --rows 1000000 \
+        --update-baseline BENCH_device.json
+    PYTHONPATH=src python benchmarks/bench_stream.py --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.columnar import (QuerySession, StreamSession, make_forest_table,
+                            random_tree, run_query)
+
+
+def _rows_like(table, n, seed):
+    src = make_forest_table(n, n_dup=1, seed=seed, strings=True)
+    return {name: src.columns[name] for name in table.columns}
+
+
+def bench_stream(args, engine: str) -> dict:
+    table = make_forest_table(args.rows, n_dup=1, seed=7, strings=True)
+    rng = np.random.default_rng(0)
+    pool = [random_tree(table, args.atoms, args.depth, rng)
+            for _ in range(args.templates)]
+    queries = [pool[rng.integers(args.templates)]
+               for _ in range(args.batch)]
+    n_append = max(int(args.rows * args.append_frac), 1)
+
+    # max_pending is one past the batch so the timed drain() below is the
+    # one that runs the batch (admission alone must stay cheap)
+    stream = StreamSession(table, engine=engine, block=args.block,
+                           max_pending=args.batch + 1)
+
+    stream_ms = naive_ms = 0.0
+    reupload_bytes = naive_upload_bytes = 0.0
+    syncs_per_batch = []
+    identical = True
+    initial_upload = None
+    for rnd in range(args.rounds):
+        if rnd:
+            stream.append(_rows_like(table, n_append, seed=100 + rnd))
+            # statistics rebuild lazily after an append (quantile sketches
+            # are not yet mergeable — ROADMAP follow-up); warm them OUTSIDE
+            # the timers so whoever runs first doesn't eat the shared cost
+            for name in table.columns:
+                table.stats(name)
+        for q in queries:
+            stream.submit(q)
+        t0 = time.perf_counter()
+        res = stream.drain()
+        if rnd:
+            # round 0 seeds jit caches / uploads / plans for BOTH sides;
+            # the comparison is the append-interleaved steady state
+            stream_ms += (time.perf_counter() - t0) * 1e3
+        be = stream.session._backend
+        if initial_upload is None:
+            initial_upload = res.stats.upload_bytes
+        else:
+            reupload_bytes += res.stats.upload_bytes
+        syncs_per_batch.append(be.host_syncs if rnd == 0
+                               else be.host_syncs - sum(syncs_per_batch))
+
+        # naive: rebuild everything for the same snapshot
+        naive = QuerySession(table, planner="deepfish", engine=engine,
+                             block=args.block, batched=True)
+        t0 = time.perf_counter()
+        nres = naive.execute(queries)
+        if rnd:
+            naive_ms += (time.perf_counter() - t0) * 1e3
+            naive_upload_bytes += nres.stats.upload_bytes
+
+        identical &= all(np.array_equal(a, b) for a, b in
+                         zip(res.bitmaps, nres.bitmaps))
+        if rnd in (0, args.rounds - 1):
+            for q in queries[:2]:
+                want, _, _ = run_query(q, table, planner="deepfish",
+                                       engine="numpy")
+                identical &= np.array_equal(
+                    res.bitmaps[queries.index(q)], want)
+
+    st = stream.stats
+    out = {
+        "rows_initial": args.rows,
+        "rows_final": table.n_records,
+        "rounds": args.rounds,
+        "append_rows": n_append,
+        "queries": args.batch,
+        "engine": engine,
+        "stream_ms": round(stream_ms, 3),
+        "naive_ms": round(naive_ms, 3),
+        "speedup": round(naive_ms / stream_ms, 2) if stream_ms else 0.0,
+        "delta_reuse_ratio": round(st.delta_reuse_ratio, 4),
+        "atoms_delta_extended": st.atoms_delta_extended,
+        "initial_upload_bytes": initial_upload,
+        "reupload_bytes": reupload_bytes,
+        "naive_upload_bytes": naive_upload_bytes,
+        "reupload_fraction": round(reupload_bytes / naive_upload_bytes, 4)
+        if naive_upload_bytes else 0.0,
+        "host_syncs_per_batch": max(syncs_per_batch),
+        "identical": bool(identical),
+    }
+    return out
+
+
+def bench_rebind(args) -> dict:
+    """Tape-reuse microsection: per-query compiled-tape path, second pass
+    served by rebinding cached host tapes (no re-trace/DCE/slot-alloc)."""
+    table = make_forest_table(min(args.rows, 100_000), n_dup=1, seed=7)
+    rng = np.random.default_rng(1)
+    pool = [random_tree(table, args.atoms, args.depth, rng)
+            for _ in range(args.templates)]
+    queries = [pool[rng.integers(args.templates)]
+               for _ in range(args.batch)]
+    sess = QuerySession(table, planner="deepfish", engine="tape",
+                        block=args.block, batched="auto",
+                        persist_atom_cache=False)
+    t0 = time.perf_counter()
+    sess.execute(queries)                    # cold: trace + compile + jit
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    res = sess.execute(queries)              # warm: rebind cached tapes
+    warm_ms = (time.perf_counter() - t0) * 1e3
+    return {
+        "queries": args.batch,
+        "cold_ms": round(cold_ms, 3),
+        "warm_ms": round(warm_ms, 3),
+        "tape_cache_hits": res.stats.tape_cache_hits,
+        "plan_cache_hits": res.stats.plan_cache_hits,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=1_000_000)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--append-frac", type=float, default=0.02)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--templates", type=int, default=8)
+    ap.add_argument("--atoms", type=int, default=6)
+    ap.add_argument("--depth", type=int, default=3)
+    ap.add_argument("--block", type=int, default=8192)
+    ap.add_argument("--engine", default="tape",
+                    choices=["jax", "pallas", "tape", "tape-pallas"],
+                    help="engine for the contract section (the device "
+                         "lockstep executor: one bundled sync per drain)")
+    ap.add_argument("--host-engine", default="jax",
+                    help="engine for the host-lockstep timing section "
+                         "(where delta reuse shows up as saved kernel "
+                         "work even on CPU)")
+    ap.add_argument("--out", default="BENCH_stream.json")
+    ap.add_argument("--update-baseline", default=None, metavar="DEVICE_JSON",
+                    help="also merge the report as the 'stream' section of "
+                         "the committed device baseline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: small table, few rounds")
+    args = ap.parse_args()
+    if args.smoke:
+        args.rows, args.rounds, args.batch = 50_000, 3, 8
+        args.templates = 2
+
+    def show(name, sec):
+        print(f"{name} [{sec['engine']}]: {sec['rounds']} rounds x "
+              f"{sec['queries']} queries, {sec['rows_initial']} -> "
+              f"{sec['rows_final']} rows (+{sec['append_rows']}/round)")
+        print(f"  stream {sec['stream_ms']:.1f} ms  vs  naive "
+              f"{sec['naive_ms']:.1f} ms  ->  {sec['speedup']:.2f}x  "
+              f"identical={sec['identical']}")
+        print(f"  delta reuse {sec['delta_reuse_ratio']:.1%} "
+              f"({sec['atoms_delta_extended']} atom splices), re-upload "
+              f"{sec['reupload_bytes'] / 1e6:.2f} MB vs naive "
+              f"{sec['naive_upload_bytes'] / 1e6:.2f} MB "
+              f"(fraction {sec['reupload_fraction']:.3f}), "
+              f"{sec['host_syncs_per_batch']:g} sync/batch")
+
+    report = bench_stream(args, args.engine)
+    show("stream", report)
+    report["host"] = bench_stream(args, args.host_engine)
+    show("stream host", report["host"])
+
+    report["rebind"] = bench_rebind(args)
+    rb = report["rebind"]
+    print(f"  tape rebind: cold {rb['cold_ms']:.1f} ms -> warm "
+          f"{rb['warm_ms']:.1f} ms ({rb['tape_cache_hits']}/{rb['queries']} "
+          f"tapes rebound)")
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.update_baseline:
+        with open(args.update_baseline) as f:
+            base = json.load(f)
+        base["stream"] = report
+        with open(args.update_baseline, "w") as f:
+            json.dump(base, f, indent=2)
+        print(f"updated 'stream' section of {args.update_baseline}")
+    if not (report["identical"] and report["host"]["identical"]):
+        raise SystemExit("FAIL: streaming results diverged from the "
+                         "rebuild-from-scratch oracle")
+
+
+if __name__ == "__main__":
+    main()

@@ -120,6 +120,39 @@ def check_device(gate: Gate, fresh: dict, base: dict, tol: float) -> None:
                    f" floor={floor:.2f}")
 
 
+def check_stream(gate: Gate, fresh: dict, base: dict, tol: float,
+                 min_speedup: float) -> None:
+    """Streaming-ingest gates: exact contracts (bit-identicality, one
+    bundled sync per drained batch, every cached tape rebound) plus
+    tolerance-gated floors on the delta-reuse ratio and the re-upload
+    fraction (scale-free ratios, so a smoke run checks against the
+    committed 1M-row baseline) and an *absolute* floor on the host-engine
+    steady-state speedup (the baseline's 1M-row figure grows with table
+    size, so a fraction of it would be unreachable for a smoke table)."""
+    host = fresh.get("host", {})
+    rebind = fresh.get("rebind", {})
+    for name, sec in (("stream", fresh), ("stream.host", host)):
+        gate.check(f"{name}.identical", bool(sec.get("identical")))
+    gate.check("stream.host_syncs_per_batch == 1",
+               fresh.get("host_syncs_per_batch") == 1,
+               f"fresh={fresh.get('host_syncs_per_batch')}")
+    gate.check("stream.rebind all tapes rebound",
+               rebind.get("tape_cache_hits", -1) == rebind.get("queries"),
+               f"hits={rebind.get('tape_cache_hits')} "
+               f"queries={rebind.get('queries')}")
+    floor = tol * base.get("delta_reuse_ratio", 0.0)
+    gate.check(f"stream.delta_reuse_ratio >= {tol:g} x baseline",
+               fresh.get("delta_reuse_ratio", 0.0) >= floor,
+               f"fresh={fresh.get('delta_reuse_ratio')} floor={floor:.3f}")
+    ceil = base.get("reupload_fraction", 1.0) / max(tol, 1e-9)
+    gate.check(f"stream.reupload_fraction <= baseline / {tol:g}",
+               fresh.get("reupload_fraction", 1.0) <= ceil,
+               f"fresh={fresh.get('reupload_fraction')} ceiling={ceil:.3f}")
+    gate.check(f"stream.host.speedup >= {min_speedup:g}",
+               host.get("speedup", 0.0) >= min_speedup,
+               f"fresh={host.get('speedup')}")
+
+
 def check_multiquery(gate: Gate, fresh: dict, min_speedup: float) -> None:
     gate.check("multiquery.identical", bool(fresh.get("identical")))
     gate.check("multiquery.dedupe_ratio >= 1",
@@ -138,6 +171,19 @@ def main() -> int:
                     help="committed baseline (default: BENCH_device.json)")
     ap.add_argument("--fresh-multiquery", default=None,
                     help="optional fresh bench_multiquery.py --out report")
+    ap.add_argument("--fresh-stream", default=None,
+                    help="optional fresh bench_stream.py --out report; "
+                         "compared against the 'stream' section of the "
+                         "device baseline")
+    ap.add_argument("--stream-tolerance", type=float, default=0.5,
+                    help="floor/ceiling fraction for the streaming "
+                         "delta-reuse / re-upload gates (default 0.5 — a "
+                         "collapse detector like the device speedup "
+                         "floors)")
+    ap.add_argument("--min-stream-speedup", type=float, default=1.2,
+                    help="absolute floor on the host-lockstep streaming "
+                         "steady-state speedup vs rebuild-per-round "
+                         "(default 1.2: delta reuse must still pay)")
     ap.add_argument("--speedup-tolerance", type=float, default=0.2,
                     help="fresh speedup must reach this fraction of the "
                          "baseline speedup (default 0.2 — a coarse "
@@ -164,6 +210,15 @@ def main() -> int:
         print(f"multiquery: {args.fresh_multiquery} "
               f"(rows={mq.get('rows')}, queries={mq.get('queries')})")
         check_multiquery(gate, mq, args.min_multiquery_speedup)
+    if args.fresh_stream:
+        with open(args.fresh_stream) as f:
+            stream = json.load(f)
+        base_stream = base.get("stream", {})
+        print(f"stream: {args.fresh_stream} "
+              f"(rows={stream.get('rows_initial')}) vs baseline stream "
+              f"section (rows={base_stream.get('rows_initial')})")
+        check_stream(gate, stream, base_stream, args.stream_tolerance,
+                     args.min_stream_speedup)
     return gate.report()
 
 

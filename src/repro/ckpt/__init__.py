@@ -9,8 +9,8 @@ NamedShardings — elastic re-sharding across different topologies is free
 because arrays are stored unsharded (host gathers; fine for host-RAM-sized
 states, documented as the aggregation point for multi-host).
 """
-from .manager import (CheckpointManager, AsyncCheckpointer, save_pytree,
-                      load_pytree, latest_step)
+from .manager import (AsyncCheckpointer, CheckpointManager, latest_step,
+                      load_pytree, save_pytree)
 
 __all__ = ["CheckpointManager", "AsyncCheckpointer", "save_pytree",
            "load_pytree", "latest_step"]

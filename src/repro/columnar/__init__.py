@@ -25,24 +25,27 @@ two axes:
 Shared results are bit-identical to per-query execution on every engine —
 ``tests/test_differential.py`` and ``tests/test_multiquery.py`` enforce it.
 """
-from .bitmap import (pack_bits, unpack_bits, popcount, bitmap_and, bitmap_or,
-                     bitmap_andnot, bitmap_full, bitmap_empty, WORD)
-from .table import (Table, DictColumn, annotate_selectivities,
-                    empirical_selectivity, rewrite_string_atoms)
-from .forest import make_forest_table
-from .executor import BitmapBackend, JaxBlockBackend, run_query
+from .bitmap import (WORD, bitmap_and, bitmap_andnot, bitmap_empty,
+                     bitmap_full, bitmap_or, extend_bitmap, pack_bits,
+                     popcount, unpack_bits)
 from .device import DeviceTapeBackend
-from .queries import random_tree, random_query_suite
-from .multiquery import (QuerySession, LRUPlanCache, BatchResult, BatchStats,
-                         PlanCacheStats)
+from .executor import BitmapBackend, JaxBlockBackend, run_query
+from .forest import make_forest_table
+from .ingest import ZoneMap
+from .multiquery import (BatchResult, BatchStats, LRUPlanCache, PlanCacheStats,
+                         QuerySession)
+from .queries import random_query_suite, random_tree
+from .stream import StreamFuture, StreamSession, StreamStats
+from .table import (DictColumn, Table, annotate_selectivities,
+                    empirical_selectivity, rewrite_string_atoms)
 
 __all__ = [
     "pack_bits", "unpack_bits", "popcount", "bitmap_and", "bitmap_or",
-    "bitmap_andnot", "bitmap_full", "bitmap_empty", "WORD",
+    "bitmap_andnot", "bitmap_full", "bitmap_empty", "extend_bitmap", "WORD",
     "Table", "DictColumn", "annotate_selectivities", "empirical_selectivity",
     "rewrite_string_atoms", "make_forest_table",
     "BitmapBackend", "JaxBlockBackend", "DeviceTapeBackend", "run_query",
-    "random_tree", "random_query_suite",
+    "ZoneMap", "random_tree", "random_query_suite",
     "QuerySession", "LRUPlanCache", "BatchResult", "BatchStats",
-    "PlanCacheStats",
+    "PlanCacheStats", "StreamFuture", "StreamSession", "StreamStats",
 ]

@@ -63,6 +63,29 @@ def bitmap_andnot(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return a & ~b
 
 
+def extend_bitmap(words: np.ndarray, old_n: int, delta_hits: np.ndarray,
+                  new_n: int) -> np.ndarray:
+    """Grow a packed bitmap over ``old_n`` records to ``new_n`` records,
+    setting the bits of the appended rows from ``delta_hits``
+    (``bool[new_n - old_n]``).  The streaming delta path: a cached
+    full-table atom result stays valid for the untouched prefix and only the
+    appended rows are (re)evaluated — this splices the two together without
+    unpacking the prefix."""
+    delta_hits = np.asarray(delta_hits, dtype=bool)
+    if old_n + delta_hits.size != new_n:
+        raise ValueError("delta length mismatch")
+    out = np.zeros(n_words(new_n), dtype=np.uint32)
+    out[: len(words)] = words
+    if old_n % WORD == 0:
+        # word-aligned prefix: the delta packs independently
+        out[old_n // WORD:] = pack_bits(delta_hits)
+    else:
+        idx = old_n + np.flatnonzero(delta_hits)
+        np.bitwise_or.at(out, idx >> 5,
+                         np.uint32(1) << (idx & 31).astype(np.uint32))
+    return out
+
+
 def next_pow2(x: int) -> int:
     """Next power of two >= x — the block engines' shape bucket, so jitted
     kernels compile once per (opcode, bucket) instead of per exact size."""

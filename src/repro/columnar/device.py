@@ -63,10 +63,10 @@ import numpy as np
 
 from ..core.predicate import Atom
 from ..core.sets import SetBackend, Stats
-from ..core.tape import (ATOM, CHAIN, CMP_OPCODE, EMPTY, FULL, SETOP,
-                         OP_AND, OP_ANDNOT, OP_OR, PlanTape, device_atom)
-from .bitmap import (WORD, bitmap_full, live_block_count, n_words,
-                     next_pow2, pack_bits, unpack_bits)
+from ..core.tape import (ATOM, CHAIN, CMP_OPCODE, EMPTY, FULL, OP_AND,
+                         OP_ANDNOT, OP_OR, PlanTape, SETOP, device_atom)
+from .bitmap import (WORD, bitmap_full, extend_bitmap, live_block_count,
+                     n_words, next_pow2, pack_bits, unpack_bits)
 from .table import Table
 
 _CMP_OPCODE = CMP_OPCODE
@@ -172,6 +172,14 @@ def _multi_atom_impl(col_bm, bits, pops, value, opcode: int, pallas: bool,
     return out, ref.popcount_ref(out)
 
 
+def _inter_multi_impl(a, bits):
+    """One set AND-ed against Q stacked sets in ONE dispatch: a u32[N, W],
+    bits u32[Q, N, W] -> (u32[Q, N, W], i32[Q, N])."""
+    from ..kernels import ref
+    out = bits & a[None]
+    return out, ref.popcount_ref(out)
+
+
 def _union_impl(bits, pops):
     """Union-reduce Q stacked device sets in ONE dispatch (the union is
     only needed for fallback detection + cost accounting)."""
@@ -198,6 +206,7 @@ def _jitted_prims():
                                     "interpret")),
         "multi": _jit(_multi_atom_impl, ("opcode", "pallas", "interpret")),
         "union": _jit(_union_impl, ()),
+        "inter_multi": _jit(_inter_multi_impl, ()),
     }
 
 
@@ -247,6 +256,7 @@ class DeviceTapeBackend(SetBackend):
         self.host_syncs = 0
         self.host_fallbacks = 0
         self.device_dispatches = 0
+        self.uploaded_bytes = 0       # host->device column traffic
         self.last_tape: Optional[PlanTape] = None
         self._jcols: Dict[str, "object"] = {}
         self._full: Optional[_DevSet] = None
@@ -272,12 +282,65 @@ class DeviceTapeBackend(SetBackend):
                 return None
             arr = np.zeros(self._padded, dtype=np.float32)
             arr[: self.n] = raw.astype(np.float32)
+            self.uploaded_bytes += arr.nbytes
             col = jnp.asarray(arr.reshape(self.nblocks, self.wpb, 32)
                               .transpose(0, 2, 1))
             self._jcols[name] = col
         elif col is False:
             return None
         return col
+
+    def refresh(self) -> int:
+        """Grow the backend after a pure table *append*: device-resident
+        columns keep every block below the append boundary and upload only
+        the dirty tail (the power-of-two block-count bucket may grow, in
+        which case the new padding blocks ride along as zeros).  Caller
+        must have proven the append via :meth:`Table.delta_since`.  Returns
+        the bytes uploaded."""
+        import jax.numpy as jnp
+        n_new = self.table.n_records
+        if n_new == self.n:
+            return 0
+        dirty = self.n // self.block
+        self.n = n_new
+        self.nblocks = next_pow2((n_new + self.block - 1) // self.block)
+        self._padded = self.nblocks * self.block
+        self._full = self._empty = None
+        up = 0
+        for name, col in list(self._jcols.items()):
+            if col is False:
+                continue               # non-numeric: still host-resident
+            raw = self.table.column_data(name)
+            tail = np.zeros((self.nblocks - dirty) * self.block,
+                            dtype=np.float32)
+            tail[: n_new - dirty * self.block] = \
+                raw[dirty * self.block:].astype(np.float32)
+            up += tail.nbytes
+            tail = jnp.asarray(
+                tail.reshape(self.nblocks - dirty, self.wpb, 32)
+                .transpose(0, 2, 1))
+            self._jcols[name] = (jnp.concatenate([col[:dirty], tail])
+                                 if dirty else tail)
+        self.uploaded_bytes += up
+        return up
+
+    def extend_set(self, s: _DevSet, old_n: int, delta_hits) -> _DevSet:
+        """Splice the appended rows' hit mask into a cached device set (the
+        streaming delta path): the old bitmap's blocks stay on device and
+        only the delta words upload — one OR dispatch, no host sync."""
+        import jax.numpy as jnp
+        from ..kernels import ref
+        delta_hits = np.asarray(delta_hits, dtype=bool)
+        flat = extend_bitmap(np.zeros(n_words(old_n), dtype=np.uint32),
+                             old_n, delta_hits, old_n + len(delta_hits))
+        words = np.zeros(self.nblocks * self.wpb, dtype=np.uint32)
+        words[: len(flat)] = flat
+        bits = s.bits
+        if bits.shape[0] < self.nblocks:
+            bits = jnp.pad(bits, ((0, self.nblocks - bits.shape[0]), (0, 0)))
+        self.device_dispatches += 1
+        bits = bits | jnp.asarray(words.reshape(self.nblocks, self.wpb))
+        return _DevSet(bits, ref.popcount_ref(bits))
 
     def _from_flat(self, words: np.ndarray) -> _DevSet:
         """Host flat packed words -> device blocked set."""
@@ -333,6 +396,20 @@ class DeviceTapeBackend(SetBackend):
         import jax
         self.host_syncs += 1
         return float(jax.device_get(d.pops.sum()))
+
+    def inter_multi(self, a: _DevSet, ds: Sequence[_DevSet]
+                    ) -> List[_DevSet]:
+        """Q cached-atom intersections in ONE stacked dispatch (the
+        lockstep executor's atom-cache hit path: per-query setops would
+        otherwise cost a dispatch each)."""
+        if len(ds) == 1:
+            return [self.inter(a, ds[0])]
+        import jax.numpy as jnp
+        bits = jnp.stack([d.bits for d in ds])
+        self.stats.setops += len(ds)
+        self.device_dispatches += 1
+        out, pops = _jitted_prims()["inter_multi"](a.bits, bits)
+        return [_DevSet(out[j], pops[j]) for j in range(len(ds))]
 
     def _account(self, atoms: Sequence[Atom], pops, device: bool = True):
         """Queue device-side cost counters for one costed application of

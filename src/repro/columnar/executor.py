@@ -19,19 +19,78 @@ Both plug into BestDMachine / ShallowFish / NoOrOpt unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional
 
 import numpy as np
 
 from ..core.plan import Plan, execute_plan
-from ..core.predicate import Atom, PredicateTree
+from ..core.predicate import (Atom, PredicateTree, ZONE_ALL, ZONE_MAYBE,
+                              ZONE_NONE, atom_key, zone_verdicts)
 from ..core.sets import SetBackend, Stats
 from .bitmap import (WORD, bitmap_and, bitmap_andnot, bitmap_empty,
-                     bitmap_full, bitmap_or, live_block_count, n_words,
-                     next_pow2, pack_bits, popcount, unpack_bits)
+                     bitmap_full, bitmap_or, extend_bitmap, live_block_count,
+                     n_words, next_pow2, pack_bits, popcount, unpack_bits)
 from .table import Table, rewrite_string_atoms
 
 _OPCODE = {"lt": 0, "le": 1, "gt": 2, "ge": 3, "eq": 4, "ne": 5}
+
+
+def _f32_atom(atom: Atom) -> Atom:
+    """Round an atom's constant(s) through float32 — the zone-verdict copy
+    used by the f32 block engines, so pruning decisions match what the
+    kernels (which compare in f32) actually compute."""
+    v = atom.value
+    try:
+        if atom.op in ("in", "not_in"):
+            v = tuple(float(np.float32(x)) for x in v)
+        else:
+            v = float(np.float32(v))
+    except (TypeError, ValueError):
+        return atom
+    return dataclasses.replace(atom, value=v, aid=atom.aid)
+
+
+class _ZonePruner:
+    """Shared per-backend zone-verdict cache (atom key -> verdicts).
+
+    Valid only while the underlying table is unchanged — owners clear it on
+    refresh/rebuild, exactly like uploaded columns.
+    """
+
+    def __init__(self, table: Table, block: int, f32: bool):
+        self.table = table
+        self.block = block
+        self.f32 = f32
+        self._cache: Dict[tuple, Optional[np.ndarray]] = {}
+
+    def clear(self) -> None:
+        self._cache.clear()
+
+    def verdicts(self, atom: Atom,
+                 exact: bool = False) -> Optional[np.ndarray]:
+        """``exact=True`` bypasses the f32 rounding — required whenever the
+        pruned evaluation itself runs in exact arithmetic (the host-gather
+        fallback), where f32-rounded ALL/NONE verdicts could contradict
+        the float64 ``eval_atom`` they stand in for."""
+        if atom.fn is not None:
+            return None
+        f32 = self.f32 and not exact
+        key = (atom_key(atom), f32)
+        if key in self._cache:
+            return self._cache[key]
+        zm = self.table.zone_map(atom.column, self.block)
+        if zm is None:
+            verd = None
+        else:
+            a = _f32_atom(atom) if f32 else atom
+            mins, maxs = zm.mins, zm.maxs
+            if f32:
+                mins = mins.astype(np.float32).astype(np.float64)
+                maxs = maxs.astype(np.float32).astype(np.float64)
+            verd = zone_verdicts(a, mins, maxs)
+        self._cache[key] = verd
+        return verd
 
 
 class BitmapBackend(SetBackend):
@@ -44,14 +103,26 @@ class BitmapBackend(SetBackend):
     Default off = the paper-faithful count(D) gather engine.
     ``records_touched`` accounts actual records read (== records_evaluated
     for the gather engine; |R| per full-scanned atom otherwise).
+
+    ``zone_block``: optional block size enabling zone-map pre-pruning of the
+    gather (streaming-ingest zone maps, ``columnar.ingest``): blocks whose
+    min/max bounds decide the atom outright skip the gather — NONE blocks
+    contribute nothing, ALL blocks pass their input bits through.  Off by
+    default so the oracle stays the paper-faithful count(D) engine; the
+    paper's cost metrics (``stats``) are accounted *before* pruning either
+    way, so plan-quality comparisons are unaffected.
     """
 
-    def __init__(self, table: Table, scan_threshold: Optional[float] = None):
+    def __init__(self, table: Table, scan_threshold: Optional[float] = None,
+                 zone_block: Optional[int] = None):
         self.table = table
         self.n = table.n_records
         self.scan_threshold = scan_threshold
         self.stats = Stats()
         self.records_touched = 0.0
+        self.blocks_pruned = 0
+        self._zones = (_ZonePruner(table, zone_block, f32=False)
+                       if zone_block else None)
 
     def full(self):
         return bitmap_full(self.n)
@@ -82,6 +153,9 @@ class BitmapBackend(SetBackend):
             self.records_touched += self.n
             hits = self.table.eval_atom(atom, None)    # sequential scan
             return pack_bits(hits) & d
+        verd = self._zones.verdicts(atom) if self._zones else None
+        if verd is not None and (verd != ZONE_MAYBE).any():
+            return self._eval_pruned(atom, d, verd)
         self.records_touched += cnt
         mask = unpack_bits(d, self.n)
         idx = np.nonzero(mask)[0]
@@ -89,6 +163,31 @@ class BitmapBackend(SetBackend):
         out = np.zeros(self.n, dtype=bool)
         out[idx[hits]] = True
         return pack_bits(out)
+
+    def _eval_pruned(self, atom: Atom, d, verd: np.ndarray):
+        """Gather restricted to MAYBE blocks; ALL blocks pass ``d`` bits
+        through, NONE blocks contribute nothing."""
+        wpb = self._zones.block // WORD
+        nblocks = len(verd)
+        d2 = np.zeros((nblocks, wpb), dtype=np.uint32)
+        d2.reshape(-1)[: n_words(self.n)] = d
+        live = (d2 != 0).any(axis=1)
+        self.blocks_pruned += int((live & (verd != ZONE_MAYBE)).sum())
+        ev = d2.copy()
+        ev[verd != ZONE_MAYBE] = 0
+        mask = unpack_bits(ev.reshape(-1)[: n_words(self.n)], self.n)
+        idx = np.nonzero(mask)[0]
+        self.records_touched += len(idx)
+        hits = self.table.eval_atom(atom, idx)
+        out = np.zeros(self.n, dtype=bool)
+        out[idx[hits]] = True
+        sat = np.zeros((nblocks, wpb), dtype=np.uint32)
+        sat.reshape(-1)[: n_words(self.n)] = pack_bits(out)
+        sat[verd == ZONE_ALL] |= d2[verd == ZONE_ALL]
+        return sat.reshape(-1)[: n_words(self.n)].copy()
+
+    def extend_set(self, s, old_n: int, delta_hits):
+        return extend_bitmap(s, old_n, delta_hits, self.table.n_records)
 
     def apply_atom(self, atom: Atom, d):
         cnt = popcount(d)
@@ -120,7 +219,8 @@ class JaxBlockBackend(SetBackend):
     the paper's expensive user-defined predicates are host functions.
     """
 
-    def __init__(self, table: Table, block: int = 8192, engine: str = "jax"):
+    def __init__(self, table: Table, block: int = 8192, engine: str = "jax",
+                 zone_prune: bool = True):
         if block % WORD:
             raise ValueError("block must be a multiple of 32")
         self.table = table
@@ -130,16 +230,58 @@ class JaxBlockBackend(SetBackend):
         self.stats = Stats()
         self.blocks_touched = 0
         self.records_touched = 0.0
+        self.blocks_pruned = 0        # blocks decided by zone maps alone
         self.kernel_invocations = 0   # fused predicate kernel dispatches
         self.host_syncs = 0           # device->host transfers (per-step tax)
+        self.uploaded_bytes = 0       # host->device column traffic
         self.nblocks = (self.n + block - 1) // block
         self._padded = self.nblocks * block
         self._jcols: Dict[str, "object"] = {}
+        self._zones = (_ZonePruner(table, block, f32=True)
+                       if zone_prune else None)
         # preallocated padded bitmap scratch, reused across applies (grown
         # on demand for larger lockstep groups)
         self._words = np.zeros((1, self.nblocks * (block // WORD)),
                                dtype=np.uint32)
         self._uw = np.zeros(self.nblocks * (block // WORD), dtype=np.uint32)
+
+    def refresh(self) -> int:
+        """Grow the backend after a pure table *append*: uploaded columns
+        keep every block below the append boundary and upload only the
+        dirty tail (the boundary block plus appended blocks).  Caller must
+        have proven the append via :meth:`Table.delta_since`.  Returns the
+        bytes uploaded."""
+        import jax.numpy as jnp
+        n_new = self.table.n_records
+        if self._zones:
+            self._zones.clear()
+        if n_new == self.n:
+            return 0
+        dirty = self.n // self.block
+        self.n = n_new
+        self.nblocks = (n_new + self.block - 1) // self.block
+        self._padded = self.nblocks * self.block
+        wpb = self.block // WORD
+        self._words = np.zeros((self._words.shape[0], self.nblocks * wpb),
+                               dtype=np.uint32)
+        self._uw = np.zeros(self.nblocks * wpb, dtype=np.uint32)
+        up = 0
+        for name, col in list(self._jcols.items()):
+            raw = self.table.column_data(name)
+            tail = np.zeros((self.nblocks - dirty) * self.block,
+                            dtype=np.float32)
+            tail[: n_new - dirty * self.block] = \
+                raw[dirty * self.block:].astype(np.float32)
+            up += tail.nbytes
+            tail = jnp.asarray(tail.reshape(self.nblocks - dirty,
+                                            self.block))
+            self._jcols[name] = (jnp.concatenate([col[:dirty], tail])
+                                 if dirty else tail)
+        self.uploaded_bytes += up
+        return up
+
+    def extend_set(self, s, old_n: int, delta_hits):
+        return extend_bitmap(s, old_n, delta_hits, self.n)
 
     # -- set algebra (host, packed words) -------------------------------------
     def full(self):
@@ -175,6 +317,7 @@ class JaxBlockBackend(SetBackend):
                 return None
             arr = np.zeros(self._padded, dtype=np.float32)
             arr[: self.n] = raw.astype(np.float32)
+            self.uploaded_bytes += arr.nbytes
             col = jnp.asarray(arr.reshape(self.nblocks, self.block))
             self._jcols[name] = col
         return col
@@ -204,20 +347,46 @@ class JaxBlockBackend(SetBackend):
         ``union`` against each packed set in ``ds`` (ds[j] ⊆ union)."""
         opcode = _OPCODE.get(atom.op)
         col = self._blocked_column(atom.column) if opcode is not None else None
+        # the kernel path compares in f32, the fallback in exact float64 —
+        # verdicts must match the arithmetic of the evaluation they prune
+        verd = (self._zones.verdicts(atom, exact=col is None)
+                if self._zones else None)
+        if verd is not None and len(verd) != self.nblocks:
+            verd = None      # backend not yet refreshed onto this snapshot
         if col is None:
             # LIKE/UDF/categorical-string fallback: gather only the union's
             # records on the host (cost ∝ count(union), the oracle path).
             # Accounted identically on both block engines: count(union)
-            # records, block-granular touch count.
-            mask = unpack_bits(union, self.n)
+            # records, block-granular touch count.  Zone maps (numeric
+            # IN/NOT-IN atoms) prune the gather to MAYBE blocks; ALL blocks
+            # pass their input bits straight through.
+            wpb = self.block // WORD
+            u2 = np.zeros((self.nblocks, wpb), dtype=np.uint32)
+            u2.reshape(-1)[: n_words(self.n)] = union
+            all_bits = None
+            if verd is not None and (verd != ZONE_MAYBE).any():
+                live = (u2 != 0).any(axis=1)
+                self.blocks_pruned += int((live
+                                           & (verd != ZONE_MAYBE)).sum())
+                # ALL blocks: every record satisfies the atom, so the
+                # union's bits survive without touching the column — save
+                # them before zeroing the non-MAYBE rows out of the gather
+                all_bits = u2[verd == ZONE_ALL].copy()
+                u2[verd != ZONE_MAYBE] = 0
+            uw = u2.reshape(-1)[: n_words(self.n)]
+            mask = unpack_bits(uw, self.n)
             idx = np.nonzero(mask)[0]
             self.records_touched += len(idx)
             self.blocks_touched += live_block_count(
-                union, self.nblocks, self.block // WORD)
+                uw, self.nblocks, wpb)
             hits = self.table.eval_atom(atom, idx)
             out = np.zeros(self.n, dtype=bool)
             out[idx[hits]] = True
-            sat = pack_bits(out)
+            sat2 = np.zeros((self.nblocks, wpb), dtype=np.uint32)
+            sat2.reshape(-1)[: n_words(self.n)] = pack_bits(out)
+            if all_bits is not None:
+                sat2[verd == ZONE_ALL] |= all_bits
+            sat = sat2.reshape(-1)[: n_words(self.n)].copy()
             return [bitmap_and(sat, d) for d in ds]
 
         q = len(ds)
@@ -230,9 +399,18 @@ class JaxBlockBackend(SetBackend):
             words[j, : n_words(self.n)] = d
         words3d = words.reshape(q, self.nblocks, wpb)
         live = self._live_blocks(union)
+        all_blocks = np.zeros(0, dtype=live.dtype)
+        if verd is not None and len(live):
+            lv = verd[live]
+            all_blocks = live[lv == ZONE_ALL]
+            self.blocks_pruned += int((lv != ZONE_MAYBE).sum())
+            live = live[lv == ZONE_MAYBE]
         self.blocks_touched += len(live)
         self.records_touched += len(live) * self.block
         out3d = np.zeros((q, self.nblocks, wpb), dtype=np.uint32)
+        if len(all_blocks):
+            # zone-ALL blocks: D ∧ P == D there, no kernel work needed
+            out3d[:, all_blocks, :] = words3d[:, all_blocks, :]
         if len(live):
             import jax.numpy as jnp
             # pad the live-block batch to a power-of-two bucket: padding

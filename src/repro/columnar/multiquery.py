@@ -46,8 +46,8 @@ from ..core import deepfish, nooropt, optimal_plan, shallowfish
 from ..core.bestd import BestDMachine
 from ..core.cost import CostModel, PerAtomCostModel
 from ..core.plan import Plan, execute_plan, finalize_plan
-from ..core.predicate import (Node, PredicateTree, atom_key, canonical_key,
-                              normalize, tree_copy)
+from ..core.predicate import (Atom, Node, PredicateTree, atom_key,
+                              canonical_key, normalize, tree_copy)
 from ..core.sets import SetBackend
 from .executor import BitmapBackend, JaxBlockBackend
 from .table import Table, annotate_selectivities, rewrite_string_atoms
@@ -68,6 +68,7 @@ class PlanCacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    tape_hits: int = 0      # compiled host tapes served by rebinding
 
     @property
     def hit_rate(self) -> float:
@@ -82,6 +83,14 @@ class LRUPlanCache:
     :func:`canonical_key`; ``capacity`` bounds the entry count (least
     recently used evicted first).  One cache may serve many tables/batches:
     the key contains everything the planners consume.
+
+    Entries optionally carry the compiled host-side
+    :class:`~repro.core.tape.PlanTape` (``with_tape=True``): a hit then
+    skips the whole trace / chain-fusion / DCE / slot-allocation pipeline
+    by *rebinding* the cached tape's atom ids onto the key-equal tree
+    through the canonical atom permutation
+    (:func:`~repro.core.tape.rebind_tape`) — closing the remaining
+    per-query host work on the tape engines.
     """
 
     def __init__(self, capacity: int = 256, sel_step: float = 0.05,
@@ -91,7 +100,11 @@ class LRUPlanCache:
         self.capacity = capacity
         self.sel_step = sel_step
         self.cost_step = cost_step
-        self._entries: "OrderedDict[tuple, List[int]]" = OrderedDict()
+        # full_key -> {"cpos": plan order in canonical positions,
+        #              "inv": aid -> canonical position for the tree the
+        #                     cached tape was compiled against,
+        #              "tape": PlanTape or None}
+        self._entries: "OrderedDict[tuple, dict]" = OrderedDict()
         self.stats = PlanCacheStats()
 
     def __len__(self) -> int:
@@ -99,31 +112,54 @@ class LRUPlanCache:
 
     def get_or_plan(self, tree: PredicateTree, planner: str,
                     model: Optional[CostModel] = None,
-                    total_records: float = 1.0) -> Plan:
-        """Serve a plan for ``tree`` from cache, planning on a miss."""
+                    total_records: float = 1.0, with_tape: bool = False):
+        """Serve a plan for ``tree`` from cache, planning on a miss.
+
+        With ``with_tape=True`` returns ``(plan, tape)`` where ``tape`` is
+        the compiled :class:`PlanTape` — rebound from the cached one on a
+        hit, compiled (and cached) on a miss.
+        """
+        from ..core.tape import compile_tape, rebind_tape
         model = model or PerAtomCostModel()
         if planner not in _ORDERED:
-            return _PLANNERS[planner](tree, model, total_records=total_records)
+            plan = _PLANNERS[planner](tree, model,
+                                      total_records=total_records)
+            return (plan, compile_tape(plan)) if with_tape else plan
         t0 = time.perf_counter()
         key, atom_order = canonical_key(tree, self.sel_step, self.cost_step)
         # repr of the (frozen dataclass) model pins its type + parameters:
         # plans found under one cost model must not serve another
         full_key = (planner, tree.n, repr(model), key)
-        cpos = self._entries.get(full_key)
-        if cpos is not None:
+        ent = self._entries.get(full_key)
+        if ent is not None:
             self._entries.move_to_end(full_key)
             self.stats.hits += 1
-            order = [atom_order[p] for p in cpos]
-            return finalize_plan(tree, order, planner, model, t0,
+            order = [atom_order[p] for p in ent["cpos"]]
+            plan = finalize_plan(tree, order, planner, model, t0,
                                  total_records)
+            if not with_tape:
+                return plan
+            if ent["tape"] is None:
+                # plan was cached tape-less (a non-tape engine filled it):
+                # compile once, reuse by rebinding from here on
+                ent["tape"] = compile_tape(plan)
+                ent["inv"] = {aid: p for p, aid in enumerate(atom_order)}
+                return plan, ent["tape"]
+            self.stats.tape_hits += 1
+            inv = ent["inv"]
+            aid_map = [atom_order[inv[a]] for a in range(tree.n)]
+            return plan, rebind_tape(ent["tape"], tree, aid_map)
         self.stats.misses += 1
         plan = _PLANNERS[planner](tree, model, total_records=total_records)
         inv = {aid: p for p, aid in enumerate(atom_order)}
-        self._entries[full_key] = [inv[aid] for aid in plan.order]
+        tape = compile_tape(plan) if with_tape else None
+        self._entries[full_key] = {
+            "cpos": [inv[aid] for aid in plan.order],
+            "inv": inv, "tape": tape}
         if len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.stats.evictions += 1
-        return plan
+        return (plan, tape) if with_tape else plan
 
 
 # ---------------------------------------------------------------------------
@@ -143,7 +179,13 @@ class BatchStats:
     kernel_batches: int = 0      # grouped multi-bitmap kernel invocations
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
+    tape_cache_hits: int = 0     # compiled tapes served by rebinding
     lockstep_rounds: int = 0
+    # streaming-delta accounting: appended-row reuse of cached atom results
+    atoms_delta_extended: int = 0   # cached atom bitmaps spliced, not redone
+    delta_rows_evaluated: float = 0.0  # appended rows actually (re)evaluated
+    delta_rows_reused: float = 0.0     # prefix rows served from cache
+    upload_bytes: float = 0.0          # host->device column bytes this batch
 
     @property
     def dedupe_ratio(self) -> float:
@@ -155,6 +197,13 @@ class BatchStats:
     def plan_hit_rate(self) -> float:
         total = self.plan_cache_hits + self.plan_cache_misses
         return self.plan_cache_hits / total if total else 0.0
+
+    @property
+    def delta_reuse_ratio(self) -> float:
+        """Fraction of cached-atom rows served without re-evaluation after
+        appends (1.0 = only appended rows were touched)."""
+        total = self.delta_rows_reused + self.delta_rows_evaluated
+        return self.delta_rows_reused / total if total else 0.0
 
 
 @dataclass
@@ -314,14 +363,23 @@ class QuerySession:
         return (self.table.version,
                 tuple((k, id(v)) for k, v in self.table.columns.items()))
 
-    def _make_backend(self) -> SetBackend:
+    def _make_backend(self, appended_from: Optional[int] = None
+                      ) -> SetBackend:
         if self.engine == "numpy":
             return BitmapBackend(self.table)
         # the block/device engines hold uploaded columns: reuse one backend
-        # across batches until a table write invalidates it
+        # across batches until a table write invalidates it; a *pure append*
+        # (proven via Table.delta_since) refreshes the backend in place —
+        # only the dirty tail blocks re-upload
         fp = self._table_fingerprint()
-        if self._backend is not None and self._backend_version == fp:
-            return self._backend
+        if self._backend is not None:
+            if self._backend_version == fp:
+                return self._backend
+            if appended_from is not None and hasattr(self._backend,
+                                                     "refresh"):
+                self._backend.refresh()
+                self._backend_version = fp
+                return self._backend
         if self.engine in ("tape", "tape-pallas"):
             from .device import DeviceTapeBackend
             be = DeviceTapeBackend(
@@ -333,6 +391,31 @@ class QuerySession:
         self._backend = be
         self._backend_version = fp
         return be
+
+    def _extend_atom_cache(self, from_row: int, backend: SetBackend,
+                           stats: BatchStats) -> None:
+        """Splice appended rows into the persisted atom-result cache: each
+        cached full-table bitmap stays valid for rows below ``from_row``
+        (the append boundary, per the block-epoch contract), so only the
+        delta evaluates — cost ∝ rows appended, not |R|."""
+        n = self.table.n_records
+        idx = np.arange(from_row, n)
+        for key in list(self._atom_cache):
+            col, op, value = key
+            if isinstance(value, tuple) and value[:1] == ("fn",):
+                del self._atom_cache[key]     # opaque UDF: can't re-evaluate
+                continue
+            atom = Atom(col, op, value)
+            try:
+                hits = self.table.eval_atom(atom, idx)
+                self._atom_cache[key] = backend.extend_set(
+                    self._atom_cache[key], from_row, hits)
+            except (NotImplementedError, KeyError):
+                del self._atom_cache[key]
+                continue
+            stats.atoms_delta_extended += 1
+            stats.delta_rows_evaluated += len(idx)
+            stats.delta_rows_reused += from_row
 
     def _resolve_planner(self, tree: PredicateTree) -> str:
         if self.planner == "auto":
@@ -361,13 +444,38 @@ class QuerySession:
             # the code-space atoms from the dictionary value frequencies
             trees = [rewrite_string_atoms(t, self.table) for t in trees]
         stats = BatchStats(n_queries=len(trees))
-        h0, m0 = self.plan_cache.stats.hits, self.plan_cache.stats.misses
-        plans = [self.plan_cache.get_or_plan(
-                     t, self._resolve_planner(t), self.model,
-                     total_records=self.table.n_records)
-                 for t in trees]
-        stats.plan_cache_hits = self.plan_cache.stats.hits - h0
-        stats.plan_cache_misses = self.plan_cache.stats.misses - m0
+        planners = [self._resolve_planner(t) for t in trees]
+        # "auto": lockstep for the per-step block engines (their win is the
+        # fused multi-query kernel); compiled whole-plan tapes for the
+        # device engines (their win is one dispatch + one sync per query).
+        # batched=True forces device-resident lockstep on any block engine.
+        tape_engine = self.engine in ("tape", "tape-pallas")
+        lockstep = ((self.batched is True
+                     or (self.batched == "auto"
+                         and self.engine in ("jax", "pallas")))
+                    and all(pl in _ORDERED for pl in planners))
+        use_tapes = tape_engine and not lockstep
+        cs = self.plan_cache.stats
+        h0, m0, th0 = cs.hits, cs.misses, cs.tape_hits
+        tapes: Optional[List] = None
+        if use_tapes:
+            # per-query compiled device programs: plan-cache hits rebind
+            # the cached host tape (no re-trace/DCE/slot-allocation) and
+            # share jitted programs via the tape's structural key
+            pairs = [self.plan_cache.get_or_plan(
+                         t, pl, self.model,
+                         total_records=self.table.n_records, with_tape=True)
+                     for t, pl in zip(trees, planners)]
+            plans = [p for p, _ in pairs]
+            tapes = [tp for _, tp in pairs]
+        else:
+            plans = [self.plan_cache.get_or_plan(
+                         t, pl, self.model,
+                         total_records=self.table.n_records)
+                     for t, pl in zip(trees, planners)]
+        stats.plan_cache_hits = cs.hits - h0
+        stats.plan_cache_misses = cs.misses - m0
+        stats.tape_cache_hits = cs.tape_hits - th0
 
         # cross-query atom census (per-query *sets*: an atom repeated inside
         # one query does not make it shared)
@@ -378,30 +486,38 @@ class QuerySession:
         stats.shared_atom_keys = len(shared)
 
         # cross-batch atom-result reuse: results persist across execute()
-        # calls until a table write is detected
-        if self._table_fingerprint() != self._cache_version:
-            self._atom_cache.clear()
-            self._cache_version = self._table_fingerprint()
-        inner = self._make_backend()
+        # calls until a table write is detected.  A write explained as a
+        # pure *append* (Table.delta_since, the block-epoch contract) keeps
+        # every cached result: the backend refreshes in place (tail-block
+        # upload only) and cached atom bitmaps splice in the delta rows
+        # instead of re-evaluating the full table.
+        fp = self._table_fingerprint()
+        appended_from: Optional[int] = None
+        if fp != self._cache_version:
+            appended_from = self.table.delta_since(self._cache_version[0])
+            if (appended_from is not None
+                    and appended_from >= self.table.n_records):
+                # version never moved yet arrays were rebound: treat as a
+                # full rewrite (the rebind idiom bypasses the mutation log)
+                appended_from = None
+        up0 = (getattr(self._backend, "uploaded_bytes", 0)
+               if self._backend is not None else 0)
+        reuse_backend = self._backend
+        inner = self._make_backend(appended_from)
+        if fp != self._cache_version:
+            if appended_from is None:
+                self._atom_cache.clear()
+            elif appended_from < self.table.n_records:
+                self._extend_atom_cache(appended_from, inner, stats)
+            self._cache_version = fp
         sb = _SharedAtomBackend(
             inner, shared, stats,
             cache=self._atom_cache if self.persist_atom_cache else None)
         base_applications = inner.stats.atom_applications
-        # "auto": lockstep for the per-step block engines (their win is the
-        # fused multi-query kernel); compiled whole-plan tapes for the
-        # device engines (their win is one dispatch + one sync per query).
-        # batched=True forces device-resident lockstep on any block engine.
-        tape_engine = self.engine in ("tape", "tape-pallas")
-        lockstep = (self.batched is True
-                    or (self.batched == "auto"
-                        and self.engine in ("jax", "pallas")))
-        if lockstep and all(p.planner in _ORDERED for p in plans):
+        if lockstep:
             bitmaps = self._execute_lockstep(trees, plans, sb, stats)
         elif tape_engine:
-            # one compiled device program per query: plan-cache hits reuse
-            # jitted programs (no cross-query atom sharing on this path)
-            from ..core.tape import compile_tape
-            bitmaps = [inner.run_tape(compile_tape(p)) for p in plans]
+            bitmaps = [inner.run_tape(tp) for tp in tapes]
             stats.logical_atoms += sum(len(p.tree.atoms) for p in plans)
         else:
             bitmaps = [execute_plan(p, sb) for p in plans]
@@ -411,6 +527,8 @@ class QuerySession:
             bitmaps = inner.materialize(bitmaps)
         stats.physical_atoms = (inner.stats.atom_applications
                                 - base_applications)
+        stats.upload_bytes = (getattr(inner, "uploaded_bytes", 0)
+                              - (up0 if inner is reuse_backend else 0))
         result = BatchResult(bitmaps=bitmaps, plans=plans, stats=stats,
                              backend=inner,
                              wall_s=time.perf_counter() - t0)
@@ -450,7 +568,11 @@ class QuerySession:
                 sat_full = sb.cache.get(key)
                 if sat_full is not None:
                     stats.atom_cache_hits += len(reqs)
-                    sats = [sb.inter(sat_full, d) for (_, _, _, d) in reqs]
+                    # one stacked dispatch on device backends (not one
+                    # setop per query): the cache hit must stay cheaper
+                    # than the fused atom kernel it replaces
+                    sats = inner.inter_multi(sat_full,
+                                             [d for (_, _, _, d) in reqs])
                 elif key in sb.shared_keys:
                     # one fused kernel invocation over the stacked live
                     # bitmaps, plus a full-table row seeding the atom cache

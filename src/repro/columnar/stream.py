@@ -1,0 +1,212 @@
+"""Async query admission over an append-only table.
+
+:class:`StreamSession` is the serving front of the streaming-ingest
+subsystem: queries are *admitted* into an in-flight batch
+(:meth:`submit` returns a :class:`StreamFuture` immediately) while rows
+keep appending (:meth:`append`), and the batch *drains* through a
+:class:`~repro.columnar.multiquery.QuerySession` — by default the
+device-resident lockstep tape executor, whose one-bundled-host-sync-
+per-batch contract is untouched because a drain is just one
+``QuerySession.execute`` call.
+
+Consistency contract — **snapshot-at-drain**: every query in a drained
+batch evaluates against the table state at drain time (the paper's
+optimality results are per-snapshot; interleaved appends move which
+snapshot a query sees, never its correctness).  A query submitted before
+an append but drained after it therefore *does* see the appended rows.
+Callers needing a bound use :meth:`drain` explicitly or ``max_pending``.
+
+Drains are cheap under churn because of the block-delta machinery
+underneath: the session's atom-result cache splices appended rows into
+cached bitmaps instead of re-evaluating the table, the device backend
+uploads only dirty tail blocks, and plan-cache hits rebind compiled
+tapes (``BatchStats.delta_reuse_ratio`` / ``upload_bytes`` /
+``tape_cache_hits`` make all three visible per batch).
+
+The layer is cooperative and thread-safe: ``submit`` / ``append`` /
+``drain`` may be called from multiple threads (one lock, no background
+thread of its own); ``StreamFuture.result()`` triggers a drain when its
+batch is still pending, so single-threaded callers never deadlock.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from ..core.predicate import Node, PredicateTree
+from .bitmap import unpack_bits
+from .multiquery import BatchResult, BatchStats, QuerySession
+from .table import Table
+
+
+class StreamFuture:
+    """Handle for one admitted query; resolves when its batch drains."""
+
+    def __init__(self, session: "StreamSession"):
+        self._session = session
+        self._event = threading.Event()
+        self._bitmap: Optional[np.ndarray] = None
+        self._n_records = 0
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def _resolve(self, bitmap: np.ndarray, n_records: int) -> None:
+        self._bitmap = bitmap
+        self._n_records = n_records
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._event.set()
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """The query's packed record bitmap (over the snapshot its batch
+        drained against).  Triggers a drain if the batch is still pending —
+        a single-threaded caller never blocks."""
+        if not self._event.is_set():
+            self._session._drain_for(self)
+        if not self._event.wait(timeout):
+            raise TimeoutError("stream query still pending")
+        if self._exc is not None:
+            raise self._exc
+        return self._bitmap
+
+    def mask(self, timeout: Optional[float] = None) -> np.ndarray:
+        """The result as a boolean record mask."""
+        return unpack_bits(self.result(timeout), self._n_records)
+
+    @property
+    def n_records(self) -> int:
+        """Rows in the snapshot the query was evaluated against."""
+        return self._n_records
+
+
+@dataclass
+class StreamStats:
+    """Lifetime accounting of one :class:`StreamSession`."""
+
+    submitted: int = 0
+    completed: int = 0
+    batches: int = 0
+    appends: int = 0
+    appended_rows: int = 0
+    max_batch: int = 0
+    # aggregated from the underlying QuerySession's per-batch stats
+    atoms_delta_extended: int = 0
+    delta_rows_evaluated: float = 0.0
+    delta_rows_reused: float = 0.0
+    upload_bytes: float = 0.0
+    tape_cache_hits: int = 0
+    last_batch: Optional[BatchStats] = field(default=None, repr=False)
+
+    @property
+    def mean_batch(self) -> float:
+        return self.completed / self.batches if self.batches else 0.0
+
+    @property
+    def delta_reuse_ratio(self) -> float:
+        total = self.delta_rows_reused + self.delta_rows_evaluated
+        return self.delta_rows_reused / total if total else 0.0
+
+    def absorb(self, bs: BatchStats) -> None:
+        self.batches += 1
+        self.completed += bs.n_queries
+        self.max_batch = max(self.max_batch, bs.n_queries)
+        self.atoms_delta_extended += bs.atoms_delta_extended
+        self.delta_rows_evaluated += bs.delta_rows_evaluated
+        self.delta_rows_reused += bs.delta_rows_reused
+        self.upload_bytes += bs.upload_bytes
+        self.tape_cache_hits += bs.tape_cache_hits
+        self.last_batch = bs
+
+
+class StreamSession:
+    """Admit queries into an in-flight batch interleaved with appends.
+
+    Parameters mirror :class:`QuerySession` (``engine="tape"`` +
+    ``batched=True`` by default: drains run the device-resident lockstep
+    executor, one bundled host sync per batch); ``max_pending`` bounds the
+    in-flight batch — admission past it drains synchronously.
+    """
+
+    def __init__(self, table: Table, planner: str = "deepfish",
+                 engine: str = "tape", max_pending: int = 64,
+                 batched: Union[bool, str] = True, **session_kwargs):
+        if max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+        self.table = table
+        self.max_pending = max_pending
+        self.session = QuerySession(table, planner=planner, engine=engine,
+                                    batched=batched, **session_kwargs)
+        self.stats = StreamStats()
+        self.last_result: Optional[BatchResult] = None
+        self._lock = threading.RLock()
+        self._pending: List[tuple] = []     # [(query, future), ...]
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    # -- admission -------------------------------------------------------------
+    def submit(self, query: Union[Node, PredicateTree]) -> StreamFuture:
+        """Admit a query; returns immediately with a future that resolves
+        at the next drain (which this call performs itself when the
+        in-flight batch reaches ``max_pending``)."""
+        fut = StreamFuture(self)
+        with self._lock:
+            self.stats.submitted += 1
+            self._pending.append((query, fut))
+            if len(self._pending) >= self.max_pending:
+                self._drain_locked()
+        return fut
+
+    def append(self, rows: Dict) -> int:
+        """Interleave an append with admission: lands in the table as a
+        block-aligned delta (see :meth:`Table.append`); queries draining
+        *after* this call see the rows (snapshot-at-drain)."""
+        with self._lock:
+            start = self.table.append(rows)
+            self.stats.appends += 1
+            self.stats.appended_rows += self.table.n_records - start
+            return start
+
+    # -- draining --------------------------------------------------------------
+    def drain(self) -> Optional[BatchResult]:
+        """Execute the in-flight batch now (one ``QuerySession.execute`` =
+        one lockstep run, one bundled sync on the device engines); resolves
+        every pending future.  Returns the batch result, or None when
+        nothing was pending."""
+        with self._lock:
+            return self._drain_locked()
+
+    def _drain_for(self, fut: StreamFuture) -> None:
+        with self._lock:
+            if not fut.done():
+                self._drain_locked()
+
+    def _drain_locked(self) -> Optional[BatchResult]:
+        if not self._pending:
+            return None
+        batch, self._pending = self._pending, []
+        try:
+            result = self.session.execute([q for q, _ in batch])
+        except BaseException as exc:
+            for _, fut in batch:
+                fut._fail(exc)
+            raise
+        n = self.table.n_records
+        for (_, fut), bm in zip(batch, result.bitmaps):
+            fut._resolve(bm, n)
+        self.stats.absorb(result.stats)
+        self.last_result = result
+        return result
+
+    def close(self) -> Optional[BatchResult]:
+        """Drain whatever is still in flight (alias for :meth:`drain`)."""
+        return self.drain()

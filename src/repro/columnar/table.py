@@ -36,43 +36,147 @@ class ColumnStats:
     value_freqs: Optional[Dict[Any, float]] = None  # categorical columns
 
 
+#: fraction of appended-out-of-order dictionary values above which a merge
+#: triggers a full recode back to sorted code space (see
+#: :meth:`DictColumn.merge_append`)
+RECODE_FRACTION = 0.25
+
+
 @dataclass
 class DictColumn:
     """Dictionary encoding of a non-numeric column.
 
-    ``values`` is the *sorted* unique-value dictionary, ``codes`` the int32
-    code of every record (``values[codes]`` reconstructs the column), and
-    ``freqs[c]`` the fraction of records holding code ``c``.  Sortedness is
-    the load-bearing property: it makes ``<``/``<=`` and prefix ranges
-    order-preserving in code space, so string atoms rewrite to the same
-    numeric comparisons the fused device kernels already execute.
+    ``values`` is the unique-value dictionary, ``codes`` the int32 code of
+    every record (``values[codes]`` reconstructs the column), ``counts[c]``
+    the number of records holding code ``c`` and ``freqs[c]`` that count as
+    a fraction.  A freshly built dictionary is *sorted* — the load-bearing
+    property that makes ``<``/``<=`` and prefix ranges order-preserving in
+    code space, so string atoms rewrite to the numeric comparisons the
+    fused device kernels already execute.
+
+    Streaming appends (:meth:`merge_append`) keep existing codes valid by
+    *appending* unseen values past the sorted prefix instead of re-running
+    ``np.unique`` over the whole column; ``sorted_n`` tracks how much of
+    the dictionary is still in sort order.  Out-of-order tail values only
+    cost rewrite precision (hit masks fragment into more code runs, cf.
+    ``core.predicate.MAX_CODE_RUNS``) — when the unsorted tail outgrows
+    :data:`RECODE_FRACTION` of the dictionary, :meth:`recode` re-sorts it
+    and rewrites the code column in one vectorized pass (the
+    "recode-on-overflow" event, which the owning table surfaces as a column
+    write so code-space caches invalidate).
     """
 
-    values: np.ndarray        # sorted unique values
+    values: np.ndarray        # unique values; sorted up to ``sorted_n``
     codes: np.ndarray         # int32[n_records]
     freqs: np.ndarray         # float64[len(values)], sums to 1
+    counts: Optional[np.ndarray] = None   # int64[len(values)]
+    sorted_n: int = -1        # length of the sorted prefix
+
+    def __post_init__(self):
+        if self.counts is None:
+            # legacy construction path: counts reconstructed from freqs
+            self.counts = np.rint(self.freqs * len(self.codes)).astype(
+                np.int64)
+        if self.sorted_n < 0:
+            self.sorted_n = len(self.values)
+        self._sorted_view = None       # (sorted values, their codes) cache
 
     @property
     def n(self) -> int:
         return len(self.values)
 
+    @property
+    def is_sorted(self) -> bool:
+        return self.sorted_n == len(self.values)
+
     def decode(self, codes: Optional[np.ndarray] = None) -> np.ndarray:
         """Materialize values from codes (the whole column by default)."""
         return self.values[self.codes if codes is None else codes]
 
+    def _sorted(self):
+        """Sorted view ``(values, codes)`` for lookups on a (possibly)
+        unsorted dictionary; identity when fully sorted."""
+        if self.is_sorted:
+            return self.values, None
+        if self._sorted_view is None:
+            perm = np.argsort(self.values, kind="stable")
+            self._sorted_view = (self.values[perm], perm.astype(np.int32))
+        return self._sorted_view
+
     def encode(self, value) -> Optional[int]:
         """Code of ``value``, or None if absent from the dictionary."""
-        i = int(np.searchsorted(self.values, value))
-        if i < len(self.values) and self.values[i] == value:
-            return i
+        sv, perm = self._sorted()
+        i = int(np.searchsorted(sv, value))
+        if i < len(sv) and sv[i] == value:
+            return i if perm is None else int(perm[i])
         return None
+
+    # -- streaming merge -------------------------------------------------------
+    def merge_append(self, tail: np.ndarray,
+                     recode_fraction: float = RECODE_FRACTION) -> dict:
+        """Fold appended records ``tail`` into the dictionary *without* a
+        full rebuild: uniquing touches only the tail, unseen values append
+        past the existing code space (existing codes stay valid), and the
+        tail's codes extend ``codes``.  Returns an info dict with
+        ``new_values`` (count of dictionary growth) and ``recoded`` (True
+        when the unsorted overflow crossed ``recode_fraction`` and the
+        whole code column was rewritten back to sorted order)."""
+        tail = np.asarray(tail)
+        tvals, tinv, tcounts = np.unique(tail, return_inverse=True,
+                                         return_counts=True)
+        sv, perm = self._sorted()
+        pos = np.searchsorted(sv, tvals)
+        pos = np.minimum(pos, max(len(sv) - 1, 0))
+        found = (sv[pos] == tvals) if len(sv) else np.zeros(len(tvals), bool)
+        tcode = np.empty(len(tvals), dtype=np.int32)
+        if found.any():
+            hit = pos[found]
+            tcode[found] = hit if perm is None else perm[hit]
+        new_vals = tvals[~found]
+        n_old = len(self.values)
+        tcode[~found] = n_old + np.arange(len(new_vals), dtype=np.int32)
+        if len(new_vals):
+            was_sorted_extension = (
+                self.is_sorted
+                and (n_old == 0 or new_vals[0] > self.values[-1]))
+            self.values = np.concatenate([self.values, new_vals])
+            self.counts = np.concatenate(
+                [self.counts, np.zeros(len(new_vals), dtype=np.int64)])
+            if was_sorted_extension:
+                # appended run is itself sorted and extends the prefix
+                self.sorted_n = len(self.values)
+            self._sorted_view = None
+        np.add.at(self.counts, tcode, tcounts)
+        self.codes = np.concatenate(
+            [self.codes, tcode[tinv].astype(np.int32)])
+        self.freqs = self.counts / max(len(self.codes), 1)
+        unsorted = len(self.values) - self.sorted_n
+        recoded = unsorted > max(4, int(recode_fraction * len(self.values)))
+        if recoded:
+            self.recode()
+        return {"new_values": int(len(new_vals)), "recoded": recoded}
+
+    def recode(self) -> None:
+        """Re-sort the dictionary and rewrite the code column (one
+        vectorized O(n) pass) — existing codes become INVALID, so callers
+        must invalidate anything keyed on the old code space."""
+        perm = np.argsort(self.values, kind="stable")
+        rank = np.empty(len(perm), dtype=np.int32)
+        rank[perm] = np.arange(len(perm), dtype=np.int32)
+        self.values = self.values[perm]
+        self.counts = self.counts[perm]
+        self.freqs = self.counts / max(len(self.codes), 1)
+        self.codes = rank[self.codes]
+        self.sorted_n = len(self.values)
+        self._sorted_view = None
 
 
 def build_dict_column(col: np.ndarray) -> DictColumn:
     values, codes, counts = np.unique(col, return_inverse=True,
                                       return_counts=True)
     return DictColumn(values=values, codes=codes.astype(np.int32),
-                      freqs=counts / max(len(col), 1))
+                      freqs=counts / max(len(col), 1),
+                      counts=counts.astype(np.int64))
 
 
 class Table:
@@ -98,9 +202,26 @@ class Table:
         # contents (atom-result caches, device-resident column uploads)
         # invalidate when it moves
         self.version = 0
+        # bounded mutation log backing delta_since(): entries are
+        # (version-after, kind, payload) with kind "append" (payload = row
+        # count before the append) or "col" (payload = rewritten column
+        # name).  _mutlog_base is the version the log history starts at;
+        # queries older than it conservatively report "everything changed".
+        self._mutlog: list = []
+        self._mutlog_base = 0
+        self._zones: Dict[Tuple[str, int], tuple] = {}
 
     def __getitem__(self, name: str) -> np.ndarray:
         return self.columns[name]
+
+    _MUTLOG_CAP = 256
+
+    def _log_mutation(self, kind: str, payload) -> None:
+        self._mutlog.append((self.version, kind, payload))
+        if len(self._mutlog) > self._MUTLOG_CAP:
+            drop = len(self._mutlog) - self._MUTLOG_CAP
+            self._mutlog_base = self._mutlog[drop - 1][0]
+            del self._mutlog[:drop]
 
     def set_column(self, name: str, values: np.ndarray) -> None:
         """Add or overwrite a column (a *write*: bumps ``version`` so
@@ -114,6 +235,55 @@ class Table:
         self._stats.pop(code_column(name), None)
         self._dicts.pop(name, None)
         self.version += 1
+        self._log_mutation("col", name)
+
+    # -- streaming ingest ------------------------------------------------------
+    def append(self, rows: Dict[str, Any]) -> int:
+        """Append a batch of rows (dict of per-column arrays, one entry per
+        existing column).  Lands as a block-aligned delta: existing rows,
+        their codes, cached per-block zone maps and any cache keyed through
+        :meth:`delta_since` stay valid — see ``columnar.ingest``.  Returns
+        the row index the appended batch starts at."""
+        from .ingest import append_rows
+        return append_rows(self, rows)
+
+    def delta_since(self, version: int,
+                    columns: Optional[set] = None) -> Optional[int]:
+        """Explain what changed since ``version``: the first changed row
+        index if *every* relevant mutation since then was an append (rows
+        below it — and everything derived from them, block-granular — are
+        untouched), ``self.n_records`` if nothing changed, or None when a
+        relevant column was rewritten (``set_column``, a dictionary recode)
+        or the history is unknown (``version`` predates the bounded log).
+
+        ``columns`` optionally scopes the question to a set of column names
+        (derived ``#codes`` names are normalized to their base column);
+        None means "any column matters" — the conservative default every
+        whole-table cache uses."""
+        if version == self.version:
+            return self.n_records
+        if version > self.version or version < self._mutlog_base:
+            return None
+        if columns is not None:
+            columns = {decode_column(c) or c for c in columns}
+        boundary = self.n_records
+        for ver, kind, payload in reversed(self._mutlog):
+            if ver <= version:
+                break
+            if kind == "append":
+                boundary = min(boundary, payload)
+            elif columns is None or payload in columns:
+                return None
+        return boundary
+
+    def zone_map(self, name: str, block: int):
+        """Per-block zone map (min/max/null bounds) for ``name`` at block
+        size ``block`` — None for non-numeric columns.  Built lazily,
+        cached, and *extended incrementally* on appends (only blocks at or
+        past the append boundary recompute); any column rewrite rebuilds.
+        Derived ``#codes`` columns resolve to the dictionary code bounds."""
+        from .ingest import table_zone_map
+        return table_zone_map(self, name, block)
 
     @property
     def column_names(self):

@@ -8,19 +8,19 @@ Public API:
     BestDMachine                       — Algorithms 1+2 (BestD + Update)
     compile_tape / PlanTape            — plan -> static device-executable tape
 """
-from .predicate import (Atom, And, Or, Not, Node, PredicateTree, normalize,
-                        tree_copy, atom_key, canonical_key)
-from .cost import (CostModel, MemoryCostModel, HddCostModel, PerAtomCostModel,
-                   BlockCostModel, check_triangle)
-from .sets import SetBackend, VertexBackend, Stats
 from .bestd import BestDMachine
-from .orderp import orderp, orderp_with_cost
-from .estimate import EstimatorState, plan_cost, step_fractions
-from .plan import Plan, execute_plan, execute_bestd, finalize_plan
-from .shallowfish import shallowfish, shallowfish_execute
+from .cost import (BlockCostModel, CostModel, HddCostModel, MemoryCostModel,
+                   PerAtomCostModel, check_triangle)
 from .deepfish import deepfish, one_lookahead_order
-from .optimal import optimal_plan, optimal_bruteforce
+from .estimate import EstimatorState, plan_cost, step_fractions
 from .nooropt import nooropt, nooropt_execute
+from .optimal import optimal_bruteforce, optimal_plan
+from .orderp import orderp, orderp_with_cost
+from .plan import Plan, execute_bestd, execute_plan, finalize_plan
+from .predicate import (And, Atom, Node, Not, Or, PredicateTree, atom_key,
+                        canonical_key, normalize, tree_copy)
+from .sets import SetBackend, Stats, VertexBackend
+from .shallowfish import shallowfish, shallowfish_execute
 from .tape import PlanTape, TapeOp, compile_tape
 
 __all__ = [

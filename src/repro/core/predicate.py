@@ -416,6 +416,91 @@ def _anti_range_expr(src: "Atom", lo: int, hi: int, n: int,
                _code_atom(src, "ge", hi, _mass(freqs, hi, n, n))])
 
 
+# ---------------------------------------------------------------------------
+# Zone-map pre-pruning
+# ---------------------------------------------------------------------------
+# Streaming ingest (columnar.ingest) maintains per-block zone maps — the
+# min/max (and null count) of every block-aligned slice of a column,
+# extended incrementally as rows append.  ``zone_verdicts`` turns a zone map
+# into a per-block trivalent verdict for one atom, which an engine applies
+# BEFORE touching the column: NONE blocks are dropped from the live-block
+# bitmap (no record in the block can satisfy the atom), ALL blocks pass
+# their input bits through unchanged (every record satisfies it), and only
+# MAYBE blocks pay the costed evaluation.  Verdicts are conservative: any
+# uncertainty (NaN bounds, non-numeric values, opaque predicates) lands in
+# MAYBE, so pruning is always semantics-preserving.
+
+ZONE_NONE, ZONE_ALL, ZONE_MAYBE = 0, 1, 2
+
+
+def _zone_numeric(value) -> Optional[float]:
+    if isinstance(value, bool):
+        return float(value)
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        return None
+
+
+def zone_verdicts(atom: "Atom", mins: np.ndarray,
+                  maxs: np.ndarray) -> Optional[np.ndarray]:
+    """Per-block verdicts for ``atom`` given block min/max bounds.
+
+    Returns ``int8[nblocks]`` of :data:`ZONE_NONE` / :data:`ZONE_ALL` /
+    :data:`ZONE_MAYBE`, or None when the atom cannot be zone-pruned (opaque
+    fn, pattern ops, non-numeric constants).  Comparisons with NaN bounds
+    are False on both sides and therefore fall into MAYBE.
+    """
+    if atom.fn is not None:
+        return None
+    mins = np.asarray(mins, dtype=np.float64)
+    maxs = np.asarray(maxs, dtype=np.float64)
+    op = atom.op
+    if op in ("in", "not_in"):
+        try:
+            vals = np.asarray([float(v) for v in atom.value],
+                              dtype=np.float64)
+        except (TypeError, ValueError):
+            return None
+        # a member inside [min, max] makes a hit possible in the block;
+        # NaN bounds make every comparison False, so they must be masked
+        # OUT of the definite verdicts (unlike the scalar ops below, the
+        # negations here would otherwise turn uncertainty into certainty)
+        hit_possible = np.zeros(mins.shape, dtype=bool)
+        for v in vals:
+            hit_possible |= (mins <= v) & (v <= maxs)
+        valid = ~(np.isnan(mins) | np.isnan(maxs))
+        const = valid & (mins == maxs)          # single-valued block
+        if op == "in":
+            none = valid & ~hit_possible
+            all_ = const & hit_possible
+        else:
+            none = const & hit_possible
+            all_ = valid & ~hit_possible
+    else:
+        v = _zone_numeric(atom.value)
+        if v is None or op not in ("lt", "le", "gt", "ge", "eq", "ne"):
+            return None
+        if op == "lt":
+            all_, none = maxs < v, mins >= v
+        elif op == "le":
+            all_, none = maxs <= v, mins > v
+        elif op == "gt":
+            all_, none = mins > v, maxs <= v
+        elif op == "ge":
+            all_, none = mins >= v, maxs < v
+        elif op == "eq":
+            none = (v < mins) | (v > maxs)
+            all_ = (mins == maxs) & (mins == v)
+        else:  # ne
+            all_ = (v < mins) | (v > maxs)
+            none = (mins == maxs) & (mins == v)
+    out = np.full(mins.shape, ZONE_MAYBE, dtype=np.int8)
+    out[all_] = ZONE_ALL
+    out[none] = ZONE_NONE              # NONE wins ties (empty blocks)
+    return out
+
+
 def codes_expression(atom: "Atom", hits: np.ndarray,
                      freqs: Optional[np.ndarray] = None) -> Optional[Node]:
     """Rewrite a string atom into code-space numeric atoms.

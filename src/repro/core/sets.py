@@ -41,6 +41,19 @@ class SetBackend:
         the default just loops."""
         return [self.apply_atom(atom, d) for d in ds]
 
+    def inter_multi(self, a, ds: Sequence):
+        """Intersect one set against several others (the lockstep executor's
+        cached-atom fast path).  Device backends override this with a single
+        stacked dispatch; the default just loops."""
+        return [self.inter(a, d) for d in ds]
+
+    def extend_set(self, s, old_n: int, delta_hits):
+        """Grow a cached record set over ``old_n`` records by the appended
+        rows' hit mask ``delta_hits`` (streaming ingest delta reuse).
+        Backends whose sets can be spliced override this; callers treat
+        NotImplementedError as "drop the cache entry instead"."""
+        raise NotImplementedError
+
     def count(self, d) -> float:
         raise NotImplementedError
 

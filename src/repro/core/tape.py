@@ -276,6 +276,29 @@ def _alloc_slots(ops: List[TapeOp], result: int
     return out, phys[result], n_phys
 
 
+def rebind_tape(tape: PlanTape, tree: PredicateTree,
+                aid_map: Sequence[int]) -> PlanTape:
+    """Rebind a compiled tape onto a key-equal tree (plan-cache tape reuse).
+
+    ``aid_map[a]`` gives the atom id in ``tree`` playing the role of atom
+    ``a`` in the tape's original tree.  Because the plan cache only serves
+    trees with equal canonical keys (identical shape under the canonical
+    sibling order), the op structure — slots, setops, chain groups — is
+    valid verbatim; only the atom ids need remapping.  This skips the whole
+    trace / chain-fusion / DCE / slot-allocation pipeline on a cache hit:
+    the rebound tape binds its own columns and comparison values at run
+    time, and shares the jitted device program whenever its structural
+    ``key`` matches (same columns and ops, drifted constants).
+    """
+    ops = tuple(
+        op if not op.aids else TapeOp(
+            op.kind, op.dst, a=op.a, b=op.b, setop=op.setop,
+            aids=tuple(aid_map[a] for a in op.aids), conj=op.conj)
+        for op in tape.ops)
+    return PlanTape(tree=tree, ops=ops, result=tape.result,
+                    n_slots=tape.n_slots, planner=tape.planner)
+
+
 def compile_tape(plan: Plan, chain: bool = True) -> PlanTape:
     """Compile ``plan`` into a :class:`PlanTape`.
 

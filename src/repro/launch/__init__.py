@@ -1,6 +1,6 @@
 """Launchers: production mesh, dry-run driver, roofline analyzer,
 train/serve entry points.  NOTE: dryrun must be run as a fresh process
 (python -m repro.launch.dryrun) — it force-sets 512 host devices."""
-from .mesh import make_production_mesh, make_host_mesh
+from .mesh import make_host_mesh, make_production_mesh
 
 __all__ = ["make_production_mesh", "make_host_mesh"]

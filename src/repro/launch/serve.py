@@ -18,6 +18,10 @@ def main():
     ap.add_argument("--engine", default="numpy",
                     choices=["numpy", "jax", "pallas", "tape", "tape-pallas"],
                     help="predicate-router engine (tape = device-resident)")
+    ap.add_argument("--stream", action="store_true",
+                    help="demo the streaming admission layer: interleaved "
+                         "metadata appends + async rule queries drained "
+                         "through the batched tape executor")
     args = ap.parse_args()
 
     from ..configs import get_config, get_smoke
@@ -41,6 +45,32 @@ def main():
         Atom("tier", "eq", 2) & Atom("flagged", "eq", 0),        # fast lane
         Atom("prompt_tokens", "lt", 1024) & Atom("flagged", "eq", 0),  # small
     ]
+    if args.stream:
+        # streaming admission: queries admitted while request metadata
+        # appends; each drain is one lockstep batch (one bundled sync on
+        # the tape engines), and appends reuse cached work below the
+        # append boundary (delta splicing + tail-block-only uploads)
+        from ..columnar import StreamSession, Table
+        engine = args.engine if args.engine != "numpy" else "tape"
+        stream = StreamSession(Table(dict(requests)), engine=engine,
+                               max_pending=len(rules))
+        futs = [stream.submit(r) for r in rules]
+        admitted = futs[0].mask()                  # triggers the drain
+        print(f"stream drain 1: {admitted.sum()}/{stream.table.n_records} "
+              f"admitted")
+        for _ in range(3):
+            stream.append({k: rng.permutation(v) for k, v in
+                           requests.items()})
+            futs = [stream.submit(r) for r in rules]
+            stream.drain()
+        st = stream.stats
+        print(f"stream: {st.batches} batches (mean {st.mean_batch:.1f} "
+              f"queries), {st.appends} appends interleaved "
+              f"({st.appended_rows} rows); delta reuse "
+              f"{st.delta_reuse_ratio:.0%}, re-upload "
+              f"{st.upload_bytes / 1024:.0f} KiB, tape-cache hits "
+              f"{st.tape_cache_hits}")
+
     router = RequestRouter(rules, engine=args.engine)
     routes = router.route(requests)
     for name, mask in zip(("admit", "fast", "small"), routes):

@@ -33,7 +33,7 @@ def main():
     from ..models import api
     from ..runtime import StragglerWatchdog, TrainLoop
     from ..ckpt import CheckpointManager
-    from ..sharding import use_mesh, named_sharding
+    from ..sharding import named_sharding, use_mesh
     from ..train import make_train_step, opt_state_pspecs
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)

@@ -1,6 +1,6 @@
 """Pure-JAX model zoo for the assigned architectures."""
-from .config import LMConfig, SHAPES, ShapeCell, supports_shape, SUBQUADRATIC
 from . import api
+from .config import LMConfig, SHAPES, SUBQUADRATIC, ShapeCell, supports_shape
 
 __all__ = ["LMConfig", "SHAPES", "ShapeCell", "supports_shape",
            "SUBQUADRATIC", "api"]

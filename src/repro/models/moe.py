@@ -20,8 +20,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from ..sharding import batch_axes, current_mesh
 from .common import ParamDef, swiglu

@@ -1,5 +1,5 @@
 """Fault-tolerant runtime: step loop with checkpoint/restart, straggler
 watchdog, failure injection for tests."""
-from .loop import TrainLoop, StragglerWatchdog, FailureInjector
+from .loop import FailureInjector, StragglerWatchdog, TrainLoop
 
 __all__ = ["TrainLoop", "StragglerWatchdog", "FailureInjector"]

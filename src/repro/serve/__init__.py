@@ -1,5 +1,5 @@
 """Serving substrate: batched prefill/decode engine + predicate-based
 request routing (the paper's engine applied to request metadata)."""
-from .engine import ServeEngine, RequestRouter
+from .engine import RequestRouter, ServeEngine
 
 __all__ = ["ServeEngine", "RequestRouter"]

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..columnar.bitmap import unpack_bits
 from ..columnar.multiquery import BatchResult, LRUPlanCache, QuerySession
 from ..columnar.table import Table
 from ..core import Node
@@ -38,11 +39,20 @@ class RequestRouter:
 
     def __init__(self, exprs, planner: str = "auto", engine: str = "numpy",
                  plan_cache: Optional[LRUPlanCache] = None,
-                 share_threshold: int = 2):
+                 share_threshold: int = 2, persistent: bool = False):
         """``engine`` accepts every :class:`QuerySession` engine; with
         ``"tape"`` the rule set runs device-resident — the power-of-two
         shape bucketing in the device backend means routers seeing
-        drifting batch sizes reuse compiled kernels across calls."""
+        drifting batch sizes reuse compiled kernels across calls.
+
+        ``persistent=True`` turns the router into a *streaming* router: the
+        request metadata accumulates in one append-only table (every
+        ``route`` call is a :meth:`Table.append`), served by a single
+        long-lived session — so per-call cost is proportional to the new
+        requests, not the history: cached atom results splice in only the
+        appended rows and device backends upload only dirty tail blocks.
+        Each call still returns the route matrix for *its own* requests.
+        """
         if isinstance(exprs, Node):
             exprs = [exprs]
         self.exprs = list(exprs)
@@ -53,18 +63,39 @@ class RequestRouter:
         # explicit None-check: an empty LRUPlanCache is falsy (len == 0)
         self.plan_cache = plan_cache if plan_cache is not None else LRUPlanCache()
         self.share_threshold = share_threshold
+        self.persistent = persistent
+        self.table: Optional[Table] = None
+        self._session: Optional[QuerySession] = None
         self.last_result: Optional[BatchResult] = None
 
     def route(self, requests: Dict[str, np.ndarray]) -> np.ndarray:
         """requests: columnar dict of per-request metadata arrays.
         Returns a (n_rules, n_requests) boolean route matrix."""
-        table = Table({k: np.asarray(v) for k, v in requests.items()})
-        session = QuerySession(table, planner=self.planner,
-                               engine=self.engine,
-                               plan_cache=self.plan_cache,
-                               share_threshold=self.share_threshold)
-        self.last_result = session.execute(self.exprs)
-        return self.last_result.masks(table.n_records)
+        arrays = {k: np.asarray(v) for k, v in requests.items()}
+        if not self.persistent:
+            table = Table(arrays)
+            session = QuerySession(table, planner=self.planner,
+                                   engine=self.engine,
+                                   plan_cache=self.plan_cache,
+                                   share_threshold=self.share_threshold)
+            self.last_result = session.execute(self.exprs)
+            return self.last_result.masks(table.n_records)
+        if self.table is None:
+            self.table = Table(arrays)
+            self._session = QuerySession(
+                self.table, planner=self.planner, engine=self.engine,
+                plan_cache=self.plan_cache,
+                share_threshold=self.share_threshold)
+            start = 0
+        else:
+            start = self.table.append(arrays)
+        self.last_result = self._session.execute(self.exprs)
+        # unpack only this call's rows (word-sliced): per-call cost must
+        # stay proportional to the batch, not the accumulated history
+        n = self.table.n_records
+        w0 = start // 32
+        return np.stack([unpack_bits(bm[w0:], n - w0 * 32)[start - w0 * 32:]
+                         for bm in self.last_result.bitmaps])
 
     def admit(self, requests: Dict[str, np.ndarray]) -> np.ndarray:
         """Boolean admit mask: requests accepted by at least one rule."""

@@ -6,7 +6,7 @@ from repro.columnar import (BitmapBackend, JaxBlockBackend, bitmap_and,
                             bitmap_andnot, bitmap_empty, bitmap_full,
                             bitmap_or, pack_bits, popcount, random_tree,
                             run_query, unpack_bits)
-from repro.core import Atom, And, Or, normalize
+from repro.core import And, Atom, Or, normalize
 from repro.core.predicate import Atom as AtomT
 
 
@@ -79,7 +79,7 @@ def test_block_skipping_reduces_touched_blocks():
     tree = normalize(a & b)
     annotate_selectivities(tree, table)
     be = JaxBlockBackend(table, block=2048)
-    from repro.core import shallowfish, execute_plan, PerAtomCostModel
+    from repro.core import PerAtomCostModel, execute_plan, shallowfish
     plan = shallowfish(tree, PerAtomCostModel(), total_records=n)
     res = execute_plan(plan, be)
     total_blocks = be.nblocks * be.stats.atom_applications

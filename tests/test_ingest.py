@@ -1,0 +1,314 @@
+"""Streaming ingest: appends, mergeable dictionaries, zone maps, deltas."""
+import numpy as np
+import pytest
+
+import repro.columnar.table as table_mod
+from repro.columnar import (BitmapBackend, JaxBlockBackend, extend_bitmap,
+                            make_forest_table, pack_bits, run_query,
+                            unpack_bits)
+from repro.columnar.table import Table, build_dict_column
+from repro.core import (And, Atom, PerAtomCostModel, deepfish, execute_plan,
+                        normalize)
+from repro.core.predicate import (ZONE_ALL, ZONE_MAYBE, ZONE_NONE,
+                                  zone_verdicts)
+
+
+def _mini(n=4000, seed=7, strings=False):
+    return make_forest_table(n, n_dup=1, seed=seed, strings=strings)
+
+
+def _rows_like(table, n, seed):
+    src = make_forest_table(n, n_dup=1, seed=seed,
+                            strings=any(c.dtype.kind in "USO"
+                                        for c in table.columns.values()))
+    return {name: src.columns[name] for name in table.columns}
+
+
+# -- Table.append / delta_since ----------------------------------------------
+
+def test_append_basic_and_delta_since():
+    t = _mini()
+    v0 = t.version
+    old = {k: v.copy() for k, v in t.columns.items()}
+    start = t.append(_rows_like(t, 500, seed=1))
+    assert start == 4000 and t.n_records == 4500
+    assert t.version == v0 + 1
+    for name, col in t.columns.items():
+        assert len(col) == 4500
+        np.testing.assert_array_equal(col[:4000], old[name])
+    # delta explanation: everything below the boundary is untouched
+    assert t.delta_since(v0) == 4000
+    assert t.delta_since(t.version) == 4500          # nothing changed since
+    t.append(_rows_like(t, 100, seed=2))
+    assert t.delta_since(v0) == 4000                 # min over both appends
+    # a rewrite is NOT explainable as an append
+    t.set_column("slope_0", t.columns["slope_0"].copy())
+    assert t.delta_since(v0) is None
+    # ...unless the question is scoped to untouched columns
+    assert t.delta_since(v0, columns={"elevation_0"}) == 4000
+
+
+def test_append_validates_columns():
+    t = _mini(1000)
+    with pytest.raises(ValueError):
+        t.append({"elevation_0": np.zeros(5, np.float32)})
+    rows = _rows_like(t, 5, seed=3)
+    rows["bogus"] = np.zeros(5)
+    with pytest.raises(ValueError):
+        t.append(rows)
+    ragged = _rows_like(t, 5, seed=3)
+    ragged["slope_0"] = ragged["slope_0"][:2]
+    with pytest.raises(ValueError):
+        t.append(ragged)
+
+
+def test_delta_since_beyond_log_is_conservative():
+    t = _mini(500)
+    v0 = t.version
+    for i in range(t._MUTLOG_CAP + 5):
+        t.append(_rows_like(t, 1, seed=i))
+    assert t.delta_since(v0) is None
+    assert t.delta_since(t.version - 1) is not None
+
+
+# -- mergeable dictionaries ---------------------------------------------------
+
+def test_dict_merge_no_full_rebuild(monkeypatch):
+    t = _mini(3000, strings=True)
+    dc = t.dict_column("cover_0")
+    old_codes = dc.codes.copy()
+
+    def boom(col):  # pragma: no cover - the assertion is that it never runs
+        raise AssertionError("append must not rebuild the dictionary")
+
+    monkeypatch.setattr(table_mod, "build_dict_column", boom)
+    t.append(_rows_like(t, 400, seed=11))
+    dc2 = t.dict_column("cover_0")
+    assert dc2 is dc                                # merged, not rebuilt
+    np.testing.assert_array_equal(dc.codes[:3000], old_codes)
+    np.testing.assert_array_equal(dc.decode(), t.columns["cover_0"])
+    assert dc.counts.sum() == t.n_records
+    assert abs(dc.freqs.sum() - 1.0) < 1e-9
+
+
+def test_dict_merge_appends_new_values_keeps_old_codes():
+    col = np.array(["b", "d", "b", "f"])
+    dc = build_dict_column(col)
+    assert dc.is_sorted
+    info = dc.merge_append(np.array(["a", "d", "z", "a"]))
+    assert info["new_values"] == 2 and not info["recoded"]
+    # old codes untouched; new values appended past the old code space
+    np.testing.assert_array_equal(dc.codes[:4], build_dict_column(col).codes)
+    np.testing.assert_array_equal(dc.decode(),
+                                  np.concatenate([col, ["a", "d", "z", "a"]]))
+    assert not dc.is_sorted                         # "a" landed out of order
+    assert dc.encode("a") == int(np.nonzero(dc.values == "a")[0][0])
+    assert dc.encode("missing") is None
+
+
+def test_dict_sorted_extension_stays_sorted():
+    dc = build_dict_column(np.array(["a", "c"]))
+    info = dc.merge_append(np.array(["x", "z", "x"]))
+    assert info["new_values"] == 2 and dc.is_sorted
+
+
+def test_dict_recode_on_overflow():
+    dc = build_dict_column(np.array(["m", "m"]))
+    tail = np.array([f"a{i:02d}" for i in range(20)])
+    info = dc.merge_append(tail)                    # overflow: 20 unsorted
+    assert info["recoded"] and dc.is_sorted
+    np.testing.assert_array_equal(dc.decode(),
+                                  np.concatenate([["m", "m"], tail]))
+    np.testing.assert_array_equal(dc.values, np.sort(dc.values))
+
+
+def test_dict_recode_surfaces_as_column_write():
+    t = _mini(800, strings=True)
+    t.dict_column("cover_0")                        # build before appending
+    v0 = t.version
+    rows = _rows_like(t, 400, seed=5)
+    rows["cover_0"] = np.array(
+        [f"aa{i % 40:02d}" for i in range(400)])    # floods new low values
+    t.append(rows)
+    dc = t.dict_column("cover_0")
+    assert dc.is_sorted                             # recode happened
+    np.testing.assert_array_equal(dc.decode(), t.columns["cover_0"])
+    # the recode invalidates code-space caches for THAT column only
+    assert t.delta_since(v0) is None
+    assert t.delta_since(v0, columns={"cover_0"}) is None
+    assert t.delta_since(v0, columns={"cover_0#codes"}) is None
+    assert t.delta_since(v0, columns={"elevation_0"}) == 800
+
+
+def test_rewrite_after_merge_bit_identical():
+    """Code-space rewrites on a merged (possibly unsorted) dictionary match
+    the numpy oracle on the raw strings."""
+    t = _mini(2000, strings=True)
+    t.dict_column("cover_0")
+    rows = _rows_like(t, 600, seed=13)
+    rows["cover_0"] = np.random.default_rng(0).choice(
+        np.array(["alder", "beech", "yew", "spruce", "pine"]), 600)
+    t.append(rows)
+    tree = normalize(And([Atom("cover_0", "in", ("alder", "pine", "yew")),
+                          Atom("slope_0", "lt",
+                               t.value_at_selectivity("slope_0", 0.6))]))
+    got, _, _ = run_query(tree, t, planner="deepfish", engine="numpy",
+                          rewrite_strings=True)
+    want, _, _ = run_query(tree, t, planner="deepfish", engine="numpy",
+                           rewrite_strings=False)
+    np.testing.assert_array_equal(got, want)
+
+
+# -- zone maps ----------------------------------------------------------------
+
+def test_zone_map_bounds_and_incremental_extension():
+    t = _mini(3000)
+    zm = t.zone_map("elevation_0", 256)
+    col = t.columns["elevation_0"]
+    for i in range(zm.nblocks):
+        blk = col[i * 256:(i + 1) * 256]
+        assert zm.mins[i] == blk.min() and zm.maxs[i] == blk.max()
+    frozen = zm.mins[:5].copy()
+    t.append(_rows_like(t, 700, seed=21))
+    zm2 = t.zone_map("elevation_0", 256)
+    assert zm2 is zm and zm2.n_rows == 3700         # extended in place
+    np.testing.assert_array_equal(zm2.mins[:5], frozen)
+    col = t.columns["elevation_0"]
+    for i in range(zm2.nblocks):
+        blk = col[i * 256:(i + 1) * 256]
+        assert zm2.mins[i] == blk.min() and zm2.maxs[i] == blk.max()
+    # rewrite rebuilds
+    t.set_column("elevation_0", col[::-1].copy())
+    zm3 = t.zone_map("elevation_0", 256)
+    assert zm3 is not zm
+
+
+def test_zone_map_resolves_dict_code_column():
+    t = _mini(1000, strings=True)
+    zm = t.zone_map("cover_0#codes", 128)
+    codes = t.dict_column("cover_0").codes
+    assert zm is not None
+    assert zm.maxs.max() == codes.max()
+    assert t.zone_map("cover_0", 128) is None       # raw strings: no bounds
+
+
+@pytest.mark.parametrize("op,value", [
+    ("lt", 120.0), ("le", 120.0), ("gt", 120.0), ("ge", 120.0),
+    ("eq", 3), ("ne", 3), ("in", (1, 2, 9)), ("not_in", (1, 2, 9)),
+])
+def test_zone_verdicts_sound(op, value):
+    rng = np.random.default_rng(0)
+    col = rng.integers(0, 12, 4096).astype(np.float64)
+    col[:1024] = np.sort(col[:1024])                # give ALL/NONE a chance
+    block = 128
+    mins = col.reshape(-1, block).min(axis=1)
+    maxs = col.reshape(-1, block).max(axis=1)
+    verd = zone_verdicts(Atom("c", op, value), mins, maxs)
+    assert verd is not None
+    from repro.columnar.table import _apply_op
+    for i in range(len(mins)):
+        hits = _apply_op(Atom("c", op, value), col[i * block:(i + 1) * block])
+        if verd[i] == ZONE_NONE:
+            assert not hits.any()
+        elif verd[i] == ZONE_ALL:
+            assert hits.all()
+
+
+def test_zone_verdicts_nan_bounds_stay_maybe():
+    """NaN block bounds must never produce a definite verdict — including
+    through the in/not_in negations (regression: ~hit_possible used to
+    turn NaN-uncertainty into NONE/ALL)."""
+    mins = np.array([np.nan, 1.0])
+    maxs = np.array([np.nan, 9.0])
+    for op, value in (("in", (5.0,)), ("not_in", (5.0,)), ("lt", 5.0),
+                      ("eq", 5.0), ("ne", 5.0)):
+        verd = zone_verdicts(Atom("c", op, value), mins, maxs)
+        assert verd[0] == ZONE_MAYBE, op
+
+
+def test_zone_pruned_in_fallback_matches_exact_eval():
+    """The host-gather fallback evaluates in float64, so its zone verdicts
+    must too (regression: f32-rounded bounds declared ALL for blocks whose
+    int values collide in float32)."""
+    n = 2048
+    col = np.full(n, 16777216, dtype=np.int64)
+    col[1024:] = 16777217                 # == 16777216 after f32 rounding
+    t = Table({"c": col, "x": np.arange(n, dtype=np.float32)})
+    tree = normalize(And([Atom("c", "in", (16777216,)),
+                          Atom("x", "ge", 0.0, selectivity=0.9)]))
+    want, _, _ = run_query(tree, t, planner="deepfish", engine="numpy")
+    plan = deepfish(tree, PerAtomCostModel(), total_records=n)
+    jb = JaxBlockBackend(t, block=1024, engine="jax")
+    got = execute_plan(plan, jb)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_append_failure_leaves_table_unchanged():
+    """A tail that fails to cast must not land partially (dict codes
+    extended while columns stay old)."""
+    t = _mini(500, strings=True)
+    dc = t.dict_column("cover_0")
+    n_codes = len(dc.codes)
+    rows = _rows_like(t, 10, seed=3)
+    rows["elevation_0"] = np.array(["not", "a", "float"] * 4)[:10]
+    with pytest.raises(ValueError):
+        t.append(rows)
+    assert t.n_records == 500 and len(t.dict_column("cover_0").codes) == n_codes
+    assert t.delta_since(t.version) == 500
+
+
+def test_zone_verdicts_opaque_atoms_are_skipped():
+    mins, maxs = np.zeros(4), np.ones(4)
+    assert zone_verdicts(Atom("c", "like", "a%"), mins, maxs) is None
+    assert zone_verdicts(Atom("c", "udf", fn=lambda v: v > 0), mins,
+                         maxs) is None
+    assert zone_verdicts(Atom("c", "lt", "strings"), mins, maxs) is None
+
+
+def test_zone_pruning_bit_identical_and_prunes():
+    t = _mini(20_000)
+    t.set_column("clustered", np.sort(t.columns["elevation_0"]).copy())
+    cut = float(np.quantile(t.columns["clustered"], 0.35))
+    tree = normalize(And([
+        Atom("clustered", "lt", cut, selectivity=0.35),
+        Atom("slope_0", "lt", t.value_at_selectivity("slope_0", 0.5),
+             selectivity=0.5)]))
+    model = PerAtomCostModel()
+    plan = deepfish(tree, model, total_records=t.n_records)
+    want = execute_plan(plan, BitmapBackend(t))
+    # numpy engine with zone pruning enabled
+    zb = BitmapBackend(t, zone_block=1024)
+    got = execute_plan(plan, zb)
+    np.testing.assert_array_equal(got, want)
+    assert zb.blocks_pruned > 0
+    assert zb.records_touched < BitmapBackend(t).n * 2
+    # block engine prunes by default
+    jb = JaxBlockBackend(t, block=1024, engine="jax")
+    got = execute_plan(plan, jb)
+    np.testing.assert_array_equal(got, want)
+    assert jb.blocks_pruned > 0
+    # and with pruning disabled results do not change
+    jb0 = JaxBlockBackend(t, block=1024, engine="jax", zone_prune=False)
+    got0 = execute_plan(plan, jb0)
+    np.testing.assert_array_equal(got0, want)
+    assert jb0.blocks_pruned == 0
+    assert jb.blocks_touched < jb0.blocks_touched
+
+
+# -- extend_bitmap ------------------------------------------------------------
+
+@pytest.mark.parametrize("old_n,delta_n", [(0, 40), (32, 32), (37, 61),
+                                           (100, 1), (63, 200)])
+def test_extend_bitmap_matches_repack(old_n, delta_n):
+    rng = np.random.default_rng(old_n + delta_n)
+    a = rng.random(old_n) < 0.5
+    b = rng.random(delta_n) < 0.5
+    got = extend_bitmap(pack_bits(a) if old_n else np.zeros(0, np.uint32),
+                        old_n, b, old_n + delta_n)
+    np.testing.assert_array_equal(got, pack_bits(np.concatenate([a, b])))
+    np.testing.assert_array_equal(unpack_bits(got, old_n + delta_n),
+                                  np.concatenate([a, b]))
+
+
+# hypothesis property sweeps live in tests/test_ingest_property.py (their
+# module-level importorskip must not skip the deterministic tests above)

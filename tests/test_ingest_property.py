@@ -1,0 +1,83 @@
+"""Hypothesis property sweeps for the streaming-ingest invariants:
+dictionary merge/recode consistency and per-block epoch invalidation."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep: see requirements-dev.txt
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.columnar import (QuerySession, make_forest_table, random_tree,
+                            run_query)
+from repro.columnar.table import Table, build_dict_column
+from repro.core import And, Atom, normalize
+
+_VOCAB = [f"w{i:02d}" for i in range(18)]
+
+
+def _rows_like(table, n, seed):
+    src = make_forest_table(n, n_dup=1, seed=seed)
+    return {name: src.columns[name] for name in table.columns}
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.lists(st.sampled_from(_VOCAB), min_size=1, max_size=30),
+                min_size=1, max_size=6),
+       st.integers(0, len(_VOCAB) - 1))
+def test_property_dict_merge_consistency(batches, probe):
+    """Codes stay consistent across arbitrary append sequences and rewritten
+    code-space atoms stay bit-identical to the numpy oracle."""
+    base = np.array(batches[0])
+    dc = build_dict_column(base)
+    col = base
+    for tail in batches[1:]:
+        tail = np.array(tail)
+        before = dc.codes.copy()
+        info = dc.merge_append(tail)
+        col = np.concatenate([col, tail])
+        if not info["recoded"]:
+            np.testing.assert_array_equal(dc.codes[:len(before)], before)
+        np.testing.assert_array_equal(dc.decode(), col)
+        assert dc.codes.dtype == np.int32
+        assert dc.counts.sum() == len(col)
+        assert abs(dc.freqs.sum() - 1.0) < 1e-9
+    # code-space rewrite equivalence on the merged dictionary
+    t = Table({"s": col, "x": np.arange(len(col), dtype=np.float32)})
+    value = _VOCAB[probe]
+    for op, v in (("eq", value), ("le", value),
+                  ("in", (value, _VOCAB[0])), ("like", value[:2] + "%")):
+        tree = normalize(And([Atom("s", op, v)]))
+        got, _, _ = run_query(tree, t, planner="deepfish", engine="numpy",
+                              rewrite_strings=True)
+        want, _, _ = run_query(tree, t, planner="deepfish", engine="numpy",
+                               rewrite_strings=False)
+        np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.tuples(st.integers(1, 200), st.booleans()),
+                min_size=1, max_size=5),
+       st.integers(0, 2**31 - 1))
+def test_property_append_never_serves_stale_results(steps, seed):
+    """Per-block epoch invalidation: interleaved appends and batches through
+    a persistent QuerySession always match a fresh full evaluation."""
+    rng = np.random.default_rng(seed)
+    t = make_forest_table(600, n_dup=1, seed=int(seed % 97))
+    queries = [random_tree(t, 4, 2, rng) for _ in range(3)]
+    sess = QuerySession(t, planner="deepfish", engine="numpy",
+                        share_threshold=1)
+    sess.execute(queries)
+    for n_rows, do_query in steps:
+        t.append(_rows_like(t, n_rows, seed=int(rng.integers(1 << 30))))
+        if do_query:
+            res = sess.execute(queries)
+            for q, bm in zip(queries, res.bitmaps):
+                want, _, _ = run_query(q, t, planner="deepfish",
+                                       engine="numpy")
+                np.testing.assert_array_equal(bm, want)
+    res = sess.execute(queries)
+    for q, bm in zip(queries, res.bitmaps):
+        want, _, _ = run_query(q, t, planner="deepfish", engine="numpy")
+        np.testing.assert_array_equal(bm, want)

@@ -5,9 +5,9 @@ import pytest
 pytest.importorskip("hypothesis")  # dev-only dep: see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (And, Atom, HddCostModel, MemoryCostModel, Or,
-                        PerAtomCostModel, BlockCostModel, VertexBackend,
-                        check_triangle, execute_plan, deepfish, nooropt,
+from repro.core import (And, Atom, BlockCostModel, HddCostModel,
+                        MemoryCostModel, Or, PerAtomCostModel, VertexBackend,
+                        check_triangle, deepfish, execute_plan, nooropt,
                         normalize, optimal_plan, plan_cost, shallowfish)
 
 # --- strategies -------------------------------------------------------------

@@ -1,0 +1,184 @@
+"""Streaming admission layer + delta-reuse accounting + tape-cache reuse."""
+import numpy as np
+import pytest
+
+from repro.columnar import (QuerySession, StreamSession, make_forest_table,
+                            random_tree, run_query)
+from repro.core import Atom
+from repro.serve import RequestRouter
+
+
+def _rows_like(table, n, seed):
+    src = make_forest_table(n, n_dup=1, seed=seed)
+    return {name: src.columns[name] for name in table.columns}
+
+
+def _oracle(table, tree):
+    return run_query(tree, table, planner="deepfish", engine="numpy")[0]
+
+
+# -- StreamSession ------------------------------------------------------------
+
+def test_stream_submit_drain_matches_oracle():
+    t = make_forest_table(6000, n_dup=1, seed=7)
+    stream = StreamSession(t, engine="numpy", max_pending=64)
+    rng = np.random.default_rng(1)
+    queries = [random_tree(t, 4, 2, rng) for _ in range(5)]
+    futs = [stream.submit(q) for q in queries]
+    assert not any(f.done() for f in futs)
+    assert stream.pending == 5
+    res = stream.drain()
+    assert res.stats.n_queries == 5 and stream.pending == 0
+    for f, q in zip(futs, queries):
+        assert f.done()
+        np.testing.assert_array_equal(f.result(), _oracle(t, q))
+    assert stream.stats.batches == 1 and stream.stats.completed == 5
+
+
+def test_stream_result_triggers_cooperative_drain():
+    t = make_forest_table(3000, n_dup=1, seed=7)
+    stream = StreamSession(t, engine="numpy", max_pending=64)
+    q = random_tree(t, 4, 2, np.random.default_rng(2))
+    fut = stream.submit(q)
+    np.testing.assert_array_equal(fut.result(), _oracle(t, q))  # no deadlock
+    assert stream.stats.batches == 1
+
+
+def test_stream_auto_drains_at_max_pending():
+    t = make_forest_table(3000, n_dup=1, seed=7)
+    stream = StreamSession(t, engine="numpy", max_pending=2)
+    rng = np.random.default_rng(3)
+    a = stream.submit(random_tree(t, 4, 2, rng))
+    assert not a.done()
+    b = stream.submit(random_tree(t, 4, 2, rng))
+    assert a.done() and b.done()                   # admission hit the cap
+
+
+def test_stream_snapshot_at_drain_sees_interleaved_appends():
+    t = make_forest_table(4000, n_dup=1, seed=7)
+    stream = StreamSession(t, engine="numpy", max_pending=64)
+    rng = np.random.default_rng(4)
+    q1 = random_tree(t, 4, 2, rng)
+    f1 = stream.submit(q1)
+    stream.append(_rows_like(t, 800, seed=11))     # lands before the drain
+    q2 = random_tree(t, 4, 2, rng)
+    f2 = stream.submit(q2)
+    stream.drain()
+    assert t.n_records == 4800
+    assert f1.n_records == 4800                    # snapshot at drain time
+    np.testing.assert_array_equal(f1.result(), _oracle(t, q1))
+    np.testing.assert_array_equal(f2.result(), _oracle(t, q2))
+    assert stream.stats.appends == 1 and stream.stats.appended_rows == 800
+
+
+def test_stream_tape_one_bundled_sync_per_drain():
+    t = make_forest_table(8000, n_dup=1, seed=7)
+    stream = StreamSession(t, engine="tape", block=4096, max_pending=64)
+    rng = np.random.default_rng(5)
+    queries = [random_tree(t, 4, 2, rng) for _ in range(4)]
+    for q in queries:
+        stream.submit(q)
+    stream.drain()
+    be = stream.session._backend
+    assert be.host_syncs == 1                      # one bundled sync
+    stream.append(_rows_like(t, 1000, seed=12))
+    futs = [stream.submit(q) for q in queries]
+    res = stream.drain()
+    assert be.host_syncs == 2                      # still one per drain
+    for f, q in zip(futs, queries):
+        np.testing.assert_array_equal(f.result(), _oracle(t, q))
+    # the drain after the append reused the device columns: only the dirty
+    # tail re-uploaded, and cached atom results were spliced, not redone
+    assert 0 < res.stats.upload_bytes < be.uploaded_bytes
+    assert res.stats.atoms_delta_extended > 0
+    assert res.stats.delta_reuse_ratio > 0.5
+
+
+def test_stream_delta_reuse_on_host_engine():
+    t = make_forest_table(6000, n_dup=1, seed=7)
+    stream = StreamSession(t, engine="numpy", max_pending=64,
+                           share_threshold=1)
+    rng = np.random.default_rng(6)
+    queries = [random_tree(t, 5, 2, rng) for _ in range(3)] * 2
+    for q in queries:
+        stream.submit(q)
+    stream.drain()
+    stream.append(_rows_like(t, 600, seed=13))
+    futs = [stream.submit(q) for q in queries]
+    res = stream.drain()
+    s = res.stats
+    assert s.atoms_delta_extended > 0
+    assert s.delta_rows_evaluated > 0
+    assert s.delta_reuse_ratio == pytest.approx(6000 / 6600)
+    for f, q in zip(futs, queries):
+        np.testing.assert_array_equal(f.result(), _oracle(t, q))
+
+
+def test_stream_failure_propagates_to_futures():
+    t = make_forest_table(1000, n_dup=1, seed=7)
+    stream = StreamSession(t, engine="numpy", max_pending=64)
+    fut = stream.submit(Atom("no_such_column", "lt", 1.0))
+    with pytest.raises(KeyError):
+        stream.drain()
+    assert fut.done()
+    with pytest.raises(KeyError):
+        fut.result()
+
+
+# -- plan-cache tape reuse ----------------------------------------------------
+
+def test_tape_cache_rebind_skips_recompiles():
+    t = make_forest_table(8000, n_dup=1, seed=7)
+    rng = np.random.default_rng(8)
+    queries = [random_tree(t, 5, 3, rng) for _ in range(3)]
+    sess = QuerySession(t, planner="deepfish", engine="tape", block=4096)
+    r1 = sess.execute(queries)
+    assert r1.stats.tape_cache_hits == 0           # cold cache: all compiled
+    r2 = sess.execute(queries)
+    assert r2.stats.tape_cache_hits == len(queries)  # rebound, not recompiled
+    assert r2.stats.plan_cache_hits == len(queries)
+    for q, bm in zip(queries, r2.bitmaps):
+        np.testing.assert_array_equal(bm, _oracle(t, q))
+
+
+def test_tape_rebind_across_key_equal_trees():
+    """A fresh, structurally identical tree must reuse the cached tape and
+    still bind its own comparison values."""
+    from repro.core import normalize, tree_copy
+    t = make_forest_table(8000, n_dup=1, seed=7)
+    tree = random_tree(t, 5, 3, np.random.default_rng(9))
+    sess = QuerySession(t, planner="deepfish", engine="tape", block=4096)
+    sess.execute([tree])
+    clone = normalize(tree_copy(tree.root))
+    res = sess.execute([clone])
+    assert res.stats.tape_cache_hits == 1
+    np.testing.assert_array_equal(res.bitmaps[0], _oracle(t, tree))
+
+
+# -- persistent (streaming) router -------------------------------------------
+
+def test_persistent_router_routes_per_call_batches():
+    rng = np.random.default_rng(0)
+
+    def reqs(n):
+        return {"tier": rng.choice(3, n).astype(np.int32),
+                "tokens": rng.integers(8, 4096, n).astype(np.int32)}
+
+    rules = [
+        (Atom("tier", "eq", 2) | Atom("tokens", "lt", 1024)),
+        Atom("tokens", "lt", 1024),
+    ]
+    router = RequestRouter(rules, persistent=True)
+    r1 = reqs(64)
+    m1 = router.route(r1)
+    assert m1.shape == (2, 64)
+    np.testing.assert_array_equal(m1[1], r1["tokens"] < 1024)
+    r2 = reqs(48)
+    m2 = router.route(r2)                          # appends, returns delta
+    assert m2.shape == (2, 48)
+    np.testing.assert_array_equal(
+        m2[0], (r2["tier"] == 2) | (r2["tokens"] < 1024))
+    np.testing.assert_array_equal(m2[1], r2["tokens"] < 1024)
+    assert router.table.n_records == 112           # history accumulated
+    # per-call cost is delta-shaped: cached atoms spliced, not re-evaluated
+    assert router.last_result.stats.atoms_delta_extended > 0

@@ -127,7 +127,7 @@ def test_train_step_with_compression_runs():
 
 # --- checkpointing ----------------------------------------------------------
 def test_checkpoint_roundtrip_bit_exact(tmp_path):
-    from repro.ckpt import save_pytree, load_pytree
+    from repro.ckpt import load_pytree, save_pytree
     cfg = tiny_cfg()
     params = api.init(cfg, KEY)
     save_pytree({"params": params, "x": jnp.arange(7)}, str(tmp_path), 3)
