@@ -20,6 +20,44 @@ import numpy as np
 
 from repro.columnar import (LRUPlanCache, QuerySession, make_forest_table,
                             random_tree, run_query)
+from repro.core.predicate import DICT_SEL_STEP
+
+
+def bench_dict_buckets(args) -> dict:
+    """Hit-rate / plan-quality tradeoff of the tight dictionary-atom
+    selectivity buckets (``DICT_SEL_STEP``) vs bucketing dict-code atoms
+    into the coarse generic ``sel_step``.
+
+    Dict-atom selectivities are *exact* (computed from code frequencies),
+    so the tight buckets keep cached plans close to fresh ones; the cost
+    is extra cache misses when the exact selectivities drift inside what
+    the coarse bucket would have merged.  Reports plan-cache hit rate,
+    per-batch records_evaluated (the paper's plan-quality metric) and
+    wall-clock for both settings on a string-heavy template workload.
+    """
+    table = make_forest_table(args.rows, n_dup=1, seed=13, strings=True)
+    queries = make_workload(table, args.queries, args.templates,
+                            args.n_atoms, args.depth, args.fresh_frac,
+                            args.seed + 1)
+    out = {}
+    for name, step in (("tight", DICT_SEL_STEP), ("coarse", None)):
+        session = QuerySession(table, planner=args.planner, engine="numpy",
+                               plan_cache=LRUPlanCache(dict_sel_step=step),
+                               persist_atom_cache=False)
+        best_s, res = float("inf"), None
+        for _ in range(max(args.repeats, 2)):     # >= 1 warm pass
+            res = session.execute(queries)
+            best_s = min(best_s, res.wall_s)
+        st = session.plan_cache.stats
+        out[name] = {
+            "plan_hit_rate": round(st.hit_rate, 4),
+            "records_evaluated": res.backend.stats.records_evaluated,
+            "batch_ms": round(best_s * 1e3, 3),
+        }
+    t, c = out["tight"], out["coarse"]
+    out["records_ratio_tight_vs_coarse"] = round(
+        t["records_evaluated"] / max(c["records_evaluated"], 1.0), 4)
+    return out
 
 
 def make_workload(table, n_queries: int, n_templates: int, n_atoms: int,
@@ -52,6 +90,11 @@ def main():
     ap.add_argument("--out", default=None,
                     help="write a machine-readable JSON report (consumed by "
                          "benchmarks/check_regression.py)")
+    ap.add_argument("--strings", dest="strings", action="store_true",
+                    default=True,
+                    help="measure the dict-atom plan-cache bucket tradeoff "
+                         "(default: on)")
+    ap.add_argument("--no-strings", dest="strings", action="store_false")
     args = ap.parse_args()
 
     table = make_forest_table(args.rows, n_dup=2, seed=7)
@@ -92,6 +135,15 @@ def main():
     print(f"wall-clock            : batch {best_s * 1e3:.1f} ms vs "
           f"independent {base_s * 1e3:.1f} ms "
           f"({base_s / best_s:.2f}x)")
+    dict_buckets = None
+    if args.strings:
+        dict_buckets = bench_dict_buckets(args)
+        t, c = dict_buckets["tight"], dict_buckets["coarse"]
+        print(f"dict buckets          : tight hit {t['plan_hit_rate']:.1%} "
+              f"/ {t['records_evaluated']:.3g} records vs coarse hit "
+              f"{c['plan_hit_rate']:.1%} / {c['records_evaluated']:.3g} "
+              f"records (ratio "
+              f"{dict_buckets['records_ratio_tight_vs_coarse']:.3f})")
     if args.out:
         report = {
             "rows": table.n_records,
@@ -105,6 +157,8 @@ def main():
             "independent_ms": round(base_s * 1e3, 3),
             "speedup": round(base_s / best_s, 3) if best_s else float("inf"),
         }
+        if dict_buckets is not None:
+            report["dict_buckets"] = dict_buckets
         with open(args.out, "w") as f:
             json.dump(report, f, indent=2)
         print(f"wrote {args.out}")

@@ -30,8 +30,9 @@ import time
 
 import numpy as np
 
-from repro.columnar import (QuerySession, StreamSession, make_forest_table,
-                            random_tree, run_query)
+from repro.columnar import (QuerySession, StreamSession, Table,
+                            make_forest_table, random_tree, run_query)
+from repro.core import And, Atom, normalize
 
 
 def _rows_like(table, n, seed):
@@ -124,6 +125,99 @@ def bench_stream(args, engine: str) -> dict:
     return out
 
 
+def bench_selective_stream(args) -> dict:
+    """Selective-stream section: tail-window monitors, beyond-the-head
+    alert probes and historical ranges over an append-only stream (rows
+    arrive in ``seq`` order, so zone maps decide most blocks), drained
+    through the device lockstep executor with zone pruning on vs off.
+    The verdict masks are runtime inputs: every append round reuses the
+    same jitted programs."""
+    rows, block = args.rows, args.block
+    # rounds 0-1 are warmup (round 1 is the first append-interleaved drain,
+    # where cache-hit/delta paths jit-compile); timing starts at round 2
+    rounds = max(args.rounds, 3)
+    n_append = max(int(rows * args.append_frac), 1)
+
+    def mk(n, start, seed):
+        rng = np.random.default_rng(seed)
+        return {
+            "seq": (start + np.arange(n)).astype(np.float32),
+            "val": rng.normal(size=n).astype(np.float32),
+            "load": np.abs(rng.normal(size=n) * 50).astype(np.float32),
+        }
+
+    def round_queries(hi):
+        window = rows * 0.02
+        qs = []
+        for j in range(args.batch):
+            if j % 3 == 0:        # tail-window monitor
+                qs.append(normalize(And([
+                    Atom("seq", "ge", hi - window, selectivity=0.02),
+                    Atom("val", "gt", 0.0, selectivity=0.5)])))
+            elif j % 3 == 1:      # alert probe beyond the stream head
+                qs.append(normalize(And([
+                    Atom("seq", "ge", hi * 1.5 + j, selectivity=0.001),
+                    Atom("load", "gt", 100.0, selectivity=0.01)])))
+            else:                 # historical range
+                qs.append(normalize(And([
+                    Atom("seq", "lt", rows * 0.2, selectivity=0.2),
+                    Atom("val", "lt", -0.5, selectivity=0.3)])))
+        return qs
+
+    out = {"rows_initial": rows, "rounds": rounds, "queries": args.batch,
+           "engine": args.engine}
+    finals = {}
+    # one full untimed pass of BOTH flavors first: jit compilation is
+    # process-wide and decays over rounds, so whichever flavor runs first
+    # would otherwise eat the shared warmup inside its timers
+    for warm, zp in ((True, True), (True, False),
+                     (False, True), (False, False)):
+        table = Table(mk(rows, 0, seed=5))
+        stream = StreamSession(table, engine=args.engine, block=block,
+                               max_pending=args.batch + 1, zone_prune=zp)
+        ms = 0.0
+        syncs = []
+        res = None
+        for rnd in range(rounds):
+            if rnd:
+                stream.append(mk(n_append, table.n_records, seed=50 + rnd))
+                for name in table.columns:
+                    table.stats(name)
+            queries = round_queries(float(table.n_records))
+            for q in queries:
+                stream.submit(q)
+            be = stream.session._backend
+            s0 = be.host_syncs if be is not None else 0
+            t0 = time.perf_counter()
+            res = stream.drain()
+            if rnd >= 2:
+                ms += (time.perf_counter() - t0) * 1e3
+            be = stream.session._backend
+            syncs.append(be.host_syncs - s0)
+        if warm:
+            continue
+        key = "pruned" if zp else "unpruned"
+        out[key + "_ms"] = round(ms, 3)
+        finals[key] = (res.bitmaps, queries, table)
+        if zp:
+            be = stream.session._backend
+            out["blocks_pruned"] = be.blocks_pruned
+            # JaxBlockBackend (--engine jax/pallas) has no fallback counter
+            out["host_fallbacks"] = getattr(be, "host_fallbacks", 0)
+            out["host_syncs_per_batch"] = max(syncs)
+    out["speedup"] = (round(out["unpruned_ms"] / out["pruned_ms"], 2)
+                      if out["pruned_ms"] else 0.0)
+    pb, pq, ptable = finals["pruned"]
+    ub, _, _ = finals["unpruned"]
+    identical = all(np.array_equal(a, b) for a, b in zip(pb, ub))
+    for j in (0, 1, 2):
+        want, _, _ = run_query(pq[j], ptable, planner="deepfish",
+                               engine="numpy")
+        identical &= np.array_equal(pb[j], want)
+    out["identical"] = bool(identical)
+    return out
+
+
 def bench_rebind(args) -> dict:
     """Tape-reuse microsection: per-query compiled-tape path, second pass
     served by rebinding cached host tapes (no re-trace/DCE/slot-alloc)."""
@@ -199,6 +293,15 @@ def main():
     report["host"] = bench_stream(args, args.host_engine)
     show("stream host", report["host"])
 
+    report["selective"] = bench_selective_stream(args)
+    sel = report["selective"]
+    print(f"selective [{sel['engine']}]: pruned {sel['pruned_ms']:.1f} ms "
+          f"vs unpruned {sel['unpruned_ms']:.1f} ms  ->  "
+          f"{sel['speedup']:.2f}x  ({sel['blocks_pruned']:.0f} blocks "
+          f"pruned, {sel['host_fallbacks']} fallbacks, "
+          f"{sel['host_syncs_per_batch']:g} sync/batch)  "
+          f"identical={sel['identical']}")
+
     report["rebind"] = bench_rebind(args)
     rb = report["rebind"]
     print(f"  tape rebind: cold {rb['cold_ms']:.1f} ms -> warm "
@@ -215,9 +318,14 @@ def main():
         with open(args.update_baseline, "w") as f:
             json.dump(base, f, indent=2)
         print(f"updated 'stream' section of {args.update_baseline}")
-    if not (report["identical"] and report["host"]["identical"]):
+    if not (report["identical"] and report["host"]["identical"]
+            and report["selective"]["identical"]):
         raise SystemExit("FAIL: streaming results diverged from the "
                          "rebuild-from-scratch oracle")
+    if not (report["selective"]["blocks_pruned"] > 0
+            and report["selective"]["host_fallbacks"] == 0):
+        raise SystemExit("FAIL: zone pruning inactive on the selective "
+                         "stream (or the compiled path fell back)")
 
 
 if __name__ == "__main__":

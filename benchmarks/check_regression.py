@@ -107,10 +107,50 @@ def check_device(gate: Gate, fresh: dict, base: dict, tol: float) -> None:
                    strings.get("tape_device_dispatches") == 1,
                    f"fresh={strings.get('tape_device_dispatches')}")
 
+    # -- contract: fragmented string atoms stay inside the one program -------
+    fragmented, bfragmented = fresh.get("fragmented"), base.get("fragmented")
+    gate.check("fragmented section present", fragmented is not None)
+    if fragmented is not None:
+        gate.check("fragmented.host_fallbacks == 0",
+                   fragmented.get("host_fallbacks", -1) == 0,
+                   f"fresh={fragmented.get('host_fallbacks')}")
+        gate.check("fragmented.tape_host_syncs_per_query == 1",
+                   fragmented.get("tape_host_syncs_per_query") == 1,
+                   f"fresh={fragmented.get('tape_host_syncs_per_query')}")
+        gate.check("fragmented.tape_device_dispatches == 1",
+                   fragmented.get("tape_device_dispatches") == 1,
+                   f"fresh={fragmented.get('tape_device_dispatches')}")
+
+    # -- contract: zone pruning reaches the compiled path --------------------
+    selective, bselective = fresh.get("selective"), base.get("selective")
+    gate.check("selective section present", selective is not None)
+    if selective is not None:
+        gate.check("selective.blocks_pruned > 0",
+                   selective.get("blocks_pruned", 0) > 0,
+                   f"fresh={selective.get('blocks_pruned')}")
+        gate.check("selective.host_fallbacks == 0",
+                   selective.get("host_fallbacks", -1) == 0,
+                   f"fresh={selective.get('host_fallbacks')}")
+        gate.check("selective.tape_host_syncs_per_query == 1",
+                   selective.get("tape_host_syncs_per_query") == 1,
+                   f"fresh={selective.get('tape_host_syncs_per_query')}")
+        gate.check("selective: appends do not retrace",
+                   selective.get("programs_compiled_on_append", -1) == 0,
+                   f"fresh={selective.get('programs_compiled_on_append')}")
+        # the "pruning pays" claim is asserted on the committed full-scale
+        # baseline (smoke tables are too small for the CPU-visible win to
+        # clear its fixed costs); the fresh run is still collapse-gated by
+        # the tolerance floor below
+        gate.check("selective.speedup > 1 in committed baseline",
+                   (bselective or {}).get("speedup", 0.0) > 1.0,
+                   f"baseline={(bselective or {}).get('speedup')}")
+
     # -- throughput floors ----------------------------------------------------
     for name, sec, bsec in (("single", single, bsingle),
                             ("batch", batch, bbatch),
-                            ("strings", strings, bstrings)):
+                            ("strings", strings, bstrings),
+                            ("fragmented", fragmented, bfragmented),
+                            ("selective", selective, bselective)):
         if not sec or not bsec:
             continue
         floor = tol * bsec.get("speedup", 0.0)
@@ -151,6 +191,19 @@ def check_stream(gate: Gate, fresh: dict, base: dict, tol: float,
     gate.check(f"stream.host.speedup >= {min_speedup:g}",
                host.get("speedup", 0.0) >= min_speedup,
                f"fresh={host.get('speedup')}")
+    sel = fresh.get("selective")
+    gate.check("stream.selective section present", sel is not None)
+    if sel is not None:
+        gate.check("stream.selective.identical", bool(sel.get("identical")))
+        gate.check("stream.selective.blocks_pruned > 0",
+                   sel.get("blocks_pruned", 0) > 0,
+                   f"fresh={sel.get('blocks_pruned')}")
+        gate.check("stream.selective.host_fallbacks == 0",
+                   sel.get("host_fallbacks", -1) == 0,
+                   f"fresh={sel.get('host_fallbacks')}")
+        gate.check("stream.selective.host_syncs_per_batch == 1",
+                   sel.get("host_syncs_per_batch") == 1,
+                   f"fresh={sel.get('host_syncs_per_batch')}")
 
 
 def check_multiquery(gate: Gate, fresh: dict, min_speedup: float) -> None:
@@ -161,6 +214,19 @@ def check_multiquery(gate: Gate, fresh: dict, min_speedup: float) -> None:
     gate.check(f"multiquery.speedup >= {min_speedup:g}",
                fresh.get("speedup", 0.0) >= min_speedup,
                f"fresh={fresh.get('speedup')}")
+    db = fresh.get("dict_buckets")
+    gate.check("multiquery.dict_buckets present", db is not None)
+    if db is not None:
+        # tight dict-atom buckets must not degrade plan quality (that is
+        # their whole point) nor collapse the hit rate
+        ratio = db.get("records_ratio_tight_vs_coarse", 99.0)
+        gate.check("dict_buckets: tight plans no worse (ratio <= 1.05)",
+                   ratio <= 1.05, f"fresh={ratio}")
+        tight = db.get("tight", {}).get("plan_hit_rate", 0.0)
+        coarse = db.get("coarse", {}).get("plan_hit_rate", 0.0)
+        gate.check("dict_buckets: tight hit rate >= 0.5 x coarse",
+                   tight >= 0.5 * coarse,
+                   f"tight={tight} coarse={coarse}")
 
 
 def main() -> int:

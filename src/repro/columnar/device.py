@@ -21,6 +21,25 @@ device* and talks to the host exactly once per query.  It plays two roles:
    step, no transfers until the batch's single final
    :meth:`materialize` call.
 
+Design note — zone-verdict masks as runtime inputs
+--------------------------------------------------
+Pruning reaches the compiled program as *data*: per costed op the backend
+combines its atoms' per-block zone verdicts (f32-rounded, matching kernel
+arithmetic) into an ``i32[n_blocks]`` NONE/ALL/MAYBE row and feeds the
+stacked rows to the jitted program as an ordinary argument — appends that
+move the verdicts never retrace.  MAYBE blocks evaluate (masked popcounts
+drive the Pallas kernels' dead-block skip), ALL blocks pass source bits
+through, NONE blocks zero.  When the mask data shows an op decided on
+every block, the backend switches to the program's ``lax.cond`` "skip"
+flavor (at most two flavors per tape) whose evaluations short-circuit at
+runtime — fully decided ops and everything downstream of emptied sets skip
+their scans.  ``records_evaluated`` stays the pre-prune paper metric;
+live non-MAYBE blocks land in ``blocks_pruned``.  See
+``docs/architecture.md`` ("zone-mask-as-runtime-input").  Fragmented
+string predicates stay device-resident the same way: ``codes_expression``
+emits ``code IN (...)`` membership atoms bound to packed ``u32[U]`` hit
+bitmasks and lowered to ``kernels.dict_lookup``.
+
 Design note — slot allocation and the one-sync-per-query contract
 -----------------------------------------------------------------
 The tape compiler emits SSA ops and then linear-scan-allocates them onto a
@@ -61,12 +80,15 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.predicate import Atom
+from ..core.predicate import (Atom, ZONE_ALL, ZONE_MAYBE, ZONE_NONE,
+                              decode_column)
 from ..core.sets import SetBackend, Stats
-from ..core.tape import (ATOM, CHAIN, CMP_OPCODE, EMPTY, FULL, OP_AND,
-                         OP_ANDNOT, OP_OR, PlanTape, SETOP, device_atom)
+from ..core.tape import (ATOM, CHAIN, CMP_OPCODE, EMPTY, FULL, IN_OPCODE,
+                         OP_AND, OP_ANDNOT, OP_OR, PlanTape, SETOP,
+                         device_atom, lookup_atom)
 from .bitmap import (WORD, bitmap_full, extend_bitmap, live_block_count,
                      n_words, next_pow2, pack_bits, unpack_bits)
+from .executor import _ZonePruner
 from .table import Table
 
 _CMP_OPCODE = CMP_OPCODE
@@ -113,31 +135,121 @@ def _atom_ref_bitmajor(col_bm, bits, value, opcode: int):
     return (keep.astype(jnp.uint32) << bitpos).sum(axis=1, dtype=jnp.uint32)
 
 
-def _atom_impl(col_bm, bits, pops, value, opcode: int, pallas: bool,
-               interpret: bool):
+def _zone_apply_multi(eval_fn, bits, pops, zone, skip: bool):
+    """Blend a masked evaluation with its per-block zone verdicts.
+
+    ``bits`` is ``u32[Q, N, W]`` and ``pops`` ``i32[Q, N]`` (the lockstep
+    stacking; single-set callers go through :func:`_zone_apply`); ``zone``
+    is one shared ``i32[N]`` vector of NONE/ALL/MAYBE verdicts — verdicts
+    depend on the atom and the zone map, not on the record set — arriving
+    as *runtime data* (never a trace constant: appends that move the
+    verdicts must not retrace the program).  MAYBE blocks take the
+    evaluation's bits, ALL blocks pass the source bits through unchanged,
+    NONE blocks produce zeros; the masked popcounts feed the Pallas
+    kernels' scalar-prefetch skip, which elides non-MAYBE blocks on
+    hardware.
+
+    ``skip`` (a *static* program flavor, not data) additionally puts the
+    evaluation under a ``lax.cond`` on "any live MAYBE block": ops fully
+    decided by their zone maps — and every op downstream of an emptied
+    set — then skip the column scan at runtime.  The cond is not free on
+    CPU (XLA materializes the branch operands, ~a column copy per op), so
+    the backend requests this flavor only when the masks actually decide
+    some op outright; the cond-free flavor keeps the unpruned program's
+    fused graph verbatim and adds only the per-block blend.
+    """
+    import jax
     import jax.numpy as jnp
     from ..kernels import ref
-    if pallas:
-        from ..kernels.predicate_scan import predicate_scan
-        val = jnp.asarray(value, dtype=jnp.float32).reshape(1)
-        out = predicate_scan(col_bm, bits, pops, val, opcode,
-                             interpret=interpret)
+    maybe = zone == ZONE_MAYBE
+    ep = jnp.where(maybe[None], pops, 0)
+
+    def _eval(_):
+        out = eval_fn(ep)
+        return out, ref.popcount_ref(out)
+
+    if skip:
+        out0, p0 = jax.lax.cond(
+            ep.sum() > 0, _eval,
+            lambda _: (jnp.zeros_like(bits), jnp.zeros_like(pops)), None)
     else:
-        out = _atom_ref_bitmajor(col_bm, bits, value, opcode)
-    return out, ref.popcount_ref(out)
+        out0, p0 = _eval(None)
+    allm = zone == ZONE_ALL
+    out = jnp.where(allm[None, :, None], bits,
+                    jnp.where(maybe[None, :, None], out0, 0))
+    p = jnp.where(allm[None], pops, jnp.where(maybe[None], p0, 0))
+    return out, p
+
+
+def _zone_apply(eval_fn, bits, pops, zone, skip: bool):
+    """Single-set (``u32[N, W]``) view of :func:`_zone_apply_multi` — one
+    implementation of the verdict-blend/skip semantics serves both the
+    whole-tape program and the lockstep stacking."""
+    out, p = _zone_apply_multi(
+        lambda ep: eval_fn(ep[0])[None], bits[None], pops[None], zone, skip)
+    return out[0], p[0]
+
+
+def _atom_impl(col_bm, bits, pops, value, opcode: int, pallas: bool,
+               interpret: bool, zone=None, skip: bool = False):
+    import jax.numpy as jnp
+    from ..kernels import ref
+
+    def _eval(ep):
+        if pallas:
+            from ..kernels.predicate_scan import predicate_scan
+            val = jnp.asarray(value, dtype=jnp.float32).reshape(1)
+            return predicate_scan(col_bm, bits,
+                                  pops if ep is None else ep, val, opcode,
+                                  interpret=interpret)
+        return _atom_ref_bitmajor(col_bm, bits, value, opcode)
+
+    if zone is None:
+        out = _eval(None)
+        return out, ref.popcount_ref(out)
+    return _zone_apply(_eval, bits, pops, zone, skip)
+
+
+def _lookup_impl(col_bm, bits, pops, mask_words, pallas: bool,
+                 interpret: bool, zone=None, skip: bool = False):
+    """Dictionary-membership ATOM: col_bm f32[N, 32, W] int codes tested
+    against the packed u32[U] hit bitmask (kernels.dict_lookup)."""
+    import jax.numpy as jnp
+    from ..kernels import ref
+
+    def _eval(ep):
+        if pallas:
+            from ..kernels.dict_lookup import dict_lookup_scan
+            return dict_lookup_scan(col_bm, bits,
+                                    pops if ep is None else ep, mask_words,
+                                    interpret=interpret)
+        bitpos = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+        in_set = ((bits[:, None, :] >> bitpos)
+                  & jnp.uint32(1)).astype(jnp.bool_)
+        hit = ref.code_hits(col_bm.astype(jnp.int32), mask_words)
+        return ((hit & in_set).astype(jnp.uint32) << bitpos).sum(
+            axis=1, dtype=jnp.uint32)
+
+    if zone is None:
+        out = _eval(None)
+        return out, ref.popcount_ref(out)
+    return _zone_apply(_eval, bits, pops, zone, skip)
 
 
 def _chain_impl(cols_bm, bits, pops, values, opcodes: tuple, conj: bool,
-                pallas: bool, interpret: bool):
+                pallas: bool, interpret: bool, zone=None,
+                skip: bool = False):
     """cols_bm f32[N, K, 32, W]; bits u32[N, W]; values f32[K]."""
     import jax.numpy as jnp
     from ..kernels import ref
-    if pallas:
-        from ..kernels.fused_chain import fused_chain_scan
-        out = fused_chain_scan(cols_bm, bits, pops,
-                               jnp.asarray(values, dtype=jnp.float32),
-                               opcodes, conj=conj, interpret=interpret)
-    else:
+
+    def _eval(ep):
+        if pallas:
+            from ..kernels.fused_chain import fused_chain_scan
+            return fused_chain_scan(cols_bm, bits,
+                                    pops if ep is None else ep,
+                                    jnp.asarray(values, dtype=jnp.float32),
+                                    opcodes, conj=conj, interpret=interpret)
         acc = None
         for k, op in enumerate(opcodes):
             cmp = ref.compare(cols_bm[:, k], values[k], op)
@@ -145,31 +257,69 @@ def _chain_impl(cols_bm, bits, pops, values, opcodes: tuple, conj: bool,
         bitpos = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
         in_set = ((bits[:, None, :] >> bitpos)
                   & jnp.uint32(1)).astype(jnp.bool_)
-        out = ((acc & in_set).astype(jnp.uint32) << bitpos).sum(
+        return ((acc & in_set).astype(jnp.uint32) << bitpos).sum(
             axis=1, dtype=jnp.uint32)
-    return out, ref.popcount_ref(out)
+
+    if zone is None:
+        out = _eval(None)
+        return out, ref.popcount_ref(out)
+    return _zone_apply(_eval, bits, pops, zone, skip)
 
 
 def _multi_atom_impl(col_bm, bits, pops, value, opcode: int, pallas: bool,
-                     interpret: bool):
+                     interpret: bool, zone=None, skip: bool = False):
     """col_bm f32[N, 32, W]; bits u32[Q, N, W]; pops i32[Q, N]."""
     import jax.numpy as jnp
     from ..kernels import ref
     q, n, w = bits.shape
-    if pallas:
-        from ..kernels.predicate_scan import predicate_scan_multi
-        val = jnp.asarray(value, dtype=jnp.float32).reshape(1)
-        out = predicate_scan_multi(col_bm, bits.reshape(q * n, w),
-                                   pops.reshape(-1), val, opcode,
-                                   interpret=interpret).reshape(q, n, w)
-    else:
+
+    def _eval(ep):
+        if pallas:
+            from ..kernels.predicate_scan import predicate_scan_multi
+            val = jnp.asarray(value, dtype=jnp.float32).reshape(1)
+            p = (pops if ep is None else ep).reshape(-1)
+            return predicate_scan_multi(col_bm, bits.reshape(q * n, w),
+                                        p, val, opcode,
+                                        interpret=interpret).reshape(q, n, w)
         bitpos = jnp.arange(32, dtype=jnp.uint32)[None, None, :, None]
         in_set = ((bits[:, :, None, :] >> bitpos)
                   & jnp.uint32(1)).astype(jnp.bool_)
         keep = ref.compare(col_bm, value, opcode)[None] & in_set
-        out = (keep.astype(jnp.uint32) << bitpos).sum(axis=2,
-                                                      dtype=jnp.uint32)
-    return out, ref.popcount_ref(out)
+        return (keep.astype(jnp.uint32) << bitpos).sum(axis=2,
+                                                       dtype=jnp.uint32)
+
+    if zone is None:
+        out = _eval(None)
+        return out, ref.popcount_ref(out)
+    return _zone_apply_multi(_eval, bits, pops, zone, skip)
+
+
+def _lookup_multi_impl(col_bm, bits, pops, mask_words, pallas: bool,
+                       interpret: bool, zone=None, skip: bool = False):
+    """Q-stacked dictionary-membership lookup (one code-column copy)."""
+    import jax.numpy as jnp
+    from ..kernels import ref
+    q, n, w = bits.shape
+
+    def _eval(ep):
+        if pallas:
+            from ..kernels.dict_lookup import dict_lookup_scan_multi
+            p = (pops if ep is None else ep).reshape(-1)
+            return dict_lookup_scan_multi(
+                col_bm, bits.reshape(q * n, w), p, mask_words,
+                interpret=interpret).reshape(q, n, w)
+        bitpos = jnp.arange(32, dtype=jnp.uint32)[None, None, :, None]
+        in_set = ((bits[:, :, None, :] >> bitpos)
+                  & jnp.uint32(1)).astype(jnp.bool_)
+        hit = ref.code_hits(col_bm.astype(jnp.int32), mask_words)
+        keep = hit[None] & in_set
+        return (keep.astype(jnp.uint32) << bitpos).sum(axis=2,
+                                                       dtype=jnp.uint32)
+
+    if zone is None:
+        out = _eval(None)
+        return out, ref.popcount_ref(out)
+    return _zone_apply_multi(_eval, bits, pops, zone, skip)
 
 
 def _inter_multi_impl(a, bits):
@@ -201,10 +351,15 @@ def _jitted_prims():
     not pull in jax)."""
     return {
         "setop": _jit(_setop_impl, ("setop", "pallas", "interpret")),
-        "atom": _jit(_atom_impl, ("opcode", "pallas", "interpret")),
+        "atom": _jit(_atom_impl, ("opcode", "pallas", "interpret",
+                                  "skip")),
+        "lookup": _jit(_lookup_impl, ("pallas", "interpret", "skip")),
         "chain": _jit(_chain_impl, ("opcodes", "conj", "pallas",
-                                    "interpret")),
-        "multi": _jit(_multi_atom_impl, ("opcode", "pallas", "interpret")),
+                                    "interpret", "skip")),
+        "multi": _jit(_multi_atom_impl, ("opcode", "pallas", "interpret",
+                                         "skip")),
+        "lookup_multi": _jit(_lookup_multi_impl, ("pallas", "interpret",
+                                                  "skip")),
         "union": _jit(_union_impl, ()),
         "inter_multi": _jit(_inter_multi_impl, ()),
     }
@@ -233,7 +388,8 @@ class DeviceTapeBackend(SetBackend):
     """
 
     def __init__(self, table: Table, block: int = 8192,
-                 kernels: str = "jax", interpret: Optional[bool] = None):
+                 kernels: str = "jax", interpret: Optional[bool] = None,
+                 zone_prune: bool = True):
         if block % WORD:
             raise ValueError("block must be a multiple of 32")
         if kernels not in ("jax", "pallas"):
@@ -253,6 +409,7 @@ class DeviceTapeBackend(SetBackend):
         self.stats = Stats()
         self.blocks_touched = 0.0
         self.records_touched = 0.0
+        self.blocks_pruned = 0.0      # blocks decided by zone maps alone
         self.host_syncs = 0
         self.host_fallbacks = 0
         self.device_dispatches = 0
@@ -261,11 +418,16 @@ class DeviceTapeBackend(SetBackend):
         self._jcols: Dict[str, "object"] = {}
         self._full: Optional[_DevSet] = None
         self._empty: Optional[_DevSet] = None
+        # zone-verdict pruner (f32: the kernels compare in float32, so the
+        # verdicts must round the same way — the JaxBlockBackend precedent)
+        self._zones = (_ZonePruner(table, block, f32=True)
+                       if zone_prune else None)
         # device-side pending cost counters, flushed by materialize()
         self._pend_records: List[object] = []
         self._pend_k: List[int] = []
         self._pend_weights: List[float] = []
         self._pend_blocks: List[object] = []
+        self._pend_pruned: List[object] = []
 
     # -- conversions -----------------------------------------------------------
     def _col_bitmajor(self, name: str):
@@ -290,6 +452,66 @@ class DeviceTapeBackend(SetBackend):
             return None
         return col
 
+    def _lookup_mask(self, atom: Atom) -> Optional[np.ndarray]:
+        """Packed ``u32[U]`` hit bitmask for a dictionary-membership atom:
+        bit ``c`` set iff code ``c`` is in the atom's value set.  ``U`` is
+        the dictionary's word count padded to a power of two, so modest
+        dictionary growth under appends keeps the kernel shape (and the
+        jitted program) stable.  None when the atom's column is not a
+        dictionary-code column of this table."""
+        base = decode_column(atom.column)
+        if base is None or base not in self.table.columns:
+            return None
+        dc = self.table.dict_column(base)
+        if dc is None:
+            return None
+        nbits = WORD * next_pow2(n_words(max(dc.n, 1)))
+        hits = np.zeros(nbits, dtype=bool)
+        idx = np.asarray([int(v) for v in atom.value], dtype=np.int64)
+        idx = idx[(idx >= 0) & (idx < dc.n)]
+        hits[idx] = True
+        return pack_bits(hits)
+
+    def _zone_mask(self, atoms: Sequence[Atom],
+                   conj: bool = True) -> Optional[np.ndarray]:
+        """Combined ``i32[nblocks]`` NONE/ALL/MAYBE verdicts for one
+        ATOM/CHAIN op's atom group, or None when nothing prunes (no zone
+        maps, every block MAYBE, or a stale map mid-append).  CHAIN groups
+        combine per-atom verdicts with the group's own connective: under
+        AND a single NONE decides the block and ALL needs every atom ALL;
+        under OR dually.  Power-of-two padding blocks get NONE — they
+        carry zero bitmaps either way."""
+        if self._zones is None:
+            return None
+        real = (self.n + self.block - 1) // self.block
+        out = None
+        any_verdict = False
+        for a in atoms:
+            v = self._zones.verdicts(a)
+            if v is None:
+                v = np.full(real, ZONE_MAYBE, dtype=np.int8)
+            elif len(v) != real:
+                return None   # zone map describes a different snapshot
+            else:
+                any_verdict = True
+            if out is None:
+                out = v.astype(np.int32)
+                continue
+            if conj:
+                none = (out == ZONE_NONE) | (v == ZONE_NONE)
+                alls = (out == ZONE_ALL) & (v == ZONE_ALL)
+            else:
+                alls = (out == ZONE_ALL) | (v == ZONE_ALL)
+                none = (out == ZONE_NONE) & (v == ZONE_NONE)
+            out = np.full(real, ZONE_MAYBE, dtype=np.int32)
+            out[alls] = ZONE_ALL
+            out[none] = ZONE_NONE
+        if not any_verdict or (out == ZONE_MAYBE).all():
+            return None
+        pad = np.full(self.nblocks, ZONE_NONE, dtype=np.int32)
+        pad[:real] = out
+        return pad
+
     def refresh(self) -> int:
         """Grow the backend after a pure table *append*: device-resident
         columns keep every block below the append boundary and upload only
@@ -298,6 +520,8 @@ class DeviceTapeBackend(SetBackend):
         must have proven the append via :meth:`Table.delta_since`.  Returns
         the bytes uploaded."""
         import jax.numpy as jnp
+        if self._zones:
+            self._zones.clear()
         n_new = self.table.n_records
         if n_new == self.n:
             return 0
@@ -411,7 +635,8 @@ class DeviceTapeBackend(SetBackend):
         out, pops = _jitted_prims()["inter_multi"](a.bits, bits)
         return [_DevSet(out[j], pops[j]) for j in range(len(ds))]
 
-    def _account(self, atoms: Sequence[Atom], pops, device: bool = True):
+    def _account(self, atoms: Sequence[Atom], pops, device: bool = True,
+                 zone: Optional[np.ndarray] = None):
         """Queue device-side cost counters for one costed application of
         ``atoms`` (K > 1 for a fused chain: every chain atom evaluates on
         all of src's live blocks, so counts scale by K — the fused trade of
@@ -419,15 +644,30 @@ class DeviceTapeBackend(SetBackend):
 
         ``device=False`` (host fallback) still counts records_evaluated —
         count(D) is engine-independent — but leaves blocks/records_touched
-        to the fallback's own gather accounting.
+        to the fallback's own gather accounting.  ``zone`` (the op's
+        NONE/ALL/MAYBE verdicts) splits the live blocks into touched
+        (MAYBE: the kernel pays for them) and pruned (decided by the zone
+        map alone); ``records_evaluated`` stays the *pre-prune* count — the
+        paper metric measures the plan, not the storage-level pruning, so
+        plan-quality comparisons are unaffected (the JaxBlockBackend
+        precedent).
         """
         import jax.numpy as jnp
         self.stats.atom_applications += len(atoms)
         self._pend_records.append(pops.sum())
         self._pend_k.append(len(atoms))
         self._pend_weights.append(sum(a.cost_factor for a in atoms))
-        self._pend_blocks.append((pops > 0).sum() if device
-                                 else jnp.int32(0))
+        if not device:
+            self._pend_blocks.append(jnp.int32(0))
+            self._pend_pruned.append(jnp.int32(0))
+        elif zone is None:
+            self._pend_blocks.append((pops > 0).sum())
+            self._pend_pruned.append(jnp.int32(0))
+        else:
+            maybe = jnp.asarray(zone == ZONE_MAYBE)
+            live = pops > 0
+            self._pend_blocks.append((live & maybe).sum())
+            self._pend_pruned.append((live & ~maybe).sum())
 
     def _apply_host(self, atom: Atom, ds: Sequence[_DevSet],
                     union: _DevSet) -> List[_DevSet]:
@@ -445,18 +685,41 @@ class DeviceTapeBackend(SetBackend):
         self.blocks_touched += live_block_count(uw, self.nblocks, self.wpb)
         return [self._setop(sat, d, OP_AND) for d in ds]
 
+    def _bind_atom(self, atom: Atom):
+        """(column blocks, lookup mask or None) for a device-executable
+        atom; (None, None) when the atom needs the host fallback."""
+        if lookup_atom(atom):
+            mask = self._lookup_mask(atom)
+            if mask is None:
+                return None, None
+            return self._col_bitmajor(atom.column), mask
+        if device_atom(atom):
+            return self._col_bitmajor(atom.column), None
+        return None, None
+
     def apply_atom(self, atom: Atom, d: _DevSet) -> _DevSet:
-        col = (self._col_bitmajor(atom.column)
-               if device_atom(atom) else None)
-        self._account([atom], d.pops, device=col is not None)
+        import jax.numpy as jnp
+        col, lmask = self._bind_atom(atom)
+        zone = self._zone_mask([atom]) if col is not None else None
+        self._account([atom], d.pops, device=col is not None, zone=zone)
         if col is None:
             return self._apply_host(atom, [d], d)[0]
+        zj = None if zone is None else jnp.asarray(zone)
+        skip = zone is not None and not (zone == ZONE_MAYBE).any()
         self.device_dispatches += 1
-        out, pops = _jitted_prims()["atom"](col, d.bits, d.pops,
-                                            float(atom.value),
-                                            opcode=_CMP_OPCODE[atom.op],
-                                            pallas=self.pallas,
-                                            interpret=self.interpret)
+        if lmask is not None:
+            out, pops = _jitted_prims()["lookup"](col, d.bits, d.pops,
+                                                  jnp.asarray(lmask),
+                                                  zone=zj, skip=skip,
+                                                  pallas=self.pallas,
+                                                  interpret=self.interpret)
+        else:
+            out, pops = _jitted_prims()["atom"](col, d.bits, d.pops,
+                                                float(atom.value), zone=zj,
+                                                skip=skip,
+                                                opcode=_CMP_OPCODE[atom.op],
+                                                pallas=self.pallas,
+                                                interpret=self.interpret)
         return _DevSet(out, pops)
 
     def apply_atom_multi(self, atom: Atom, ds: Sequence[_DevSet]
@@ -473,17 +736,25 @@ class DeviceTapeBackend(SetBackend):
         self.device_dispatches += 1
         ubits, upops = _jitted_prims()["union"](bits, pops)
         union = _DevSet(ubits, upops)
-        col = (self._col_bitmajor(atom.column)
-               if device_atom(atom) else None)
-        self._account([atom], union.pops, device=col is not None)
+        col, lmask = self._bind_atom(atom)
+        zone = self._zone_mask([atom]) if col is not None else None
+        self._account([atom], union.pops, device=col is not None, zone=zone)
         if col is None:
             return self._apply_host(atom, ds, union)
+        zj = None if zone is None else jnp.asarray(zone)
+        skip = zone is not None and not (zone == ZONE_MAYBE).any()
         self.device_dispatches += 1
-        out, opops = _jitted_prims()["multi"](col, bits, pops,
-                                              float(atom.value),
-                                              opcode=_CMP_OPCODE[atom.op],
-                                              pallas=self.pallas,
-                                              interpret=self.interpret)
+        if lmask is not None:
+            out, opops = _jitted_prims()["lookup_multi"](
+                col, bits, pops, jnp.asarray(lmask), zone=zj, skip=skip,
+                pallas=self.pallas, interpret=self.interpret)
+        else:
+            out, opops = _jitted_prims()["multi"](col, bits, pops,
+                                                  float(atom.value), zone=zj,
+                                                  skip=skip,
+                                                  opcode=_CMP_OPCODE[atom.op],
+                                                  pallas=self.pallas,
+                                                  interpret=self.interpret)
         return [_DevSet(out[j], opops[j]) for j in range(len(ds))]
 
     # -- the single end-of-query (or end-of-batch) host sync -------------------
@@ -496,11 +767,13 @@ class DeviceTapeBackend(SetBackend):
         if self._pend_records:
             rec = jnp.stack(self._pend_records)
             blk = jnp.stack(self._pend_blocks)
+            prn = jnp.stack(self._pend_pruned)
         else:
             rec = jnp.zeros((0,), dtype=jnp.int32)
             blk = jnp.zeros((0,), dtype=jnp.int32)
+            prn = jnp.zeros((0,), dtype=jnp.int32)
         self.host_syncs += 1
-        flats, rec, blk = jax.device_get((flats, rec, blk))
+        flats, rec, blk, prn = jax.device_get((flats, rec, blk, prn))
         rec = np.asarray(rec, dtype=np.float64)
         blk = np.asarray(blk, dtype=np.float64)
         ks = np.asarray(self._pend_k, dtype=np.float64)
@@ -509,8 +782,10 @@ class DeviceTapeBackend(SetBackend):
             (rec * np.asarray(self._pend_weights)).sum())
         self.blocks_touched += float((blk * ks).sum())
         self.records_touched += float((blk * ks).sum() * self.block)
+        self.blocks_pruned += float(
+            (np.asarray(prn, dtype=np.float64) * ks).sum())
         self._pend_records, self._pend_weights = [], []
-        self._pend_k, self._pend_blocks = [], []
+        self._pend_k, self._pend_blocks, self._pend_pruned = [], [], []
         return [np.asarray(f) for f in flats]
 
     def _host_atom_group(self, op, src: _DevSet) -> _DevSet:
@@ -535,21 +810,41 @@ class DeviceTapeBackend(SetBackend):
 
     # -- whole-tape execution --------------------------------------------------
     def _tape_bindings(self, tape: PlanTape):
-        """Column arrays, value vector and per-op metadata for ``tape``.
+        """Column arrays, value vector, lookup bitmasks and per-op metadata.
 
-        Returns (cols, values, meta, device_ok) where meta[i] is
+        Returns (cols, values, lmasks, meta, device_ok) where meta[i] is
         (col_indices, value_indices, opcodes) for op i (empty for SETOPs)
-        and device_ok[i] says the op can run on device.
+        and device_ok[i] says the op can run on device.  A dictionary-
+        membership ATOM op carries opcode :data:`IN_OPCODE` and its value
+        index points into ``lmasks`` (stacked packed hit bitmasks, padded
+        to a common word count) instead of ``values``.
         """
         atoms = tape.tree.atoms
         col_ix: Dict[str, int] = {}
         cols: List[object] = []
         values: List[float] = []
+        lmask_rows: List[np.ndarray] = []
         meta: List[Tuple[tuple, tuple, tuple]] = []
         device_ok: List[bool] = []
         for op in tape.ops:
             if op.kind not in (ATOM, CHAIN):
                 meta.append(((), (), ()))
+                device_ok.append(True)
+                continue
+            if len(op.aids) == 1 and lookup_atom(atoms[op.aids[0]]):
+                a = atoms[op.aids[0]]
+                col = self._col_bitmajor(a.column)
+                mask = self._lookup_mask(a)
+                if col is None or mask is None:
+                    meta.append(((), (), ()))
+                    device_ok.append(False)
+                    continue
+                if a.column not in col_ix:
+                    col_ix[a.column] = len(cols)
+                    cols.append(col)
+                meta.append(((col_ix[a.column],), (len(lmask_rows),),
+                             (IN_OPCODE,)))
+                lmask_rows.append(mask)
                 device_ok.append(True)
                 continue
             ok = all(device_atom(atoms[a]) for a in op.aids)
@@ -576,12 +871,64 @@ class DeviceTapeBackend(SetBackend):
                 opcodes.append(_CMP_OPCODE[atoms[a].op])
             meta.append((tuple(cixs), tuple(vixs), tuple(opcodes)))
             device_ok.append(True)
-        return cols, values, meta, device_ok
+        if lmask_rows:
+            u = max(len(m) for m in lmask_rows)
+            lmasks = np.zeros((len(lmask_rows), u), dtype=np.uint32)
+            for j, m in enumerate(lmask_rows):
+                lmasks[j, : len(m)] = m
+        else:
+            lmasks = np.zeros((0, 1), dtype=np.uint32)
+        return cols, values, lmasks, meta, device_ok
 
-    def _tape_program(self, tape: PlanTape, meta):
-        """Build (or fetch) the jitted whole-tape program for ``tape``."""
+    def _tape_zone_masks(self, tape: PlanTape):
+        """Stacked per-op zone-verdict rows ``i32[M, nblocks]`` for the M
+        costed (ATOM/CHAIN) ops of ``tape``, or None with pruning disabled.
+
+        These are *runtime inputs* to the compiled program: M and the row
+        shape are fixed by the tape structure and the block bucket, while
+        the verdict VALUES are data — appends that extend the zone maps, or
+        cache-hit tapes with drifted constants, feed new rows through the
+        same jitted program without retracing.  Ops nothing prunes get an
+        all-MAYBE row (the blend then reduces to the unpruned evaluation).
+
+        Returns ``(zmasks, any_decided)`` — ``any_decided`` says some op's
+        mask has no MAYBE block at all, which selects the lax.cond "skip"
+        flavor of the program (see :func:`_zone_apply`); with pruning
+        disabled returns ``(None, False)``.
+        """
+        if self._zones is None:
+            return None, False
+        import jax.numpy as jnp
+        atoms = tape.tree.atoms
+        rows = []
+        any_decided = False
+        for op in tape.ops:
+            if op.kind not in (ATOM, CHAIN):
+                continue
+            z = self._zone_mask([atoms[a] for a in op.aids], conj=op.conj)
+            if z is None:
+                z = np.full(self.nblocks, ZONE_MAYBE, np.int32)
+            elif not (z == ZONE_MAYBE).any():
+                any_decided = True
+            rows.append(z)
+        if not rows:
+            return jnp.zeros((0, self.nblocks), dtype=jnp.int32), False
+        return jnp.asarray(np.stack(rows)), any_decided
+
+    def _tape_program(self, tape: PlanTape, meta, skip: bool = False):
+        """Build (or fetch) the jitted whole-tape program for ``tape``.
+
+        The pruning *mechanism* (whether a zone-mask input exists, and
+        whether evaluations sit under the lax.cond runtime skip) is a
+        static part of the program — it changes the traced graph — but the
+        masks themselves are runtime arrays: a program compiled once serves
+        every zone-map state of every key-equal tape.  At most two flavors
+        per tape exist (skip on/off), chosen host-side from the mask data;
+        appends never retrace either.
+        """
         import jax
-        key = (tape.key, self.pallas, self.interpret)
+        prune = self._zones is not None
+        key = (tape.key, self.pallas, self.interpret, prune, skip)
         prog = _TAPE_PROGRAMS.get(key)
         if prog is not None:
             _TAPE_PROGRAMS.move_to_end(key)
@@ -591,11 +938,12 @@ class DeviceTapeBackend(SetBackend):
         n_slots = tape.n_slots
         pallas, interpret = self.pallas, self.interpret
 
-        def program(cols, values, full_bits, full_pops):
+        def program(cols, values, lmasks, zmasks, full_bits, full_pops):
             import jax.numpy as jnp
             bits: List[object] = [None] * n_slots
             pops: List[object] = [None] * n_slots
-            recs, blks = [], []
+            recs, blks, prns = [], [], []
+            mi = 0
             for oi, op in enumerate(ops):
                 if op.kind == FULL:
                     b, p = full_bits, full_pops
@@ -608,24 +956,45 @@ class DeviceTapeBackend(SetBackend):
                 else:
                     cixs, vixs, opcodes = meta[oi]
                     sb, sp = bits[op.a], pops[op.a]
+                    # records_evaluated stays the PRE-prune popcount (the
+                    # paper metric describes the plan, not the pruning);
+                    # blocks split into touched (live MAYBE) and pruned
                     recs.append(sp.sum())
-                    blks.append((sp > 0).sum())
-                    if op.kind == ATOM:
+                    zone = zmasks[mi] if prune else None
+                    mi += 1
+                    if zone is None:
+                        blks.append((sp > 0).sum())
+                        prns.append(jnp.int32(0))
+                    else:
+                        live = sp > 0
+                        maybe = zone == ZONE_MAYBE
+                        blks.append((live & maybe).sum())
+                        prns.append((live & ~maybe).sum())
+                    if opcodes[0] == IN_OPCODE:
+                        b, p = _lookup_impl(cols[cixs[0]], sb, sp,
+                                            lmasks[vixs[0]], pallas,
+                                            interpret, zone=zone,
+                                            skip=skip)
+                    elif op.kind == ATOM:
                         b, p = _atom_impl(cols[cixs[0]], sb, sp,
                                           values[vixs[0]], opcodes[0],
-                                          pallas, interpret)
+                                          pallas, interpret, zone=zone,
+                                          skip=skip)
                     else:
                         stack = jnp.stack([cols[c] for c in cixs], axis=1)
                         vals = jnp.stack([values[v] for v in vixs])
                         b, p = _chain_impl(stack, sb, sp, vals, opcodes,
-                                           op.conj, pallas, interpret)
+                                           op.conj, pallas, interpret,
+                                           zone=zone, skip=skip)
                 bits[op.dst] = b
                 pops[op.dst] = p
             rec = (jnp.stack(recs) if recs
                    else jnp.zeros((0,), dtype=jnp.int32))
             blk = (jnp.stack(blks) if blks
                    else jnp.zeros((0,), dtype=jnp.int32))
-            return bits[result], rec, blk
+            prn = (jnp.stack(prns) if prns
+                   else jnp.zeros((0,), dtype=jnp.int32))
+            return bits[result], rec, blk, prn
 
         prog = jax.jit(program)
         _TAPE_PROGRAMS[key] = prog
@@ -644,7 +1013,7 @@ class DeviceTapeBackend(SetBackend):
         """
         import jax.numpy as jnp
         self.last_tape = tape
-        cols, values, meta, device_ok = self._tape_bindings(tape)
+        cols, values, lmasks, meta, device_ok = self._tape_bindings(tape)
         atoms = tape.tree.atoms
         full = self.full()
         if all(device_ok):
@@ -656,15 +1025,18 @@ class DeviceTapeBackend(SetBackend):
             self.stats.atom_applications += int(ks.sum())
             self.stats.setops += sum(1 for op in tape.ops
                                      if op.kind == SETOP)
-            prog = self._tape_program(tape, tuple(meta))
+            zmasks, any_decided = self._tape_zone_masks(tape)
+            prog = self._tape_program(tape, tuple(meta), skip=any_decided)
             self.device_dispatches += 1
-            res, rec, blk = prog(tuple(cols),
-                                 jnp.asarray(values, dtype=jnp.float32),
-                                 full.bits, full.pops)
+            res, rec, blk, prn = prog(tuple(cols),
+                                      jnp.asarray(values,
+                                                  dtype=jnp.float32),
+                                      jnp.asarray(lmasks), zmasks,
+                                      full.bits, full.pops)
             import jax
             self.host_syncs += 1
-            res, rec, blk = jax.device_get(
-                (res.reshape(-1)[: n_words(self.n)], rec, blk))
+            res, rec, blk, prn = jax.device_get(
+                (res.reshape(-1)[: n_words(self.n)], rec, blk, prn))
             rec = np.asarray(rec, dtype=np.float64)
             weights = np.asarray([sum(atoms[a].cost_factor
                                       for a in op.aids) for op in costed])
@@ -673,10 +1045,12 @@ class DeviceTapeBackend(SetBackend):
             blk_total = float((np.asarray(blk, dtype=np.float64) * ks).sum())
             self.blocks_touched += blk_total
             self.records_touched += blk_total * self.block
+            self.blocks_pruned += float(
+                (np.asarray(prn, dtype=np.float64) * ks).sum())
             return np.asarray(res)
-        return self._run_tape_mixed(tape, meta, device_ok)
+        return self._run_tape_mixed(tape, lmasks, meta, device_ok)
 
-    def _run_tape_mixed(self, tape: PlanTape, meta, device_ok
+    def _run_tape_mixed(self, tape: PlanTape, lmasks, meta, device_ok
                         ) -> np.ndarray:
         """Op-by-op tape execution with host fallbacks interleaved."""
         import jax.numpy as jnp
@@ -696,24 +1070,35 @@ class DeviceTapeBackend(SetBackend):
                 if not device_ok[oi]:
                     s = self._host_atom_group(op, src)
                 else:
-                    self._account([atoms[a] for a in op.aids], src.pops)
+                    grp = [atoms[a] for a in op.aids]
+                    zone = self._zone_mask(grp, conj=op.conj)
+                    self._account(grp, src.pops, zone=zone)
+                    zj = None if zone is None else jnp.asarray(zone)
+                    skip = (zone is not None
+                            and not (zone == ZONE_MAYBE).any())
                     cols = [self._col_bitmajor(atoms[a].column)
                             for a in op.aids]
                     self.device_dispatches += 1
-                    if op.kind == ATOM:
+                    if opcodes[0] == IN_OPCODE:
+                        out, pops = prims["lookup"](
+                            cols[0], src.bits, src.pops,
+                            jnp.asarray(lmasks[vixs[0]]), zone=zj,
+                            skip=skip, pallas=self.pallas,
+                            interpret=self.interpret)
+                    elif op.kind == ATOM:
                         out, pops = prims["atom"](
                             cols[0], src.bits, src.pops,
-                            float(atoms[op.aids[0]].value),
-                            opcode=opcodes[0], pallas=self.pallas,
-                            interpret=self.interpret)
+                            float(atoms[op.aids[0]].value), zone=zj,
+                            skip=skip, opcode=opcodes[0],
+                            pallas=self.pallas, interpret=self.interpret)
                     else:
                         stack = jnp.stack(cols, axis=1)
                         vals = jnp.asarray(
                             [float(atoms[a].value) for a in op.aids],
                             dtype=jnp.float32)
                         out, pops = prims["chain"](
-                            stack, src.bits, src.pops, vals,
-                            opcodes=opcodes, conj=op.conj,
+                            stack, src.bits, src.pops, vals, zone=zj,
+                            skip=skip, opcodes=opcodes, conj=op.conj,
                             pallas=self.pallas, interpret=self.interpret)
                     s = _DevSet(out, pops)
             slots[op.dst] = s

@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import time
 from collections import Counter, OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -46,8 +46,8 @@ from ..core import deepfish, nooropt, optimal_plan, shallowfish
 from ..core.bestd import BestDMachine
 from ..core.cost import CostModel, PerAtomCostModel
 from ..core.plan import Plan, execute_plan, finalize_plan
-from ..core.predicate import (Atom, Node, PredicateTree, atom_key,
-                              canonical_key, normalize, tree_copy)
+from ..core.predicate import (Atom, DICT_SEL_STEP, Node, PredicateTree,
+                              atom_key, canonical_key, normalize, tree_copy)
 from ..core.sets import SetBackend
 from .executor import BitmapBackend, JaxBlockBackend
 from .table import Table, annotate_selectivities, rewrite_string_atoms
@@ -94,12 +94,19 @@ class LRUPlanCache:
     """
 
     def __init__(self, capacity: int = 256, sel_step: float = 0.05,
-                 cost_step: float = 0.5):
+                 cost_step: float = 0.5,
+                 dict_sel_step: Optional[float] = DICT_SEL_STEP):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self.sel_step = sel_step
         self.cost_step = cost_step
+        # dictionary-code atoms carry EXACT selectivities (computed from
+        # code frequencies), so they get a much tighter bucket than the
+        # generic sel_step; None buckets them coarsely like everything
+        # else — the "dict_buckets" section of bench_multiquery.py
+        # (--strings, default on) measures the tradeoff
+        self.dict_sel_step = dict_sel_step
         # full_key -> {"cpos": plan order in canonical positions,
         #              "inv": aid -> canonical position for the tree the
         #                     cached tape was compiled against,
@@ -126,7 +133,8 @@ class LRUPlanCache:
                                       total_records=total_records)
             return (plan, compile_tape(plan)) if with_tape else plan
         t0 = time.perf_counter()
-        key, atom_order = canonical_key(tree, self.sel_step, self.cost_step)
+        key, atom_order = canonical_key(tree, self.sel_step, self.cost_step,
+                                        self.dict_sel_step)
         # repr of the (frozen dataclass) model pins its type + parameters:
         # plans found under one cost model must not serve another
         full_key = (planner, tree.n, repr(model), key)
@@ -175,7 +183,16 @@ class BatchStats:
     physical_atoms: int = 0      # column touches actually performed
     atom_cache_hits: int = 0     # applications served as a pure set-AND
     unique_atom_keys: int = 0
-    shared_atom_keys: int = 0    # keys appearing in >= share_threshold queries
+    shared_atom_keys: int = 0    # keys PROMOTED to the shared |R| cache
+    # selective-sharing decision trail: candidates passed the census
+    # (appear in >= share_threshold queries); a candidate promotes only
+    # when the summed expected count(D)/|R| over its applications
+    # (sharing_frac_sums[key], from the plans' own BestD estimates) clears
+    # the session's share_margin — otherwise the |R| full-table touch
+    # costs more than the applications it would replace
+    shared_candidate_keys: int = 0
+    shared_rejected_keys: int = 0
+    sharing_frac_sums: Dict[tuple, float] = field(default_factory=dict)
     kernel_batches: int = 0      # grouped multi-bitmap kernel invocations
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
@@ -304,8 +321,24 @@ class QuerySession:
                       bundled host sync per batch).
     plan_cache:       an :class:`LRUPlanCache`; persists across ``execute``
                       calls (and may be shared between sessions)
-    share_threshold:  min queries an atom key must appear in to get the
-                      full-table shared evaluation (default 2)
+    share_threshold:  min queries an atom key must appear in to become a
+                      sharing *candidate* (default 2); candidates then pass
+                      the selective-sharing cost check (see share_margin)
+    share_margin:     promote a candidate to the shared full-table cache
+                      only when the summed expected count(D)/|R| over its
+                      applications (the plans' BestD step estimates) is at
+                      least this margin — the |R| touch must beat the
+                      applications it replaces.  1.0 (default) is
+                      break-even; None promotes every candidate (the
+                      pre-heuristic census behavior).  The decision is
+                      exposed in BatchStats.shared_candidate_keys /
+                      shared_rejected_keys / sharing_frac_sums.
+    zone_prune:       let the block/device backends prune NONE/ALL blocks
+                      via the table's zone maps before paying the costed
+                      column touch (default on; results are bit-identical
+                      either way).  On the tape engines the per-atom
+                      verdict masks enter the compiled program as runtime
+                      inputs, so appends never retrace.
     batched:          True = lockstep multi-bitmap execution (device-
                       resident on the tape engines), False = sequential
                       per-query execution, "auto" = lockstep on jax/pallas,
@@ -330,7 +363,8 @@ class QuerySession:
                  share_threshold: int = 2,
                  batched: Union[bool, str] = "auto", block: int = 8192,
                  annotate: bool = True, persist_atom_cache: bool = True,
-                 rewrite_strings: bool = True):
+                 rewrite_strings: bool = True, zone_prune: bool = True,
+                 share_margin: Optional[float] = 1.0):
         if planner not in ("auto",) + tuple(_PLANNERS):
             raise ValueError(f"unknown planner {planner!r}")
         if engine not in self._ENGINES:
@@ -347,6 +381,8 @@ class QuerySession:
         self.annotate = annotate
         self.persist_atom_cache = persist_atom_cache
         self.rewrite_strings = rewrite_strings
+        self.zone_prune = zone_prune
+        self.share_margin = share_margin
         self.last_result: Optional[BatchResult] = None
         self._atom_cache: Dict[tuple, object] = {}
         self._cache_version = self._table_fingerprint()
@@ -384,10 +420,12 @@ class QuerySession:
             from .device import DeviceTapeBackend
             be = DeviceTapeBackend(
                 self.table, block=self.block,
-                kernels="pallas" if self.engine == "tape-pallas" else "jax")
+                kernels="pallas" if self.engine == "tape-pallas" else "jax",
+                zone_prune=self.zone_prune)
         else:
             be = JaxBlockBackend(self.table, block=self.block,
-                                 engine=self.engine)
+                                 engine=self.engine,
+                                 zone_prune=self.zone_prune)
         self._backend = be
         self._backend_version = fp
         return be
@@ -421,6 +459,41 @@ class QuerySession:
         if self.planner == "auto":
             return "shallowfish" if tree.depth <= 2 else "deepfish"
         return self.planner
+
+    def _promote_shared(self, trees: Sequence[PredicateTree],
+                        plans: Sequence[Plan], candidates: set,
+                        stats: BatchStats) -> set:
+        """Cost-model the shared-evaluation promotion (ROADMAP's selective
+        sharing policy): evaluating a shared atom costs one |R| full-table
+        touch, while leaving it exclusive costs the sum of count(D) over
+        its applications.  The plans already carry BestD's expected
+        ``count(D_i)/|R|`` per step (``Plan.est_fracs``), so a candidate
+        promotes iff its summed expected fraction clears ``share_margin``
+        (1.0 = break-even; below it the |R| touch would *add* work — the
+        classic mistake of sharing a highly-pruned atom).  Plans without
+        step estimates (nooropt) count 1.0 per application, reproducing the
+        census behavior; ``share_margin=None`` disables the heuristic
+        entirely.  The decision trail lands in
+        ``BatchStats.sharing_frac_sums``.
+        """
+        if not candidates:
+            return set()
+        frac_sums: Dict[tuple, float] = {k: 0.0 for k in candidates}
+        for t, p in zip(trees, plans):
+            if p.order and p.est_fracs:
+                for aid, frac in zip(p.order, p.est_fracs):
+                    k = atom_key(t.atoms[aid])
+                    if k in frac_sums:
+                        frac_sums[k] += frac
+            else:
+                for a in t.atoms:
+                    k = atom_key(a)
+                    if k in frac_sums:
+                        frac_sums[k] += 1.0
+        stats.sharing_frac_sums = frac_sums
+        if self.share_margin is None:
+            return set(candidates)
+        return {k for k, s in frac_sums.items() if s >= self.share_margin}
 
     # -- entry point ----------------------------------------------------------
     def execute(self, queries: Sequence[Union[Node, PredicateTree]]
@@ -482,8 +555,12 @@ class QuerySession:
         per_query = [set(atom_key(a) for a in t.atoms) for t in trees]
         census = Counter(k for keys in per_query for k in keys)
         stats.unique_atom_keys = len(census)
-        shared = {k for k, c in census.items() if c >= self.share_threshold}
+        candidates = {k for k, c in census.items()
+                      if c >= self.share_threshold}
+        stats.shared_candidate_keys = len(candidates)
+        shared = self._promote_shared(trees, plans, candidates, stats)
         stats.shared_atom_keys = len(shared)
+        stats.shared_rejected_keys = len(candidates) - len(shared)
 
         # cross-batch atom-result reuse: results persist across execute()
         # calls until a table write is detected.  A write explained as a

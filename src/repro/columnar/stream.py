@@ -141,6 +141,12 @@ class StreamSession:
             raise ValueError("max_pending must be >= 1")
         self.table = table
         self.max_pending = max_pending
+        # promote every sharing candidate by default: the per-batch
+        # share_margin cost check is myopic for a long-lived streaming
+        # session, where a promoted atom's |R| touch amortizes across all
+        # future drains at delta-splice cost (appended rows only).  Pass
+        # share_margin= explicitly to restore the per-batch heuristic.
+        session_kwargs.setdefault("share_margin", None)
         self.session = QuerySession(table, planner=planner, engine=engine,
                                     batched=batched, **session_kwargs)
         self.stats = StreamStats()

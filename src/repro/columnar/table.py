@@ -210,6 +210,7 @@ class Table:
         self._mutlog: list = []
         self._mutlog_base = 0
         self._zones: Dict[Tuple[str, int], tuple] = {}
+        self._qsketch: Dict[str, tuple] = {}
 
     def __getitem__(self, name: str) -> np.ndarray:
         return self.columns[name]
@@ -341,8 +342,14 @@ class Table:
             return st
         st = self._stats.get(name)
         if st is None:
-            qs = np.quantile(col, np.linspace(0.0, 1.0, _QUANTILE_GRID))
-            st = ColumnStats(quantiles=qs)
+            # mergeable per-chunk quantile summaries (columnar.ingest):
+            # appends recompute only chunks at/past the append boundary and
+            # the merge runs over summary points, so post-append planning
+            # no longer re-sorts whole columns; small columns (one chunk)
+            # keep the exact grid
+            from .ingest import merged_quantiles, table_quantile_sketch
+            sk = table_quantile_sketch(self, name)
+            st = ColumnStats(quantiles=merged_quantiles(sk, _QUANTILE_GRID))
             self._stats[name] = st
         return st
 
@@ -491,10 +498,7 @@ def _rewrite_node(node: Node, table: Table):
             hits = _apply_op(node, dc.values)
         except (TypeError, ValueError):
             return node, False              # uncomparable value: host path
-        new = codes_expression(node, hits, dc.freqs)
-        if new is None:
-            return node, False              # fragmented hit set: host path
-        return new, True
+        return codes_expression(node, hits, dc.freqs), True
     if isinstance(node, Not):
         child, changed = _rewrite_node(node.child, table)
         return (Not(child), True) if changed else (node, False)
@@ -514,13 +518,14 @@ def rewrite_string_atoms(tree: PredicateTree, table: Table) -> PredicateTree:
     :func:`repro.core.predicate.codes_expression`).
 
     Equality, IN, ``<``/``<=`` over the sorted dictionary and (prefix-)LIKE
-    all become plain comparisons the fused device kernels execute — a mixed
-    numeric/string plan then compiles to a single device program with zero
-    host fallbacks.  Only opaque UDFs and atoms whose dictionary hit set is
-    too fragmented keep the host gather path.  Returns ``tree`` itself when
-    nothing rewrites; otherwise a freshly normalized tree (the input and its
-    atoms are never mutated), with exact selectivities on the new atoms from
-    the dictionary's value frequencies.
+    all become plain comparisons the fused device kernels execute, and hit
+    sets too fragmented for ranges become membership atoms over the packed
+    code bitmask (the dict-lookup kernel) — a mixed numeric/string plan
+    then compiles to a single device program with zero host fallbacks.
+    Only opaque UDFs keep the host gather path.  Returns ``tree`` itself
+    when nothing rewrites; otherwise a freshly normalized tree (the input
+    and its atoms are never mutated), with exact selectivities on the new
+    atoms from the dictionary's value frequencies.
     """
     root, changed = _rewrite_node(tree.root, table)
     if not changed:

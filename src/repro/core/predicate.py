@@ -290,8 +290,20 @@ def atom_key(atom: Atom) -> Tuple:
     return (atom.column, atom.op, value)
 
 
+#: selectivity bucket for dictionary-code atoms in :func:`canonical_key` —
+#: much tighter than the generic ``sel_step`` because code-space atom
+#: selectivities are *exact* (computed from dictionary code frequencies by
+#: ``codes_expression``), so quantizing them into the coarse buckets throws
+#: away precision the planners could act on.  Kept as a (fine) bucket
+#: rather than the raw float so byte-level jitter in the frequencies does
+#: not defeat the plan cache entirely.
+DICT_SEL_STEP = 0.005
+
+
 def canonical_key(tree: PredicateTree, sel_step: float = 0.05,
-                  cost_step: float = 0.5) -> Tuple[Tuple, list]:
+                  cost_step: float = 0.5,
+                  dict_sel_step: Optional[float] = DICT_SEL_STEP
+                  ) -> Tuple[Tuple, list]:
     """Canonical hashable form of a normalized tree, for plan caching.
 
     The key encodes exactly what the planners consume — node kinds, tree
@@ -303,6 +315,15 @@ def canonical_key(tree: PredicateTree, sel_step: float = 0.05,
     are sorted by their encodings, making the key invariant to sibling
     order (AND/OR are commutative).
 
+    Atoms over derived dictionary-code columns carry *exact* selectivities
+    (``codes_expression`` computes them from code frequencies), so they
+    quantize with the much tighter ``dict_sel_step`` bucket instead of the
+    coarse ``sel_step`` — cached plans for dict-heavy queries stay close to
+    what a fresh plan would choose.  Pass ``dict_sel_step=None`` to bucket
+    them like every other atom (the pre-tightening behavior, kept for the
+    hit-rate/plan-quality tradeoff measurements in
+    ``benchmarks/bench_multiquery.py``).
+
     Returns ``(key, atom_order)`` where ``atom_order`` lists this tree's
     atom ids in canonical traversal order: a plan stored as canonical
     *positions* is remapped onto any key-equal tree via its own
@@ -311,7 +332,10 @@ def canonical_key(tree: PredicateTree, sel_step: float = 0.05,
     """
     def enc(node: Node) -> Tuple[Tuple, list]:
         if isinstance(node, Atom):
-            sb = round(node.selectivity / sel_step) if sel_step else node.selectivity
+            step = sel_step
+            if dict_sel_step and decode_column(node.column) is not None:
+                step = dict_sel_step
+            sb = round(node.selectivity / step) if step else node.selectivity
             cb = round(node.cost_factor / cost_step) if cost_step else node.cost_factor
             return ("A", sb, cb), [node.aid]
         tag = "&" if isinstance(node, And) else "|"
@@ -339,8 +363,10 @@ def canonical_key(tree: PredicateTree, sel_step: float = 0.05,
 #: suffix of the derived column holding a string column's int32 codes
 CODE_SUFFIX = "#codes"
 
-#: a hit mask fragmented into more runs than this keeps the host path —
-#: the rewrite would explode into a wide OR of ranges
+#: a hit mask fragmented into more runs than this stops rewriting into
+#: range comparisons (the expression would explode into a wide OR of
+#: ranges) and instead becomes a single membership atom over the packed
+#: code bitmask — the device dict-lookup kernel's vocabulary
 MAX_CODE_RUNS = 4
 
 
@@ -512,11 +538,15 @@ def codes_expression(atom: "Atom", hits: np.ndarray,
     ``freqs[c]`` optionally gives the fraction of records holding code ``c``
     so the emitted atoms carry *exact* selectivities.
 
-    Returns an expression over :func:`code_column` made solely of plain
-    comparison atoms (the device kernels' vocabulary), or None when the hit
-    set fragments into more than :data:`MAX_CODE_RUNS` runs on both sides —
-    such atoms keep the host fallback path.  Degenerate masks become
-    constant-foldable single comparisons (codes are always >= 0, so
+    Returns an expression over :func:`code_column` made of plain comparison
+    atoms where the hit set forms few contiguous runs, and a single
+    ``code IN (c0, c1, ...)`` *membership atom* when it fragments into more
+    than :data:`MAX_CODE_RUNS` runs on both sides — the shape the device
+    dict-lookup kernel executes by testing each row's code against a packed
+    ``u32[ceil(|dict|/32)]`` hit bitmask (see ``kernels.dict_lookup``), so
+    regex / scattered-IN / arbitrary-mask string atoms stay device-resident
+    instead of falling back to the host gather path.  Degenerate masks
+    become constant-foldable single comparisons (codes are always >= 0, so
     ``code < 0`` is the empty set and ``code >= 0`` the full one).
     """
     hits = np.asarray(hits, dtype=bool)
@@ -536,4 +566,9 @@ def codes_expression(atom: "Atom", hits: np.ndarray,
     if len(gaps) <= MAX_CODE_RUNS:
         return And([_anti_range_expr(atom, lo, hi, n, freqs)
                     for lo, hi in gaps])
-    return None
+    codes = np.flatnonzero(hits)
+    sel = (float(np.asarray(freqs)[hits].sum()) if freqs is not None
+           else len(codes) / max(n, 1))
+    return Atom(code_column(atom.column), "in",
+                tuple(int(c) for c in codes),
+                selectivity=_clamp(sel), cost_factor=atom.cost_factor)

@@ -49,7 +49,7 @@ from typing import List, Optional, Sequence, Tuple
 
 from .bestd import BestDMachine
 from .plan import Plan
-from .predicate import And, Atom, PredicateTree
+from .predicate import And, Atom, PredicateTree, decode_column
 from .sets import SetBackend
 
 # op kinds
@@ -59,6 +59,10 @@ OP_AND, OP_OR, OP_ANDNOT = 0, 1, 2
 # comparison opcodes — shared with kernels.ref (LT..NE) and the device
 # backend (columnar.device imports this single definition)
 CMP_OPCODE = {"lt": 0, "le": 1, "gt": 2, "ge": 3, "eq": 4, "ne": 5}
+# dictionary-membership opcode: not a comparison — the atom's value is the
+# set of matching dictionary codes and the device backend lowers it to the
+# packed-bitmask lookup kernel (kernels.dict_lookup)
+IN_OPCODE = 6
 
 
 def _numeric_value(value) -> bool:
@@ -83,6 +87,36 @@ def device_atom(atom: Atom) -> bool:
     """
     return (atom.op in CMP_OPCODE and atom.fn is None
             and _numeric_value(atom.value))
+
+
+def lookup_atom(atom: Atom) -> bool:
+    """True iff ``atom`` is a dictionary-code membership test the device
+    dict-lookup kernel executes: ``code_col IN (c0, c1, ...)`` over a
+    derived ``#codes`` column with non-negative integer members.  Produced
+    by :func:`~repro.core.predicate.codes_expression` when a string atom's
+    dictionary hit set fragments into more than ``MAX_CODE_RUNS`` runs
+    (regex-shaped LIKE, scattered IN, arbitrary hit masks).  Lookup atoms
+    become single ATOM tape ops (they never fuse into CHAIN groups, which
+    are comparison-only) and bind to a packed ``u32[ceil(|dict|/32)]`` hit
+    bitmask at run time.
+    """
+    if atom.op != "in" or atom.fn is not None:
+        return False
+    if decode_column(atom.column) is None:
+        return False
+    try:
+        return all(int(v) == v and int(v) >= 0 for v in atom.value)
+    except (TypeError, ValueError):
+        return False
+
+
+def _atom_class(atom: Atom) -> int:
+    """Structural-key op class: 0 = host fallback, 1 = comparison kernel,
+    2 = dict-lookup kernel.  Part of :attr:`PlanTape.key` because the
+    compiled program's per-op lowering differs by class."""
+    if lookup_atom(atom):
+        return 2
+    return 1 if device_atom(atom) else 0
 
 
 @dataclass(frozen=True)
@@ -124,7 +158,7 @@ class PlanTape:
         enc = []
         for op in self.ops:
             sig = tuple((atoms[a].column, atoms[a].op,
-                         device_atom(atoms[a])) for a in op.aids)
+                         _atom_class(atoms[a])) for a in op.aids)
             enc.append((op.kind, op.dst, op.a, op.b, op.setop, op.conj, sig))
         return (self.planner, self.result, self.n_slots, tuple(enc))
 

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .bitmap_ops import AND, ANDNOT, OR, bitmap_setop
+from .dict_lookup import dict_lookup_scan, dict_lookup_scan_multi
 from .fused_chain import fused_chain_scan
 from .predicate_scan import predicate_scan, predicate_scan_multi
 
@@ -53,6 +54,23 @@ def predicate_blocks_multi(col: jnp.ndarray, bits: jnp.ndarray, value,
     out = predicate_scan_multi(col_bm, bits_flat, pops, val, opcode,
                                interpret=interpret)
     return out.reshape(q, n, w)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dict_lookup_blocks(col: jnp.ndarray, bits: jnp.ndarray,
+                       mask_words: jnp.ndarray,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Fused dictionary-membership lookup ∧ bits via the Pallas kernel.
+
+    col:  f32[N, B] record-major code blocks;  bits: u32[N, W], W = B//32;
+    mask_words: u32[U] packed hit set over code space.
+    """
+    n, b = col.shape
+    w = b // 32
+    col_bm = col.reshape(n, w, 32).transpose(0, 2, 1)
+    pops = ref.popcount_ref(bits).astype(jnp.int32)
+    return dict_lookup_scan(col_bm, bits, pops, mask_words,
+                            interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("opcode", "interpret"))

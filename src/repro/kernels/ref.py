@@ -71,6 +71,36 @@ def predicate_blocks_multi_ref(col: jnp.ndarray, bits_in: jnp.ndarray, value,
     return pack_u32(keep)
 
 
+def code_hits(codes: jnp.ndarray, mask_words: jnp.ndarray) -> jnp.ndarray:
+    """Membership of integer ``codes`` (any shape) in a packed hit set.
+
+    ``mask_words`` is u32[U] with bit ``c`` set iff dictionary value ``c``
+    satisfies the predicate; codes outside [0, 32*U) are misses.  The one
+    definition of the packed-bitmask test — the device backend's jnp
+    fallbacks call it too, so it cannot diverge from this oracle (the
+    Pallas kernel necessarily re-expresses it as a mask-word loop and is
+    tested against this).
+    """
+    u = mask_words.shape[0]
+    word = mask_words[jnp.clip(codes >> 5, 0, u - 1)]
+    hit = ((word >> (codes & 31).astype(jnp.uint32))
+           & jnp.uint32(1)).astype(bool)
+    return hit & (codes >= 0) & (codes < 32 * u)
+
+
+def dict_lookup_ref(col: jnp.ndarray, bits_in: jnp.ndarray,
+                    mask_words: jnp.ndarray) -> jnp.ndarray:
+    """Fused dictionary-membership test ∧ bits_in over blocked code columns.
+
+    col:        f32[N, B]   int dictionary codes stored as f32 blocks
+    bits_in:    u32[N, W]   packed record bitmap (W = B // 32)
+    mask_words: u32[U]      packed hit set over code space
+    returns     u32[N, W]   packed (D ∧ P) bitmap
+    """
+    hit = code_hits(col.astype(jnp.int32), mask_words)
+    return pack_u32(hit & unpack_u32(bits_in))
+
+
 def bitmap_and_ref(a, b):
     return a & b
 

@@ -129,11 +129,23 @@ def test_codes_expression_mask_equivalence(hits):
     np.testing.assert_array_equal(eval_code_expr(expr, rep), hits[rep])
 
 
-def test_codes_expression_fragmented_mask_bails():
-    # > MAX_CODE_RUNS runs on both sides -> host fallback (None)
+def test_codes_expression_fragmented_mask_becomes_lookup_atom():
+    # > MAX_CODE_RUNS runs on both sides -> a single membership atom over
+    # the packed code bitmask (the device dict-lookup kernel's shape), NOT
+    # a host-fallback bail
     hits = np.array([1, 0] * 6, dtype=bool)
     atom = Atom("city", "eq", "v", selectivity=0.5)
-    assert codes_expression(atom, hits) is None
+    expr = codes_expression(atom, hits)
+    assert isinstance(expr, Atom) and expr.op == "in"
+    assert expr.column == code_column("city")
+    assert expr.value == tuple(int(c) for c in np.flatnonzero(hits))
+    codes = np.arange(len(hits), dtype=np.int32)
+    np.testing.assert_array_equal(eval_code_expr(expr, codes), hits)
+    # exact selectivity from the code frequencies
+    freqs = np.linspace(1, 12, 12)
+    freqs = freqs / freqs.sum()
+    expr = codes_expression(atom, hits, freqs)
+    assert abs(expr.selectivity - freqs[hits].sum()) < 1e-9
 
 
 def test_codes_expression_exact_selectivities():

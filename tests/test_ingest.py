@@ -312,3 +312,63 @@ def test_extend_bitmap_matches_repack(old_n, delta_n):
 
 # hypothesis property sweeps live in tests/test_ingest_property.py (their
 # module-level importorskip must not skip the deterministic tests above)
+
+
+# -- mergeable quantile sketches ----------------------------------------------
+
+def test_quantile_sketch_single_chunk_exact():
+    """Columns at or below one sketch chunk keep the exact quantile grid
+    the estimator always used."""
+    t = _mini(5000)
+    got = t.stats("elevation_0").quantiles
+    want = np.quantile(t.columns["elevation_0"],
+                       np.linspace(0.0, 1.0, len(got)))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_quantile_sketch_merge_drift_bounded():
+    """Merged multi-chunk estimates stay within a fraction of a selectivity
+    point of the full np.quantile rebuild — across an append sequence."""
+    from repro.columnar import ingest as ingest_mod
+    t = _mini(3000)
+    # shrink the chunk so the test table spans many chunks
+    old = ingest_mod.SKETCH_CHUNK
+    ingest_mod.SKETCH_CHUNK = 512
+    try:
+        for rnd in range(3):
+            if rnd:
+                t.append(_rows_like(t, 700, seed=30 + rnd))
+            for name in ("elevation_0", "h_dist_road_0", "slope_0"):
+                got = t.stats(name).quantiles
+                grid = np.linspace(0.0, 1.0, len(got))
+                want = np.quantile(t.columns[name], grid)
+                # compare as selectivity drift through the estimated CDF
+                est = np.interp(want, got, grid)
+                assert np.abs(est - grid).max() < 0.02, (name, rnd)
+    finally:
+        ingest_mod.SKETCH_CHUNK = old
+
+
+def test_quantile_sketch_extends_incrementally_on_append():
+    """Appends recompute only chunks at/past the boundary (the zone-map
+    pattern) — prefix chunk summaries are reused by identity."""
+    from repro.columnar import ingest as ingest_mod
+    old = ingest_mod.SKETCH_CHUNK
+    ingest_mod.SKETCH_CHUNK = 1024
+    try:
+        t = _mini(4000)
+        t.stats("elevation_0")
+        sk = t._qsketch["elevation_0"][2]
+        frozen = [id(g) for g in sk.grids[:3]]      # full prefix chunks
+        t.append(_rows_like(t, 600, seed=9))
+        got = t.stats("elevation_0").quantiles      # triggers extension
+        sk2 = t._qsketch["elevation_0"][2]
+        assert sk2 is sk and sk2.n_rows == 4600
+        assert [id(g) for g in sk2.grids[:3]] == frozen
+        assert len(got) == len(np.unique(got)) or np.all(np.diff(got) >= 0)
+        # a rewrite rebuilds from scratch
+        t.set_column("elevation_0", t.columns["elevation_0"][::-1].copy())
+        t.stats("elevation_0")
+        assert t._qsketch["elevation_0"][2] is not sk
+    finally:
+        ingest_mod.SKETCH_CHUNK = old

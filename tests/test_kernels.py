@@ -169,3 +169,66 @@ def test_fused_chain_kernel_matches_ref(n, b, k, conj):
     want = np.asarray(want)
     # dead blocks: kernel writes zeros; ref keeps mask-AND (also zeros)
     np.testing.assert_array_equal(got, want)
+
+
+def _pack_mask(hits):
+    """bool[|dict|] -> packed u32[ceil/32] code hit bitmask (the canonical
+    packing — masks must follow the same convention as record bitmaps)."""
+    return pack_bits(np.asarray(hits, dtype=bool))
+
+
+@pytest.mark.parametrize("n,b,dict_n", [(1, 256, 7), (3, 1024, 37),
+                                        (4, 2048, 64), (2, 512, 200)])
+def test_dict_lookup_kernel_matches_ref(n, b, dict_n):
+    rng = np.random.default_rng(n * 100 + dict_n)
+    col = rng.integers(0, dict_n, size=(n, b)).astype(np.float32)
+    bits = rng.integers(0, 2 ** 32, size=(n, b // 32), dtype=np.uint32)
+    if n > 1:
+        bits[1] = 0                       # dead block exercises pl.when skip
+    mask = _pack_mask(rng.random(dict_n) < 0.4)
+    got = np.asarray(kops.dict_lookup_blocks(
+        jnp.asarray(col), jnp.asarray(bits), jnp.asarray(mask),
+        interpret=True))
+    want = np.asarray(kref.dict_lookup_ref(
+        jnp.asarray(col), jnp.asarray(bits), jnp.asarray(mask)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_dict_lookup_matches_numpy_oracle():
+    """Kernel + ref vs a direct numpy membership test, end to end."""
+    rng = np.random.default_rng(5)
+    n, b, dict_n = 3, 1024, 23
+    codes = rng.integers(0, dict_n, size=n * b)
+    live = rng.random(n * b) < 0.7
+    hits = rng.random(dict_n) < 0.5
+    bits = pack_bits(live).reshape(n, b // 32)
+    mask = _pack_mask(hits)
+    for fn in (kops.dict_lookup_blocks, kref.dict_lookup_ref):
+        kwargs = {"interpret": True} if fn is kops.dict_lookup_blocks else {}
+        got = np.asarray(fn(jnp.asarray(codes.reshape(n, b).astype(np.float32)),
+                            jnp.asarray(bits), jnp.asarray(mask), **kwargs))
+        np.testing.assert_array_equal(
+            unpack_bits(got.reshape(-1), n * b), hits[codes] & live)
+
+
+def test_dict_lookup_multi_matches_single():
+    """Q stacked record sets against one code column == Q single calls."""
+    from repro.kernels.dict_lookup import (dict_lookup_scan,
+                                           dict_lookup_scan_multi)
+    rng = np.random.default_rng(9)
+    q, n, b, dict_n = 3, 2, 512, 12
+    w = b // 32
+    col = rng.integers(0, dict_n, size=(n, b)).astype(np.float32)
+    col_bm = jnp.asarray(col.reshape(n, w, 32).transpose(0, 2, 1))
+    bits = rng.integers(0, 2 ** 32, size=(q, n, w), dtype=np.uint32)
+    mask = jnp.asarray(_pack_mask(rng.random(dict_n) < 0.3))
+    pops = kref.popcount_ref(jnp.asarray(bits.reshape(q * n, w)))
+    multi = np.asarray(dict_lookup_scan_multi(
+        col_bm, jnp.asarray(bits.reshape(q * n, w)),
+        pops.astype(jnp.int32), mask, interpret=True)).reshape(q, n, w)
+    for j in range(q):
+        single = np.asarray(dict_lookup_scan(
+            col_bm, jnp.asarray(bits[j]),
+            kref.popcount_ref(jnp.asarray(bits[j])).astype(jnp.int32),
+            mask, interpret=True))
+        np.testing.assert_array_equal(multi[j], single)

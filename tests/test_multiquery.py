@@ -201,3 +201,105 @@ def test_router_routes_rule_sets():
     # single-expression admit API unchanged
     admit = RequestRouter(rules[0]).admit(reqs)
     np.testing.assert_array_equal(admit, routes[0])
+
+
+# -- selective sharing (cost-modeled promotion) -------------------------------
+
+def _shared_atom_workload(forest):
+    """Batch where one atom recurs behind highly selective guards: the
+    summed expected count(D) of its applications is far below |R|, so the
+    |R| full-table touch cannot pay for itself."""
+    cheap = Atom("slope_0", "lt",
+                 forest.value_at_selectivity("slope_0", 0.05),
+                 selectivity=0.05)
+    shared = Atom("aspect_0", "lt",
+                  forest.value_at_selectivity("aspect_0", 0.5),
+                  selectivity=0.5)
+    import dataclasses
+    trees = []
+    for i in range(4):
+        g = 0.04 + 0.002 * i          # distinct guard per query
+        guard = Atom("elevation_0", "lt",
+                     forest.value_at_selectivity("elevation_0", g),
+                     selectivity=g)
+        trees.append(normalize(
+            guard & dataclasses.replace(cheap, aid=-1)
+            & dataclasses.replace(shared, aid=-1)))
+    return trees
+
+
+def test_selective_sharing_rejects_unprofitable_promotion(forest):
+    queries = _shared_atom_workload(forest)
+    sess = QuerySession(forest, planner="deepfish", engine="numpy",
+                        batched=False, annotate=False,
+                        persist_atom_cache=False)
+    res = sess.execute(queries)
+    st = res.stats
+    # every atom key recurs (census candidates), but the guards prune D so
+    # hard that no candidate's summed E[count(D)]/|R| reaches break-even
+    assert st.shared_candidate_keys >= 1
+    assert st.shared_rejected_keys >= 1
+    assert all(s < 4.0 for s in st.sharing_frac_sums.values())
+    # rejected atoms evaluated per query: results still bit-identical
+    for tree, bm in zip(queries, res.bitmaps):
+        want, _, _ = run_query(tree, forest, planner="deepfish",
+                               engine="numpy", rewrite_strings=False)
+        np.testing.assert_array_equal(bm, want)
+
+
+def test_selective_sharing_margin_none_restores_census(forest):
+    queries = _shared_atom_workload(forest)
+    strict = QuerySession(forest, planner="deepfish", engine="numpy",
+                          batched=False, annotate=False,
+                          persist_atom_cache=False)
+    census = QuerySession(forest, planner="deepfish", engine="numpy",
+                          batched=False, annotate=False,
+                          persist_atom_cache=False, share_margin=None)
+    r_strict = strict.execute(queries)
+    r_census = census.execute(queries)
+    assert (r_census.stats.shared_atom_keys
+            == r_census.stats.shared_candidate_keys)
+    assert (r_strict.stats.shared_atom_keys
+            < r_strict.stats.shared_candidate_keys)
+    # census promotion pays |R| per shared atom; the heuristic keeps the
+    # guarded count(D) gathers instead — far fewer records touched (the
+    # application COUNT goes up: that is the trade being cost-modeled)
+    assert (r_strict.backend.records_touched
+            < r_census.backend.records_touched)
+    for a, b in zip(r_strict.bitmaps, r_census.bitmaps):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_selective_sharing_promotes_profitable_atoms(forest):
+    # atoms applied early (frac ~1) across many queries clear the margin
+    queries = _workload(forest, 16, 2, seed=8)
+    sess = QuerySession(forest, planner="deepfish", engine="numpy",
+                        batched=False, persist_atom_cache=False)
+    res = sess.execute(queries)
+    assert res.stats.shared_atom_keys >= 1
+    assert res.stats.dedupe_ratio > 1.0
+
+
+# -- dictionary-atom plan-cache buckets ---------------------------------------
+
+def test_canonical_key_dict_atoms_use_tight_buckets():
+    from repro.core.predicate import code_column
+    def tree(sel, col="city#codes"):
+        return normalize(And([Atom(col, "eq", 3, selectivity=sel),
+                              Atom("x0", "lt", 1.0, selectivity=0.5)]))
+    # a numeric atom drifting 0.30 -> 0.32 stays in its 0.05 bucket...
+    base, _ = canonical_key(tree(0.30, col="x1"))
+    same, _ = canonical_key(tree(0.32, col="x1"))
+    assert base == same
+    # ...but a dict-code atom with the same drift changes key (its
+    # selectivity is exact, bucketed at DICT_SEL_STEP)
+    dbase, _ = canonical_key(tree(0.30))
+    ddiff, _ = canonical_key(tree(0.32))
+    assert dbase != ddiff
+    # tiny jitter still hits
+    dsame, _ = canonical_key(tree(0.301))
+    assert dbase == dsame
+    # opting out restores the coarse bucket
+    cbase, _ = canonical_key(tree(0.30), dict_sel_step=None)
+    csame, _ = canonical_key(tree(0.32), dict_sel_step=None)
+    assert cbase == csame

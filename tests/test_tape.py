@@ -179,6 +179,60 @@ def test_tape_engine_dict_strings_zero_fallbacks_one_sync(string_table):
     assert be.device_dispatches == 1
 
 
+def test_tape_engine_fragmented_strings_zero_fallbacks_one_sync():
+    """PR 5 acceptance: string atoms whose dictionary hit set fragments
+    past MAX_CODE_RUNS (contains-LIKE, scattered IN) compile into the ONE
+    device program via the dict-lookup kernel — no host fallback, one
+    dispatch, one sync, bit-identical to the numpy oracle."""
+    rng = np.random.default_rng(4)
+    n = 6000
+    vocab = np.array(["aspen", "birch", "cedar", "fir", "hemlock",
+                      "juniper", "larch", "maple", "oak", "pine",
+                      "spruce", "willow"])
+    table = Table({
+        "x": rng.normal(size=n).astype(np.float32),
+        "species": rng.choice(vocab, n),
+    })
+    # 'contains e' fragments into 5 runs / 5 gaps; the IN set into 6 runs
+    tree = normalize(And([
+        Atom("x", "lt", 0.5, selectivity=0.7),
+        Or([Atom("species", "like", "%e%", selectivity=0.5),
+            Atom("species", "in", ("aspen", "cedar", "hemlock", "maple",
+                                   "pine", "willow"), selectivity=0.5)]),
+    ]))
+    for engine in ("tape", "tape-pallas"):
+        res, _, be = run_query(tree, table, planner="deepfish",
+                               engine=engine)
+        want = pack_bits(oracle_mask(table, tree.root))
+        np.testing.assert_array_equal(res, want, err_msg=engine)
+        assert be.host_fallbacks == 0, engine
+        assert be.host_syncs == 1, engine
+        assert be.device_dispatches == 1, engine
+
+
+def test_fragmented_string_atoms_share_atom_key_across_queries():
+    """Two queries with the same fragmented string atom dedupe in code
+    space (the membership atom's key is (codes-col, 'in', codes))."""
+    rng = np.random.default_rng(6)
+    n = 3000
+    vocab = np.array(["aspen", "birch", "cedar", "fir", "hemlock",
+                      "juniper", "larch", "maple", "oak", "pine"])
+    table = Table({
+        "x": rng.normal(size=n).astype(np.float32),
+        "y": rng.normal(size=n).astype(np.float32),
+        "species": rng.choice(vocab, n),
+    })
+    like = lambda: Atom("species", "like", "%e%", selectivity=0.5)  # noqa: E731
+    t1 = normalize(And([Atom("x", "lt", 0.5, selectivity=0.6), like()]))
+    t2 = normalize(And([Atom("y", "gt", 0.0, selectivity=0.5), like()]))
+    session = QuerySession(table, planner="deepfish", engine="numpy")
+    r = session.execute([t1, t2])
+    assert r.stats.shared_atom_keys >= 1
+    for tree, bm in zip((t1, t2), r.bitmaps):
+        want = pack_bits(oracle_mask(table, tree.root))
+        np.testing.assert_array_equal(bm, want)
+
+
 def test_tape_engine_unrewritten_strings_still_fall_back(string_table):
     # rewrite_strings=False restores the PR 2 behavior: same bits, one
     # host round-trip per string atom

@@ -1,0 +1,208 @@
+"""Zone-aware whole-tape execution.
+
+Covers: zone-verdict masks as *runtime inputs* to the compiled tape program
+(bit-identical to the numpy oracle across planners and append sequences,
+including ALL/NONE-heavy selective atoms), no retracing across appends,
+pruning visible in ``blocks_pruned`` with results unchanged when disabled,
+and the lockstep device executor consuming the same masks under the
+one-bundled-sync contract.
+"""
+import numpy as np
+import pytest
+
+from repro.columnar import QuerySession, Table, pack_bits, run_query
+from repro.columnar.device import _TAPE_PROGRAMS, DeviceTapeBackend
+from repro.core import (And, Atom, Or, PerAtomCostModel, compile_tape,
+                        deepfish, normalize)
+
+VOCAB = np.array(["aspen", "birch", "cedar", "fir", "hemlock", "juniper",
+                  "larch", "maple", "oak", "pine", "spruce", "willow"])
+BLOCK = 2048
+
+
+def _stream_table(n=20_000, seed=0):
+    """Streaming-shaped table: a sorted (clustered) column, a block-constant
+    shard id — the shapes zone maps fully decide — plus unclustered noise
+    and a string column for dictionary atoms."""
+    rng = np.random.default_rng(seed)
+    return Table({
+        "ts": np.sort(rng.uniform(0, 100, n)).astype(np.float32),
+        "shard": (np.arange(n) // BLOCK).astype(np.float32),
+        "x": rng.normal(size=n).astype(np.float32),
+        "y": rng.normal(size=n).astype(np.float32),
+        "species": rng.choice(VOCAB, n),
+    })
+
+
+def _append_like(table, n, seed, ts_from):
+    rng = np.random.default_rng(seed)
+    start = table.n_records
+    return {
+        "ts": np.sort(rng.uniform(ts_from, ts_from + 10, n)).astype(
+            np.float32),
+        "shard": ((start + np.arange(n)) // BLOCK).astype(np.float32),
+        "x": rng.normal(size=n).astype(np.float32),
+        "y": rng.normal(size=n).astype(np.float32),
+        "species": rng.choice(VOCAB, n),
+    }
+
+
+def oracle_mask(table, node):
+    if isinstance(node, Atom):
+        return table.eval_atom(node, None)
+    combine = np.logical_and if isinstance(node, And) else np.logical_or
+    out = None
+    for c in node.children:
+        m = oracle_mask(table, c)
+        out = m if out is None else combine(out, m)
+    return out
+
+
+def _selective_trees(table):
+    """Query shapes a selective stream serves: tail ranges over the
+    clustered column, shard equality (fully zone-decided), fragmented
+    string atoms, plus unprunable noise atoms."""
+    hi = float(table["ts"].max())
+    return [
+        normalize(And([Atom("ts", "ge", hi * 0.9, selectivity=0.1),
+                       Or([Atom("x", "gt", 0.0, selectivity=0.5),
+                           Atom("species", "eq", "pine",
+                                selectivity=0.1)])])),
+        normalize(And([Atom("shard", "eq", 2.0, selectivity=0.1),
+                       Atom("y", "lt", 0.5, selectivity=0.7)])),
+        normalize(Or([And([Atom("ts", "lt", hi * 0.1, selectivity=0.1),
+                           Atom("species", "like", "%e%",
+                                selectivity=0.5)]),
+                      And([Atom("shard", "le", 1.0, selectivity=0.2),
+                           Atom("x", "lt", -0.5, selectivity=0.3)])])),
+        # ALL-heavy: the range covers every block; NONE-heavy: none
+        normalize(And([Atom("ts", "ge", -1.0, selectivity=0.999),
+                       Atom("x", "lt", 0.0, selectivity=0.5)])),
+        normalize(And([Atom("ts", "gt", hi + 1.0, selectivity=0.001),
+                       Atom("y", "gt", 0.0, selectivity=0.5)])),
+    ]
+
+
+@pytest.mark.parametrize("planner", ["shallowfish", "deepfish"])
+def test_zone_pruned_tape_differential_with_appends(planner):
+    """The acceptance sweep: zone-pruned tape results are bit-identical to
+    the numpy oracle across planners and append sequences."""
+    table = _stream_table()
+    be = DeviceTapeBackend(table, block=BLOCK)
+    for rnd in range(3):
+        if rnd:
+            table.append(_append_like(table, 700 * rnd, seed=10 + rnd,
+                                      ts_from=100.0 * rnd))
+            be.refresh()
+        for tree in _selective_trees(table):
+            res, _, _ = run_query(tree, table, planner=planner,
+                                  engine="tape", backend=be)
+            want = pack_bits(oracle_mask(table, tree.root))
+            np.testing.assert_array_equal(res, want)
+    assert be.blocks_pruned > 0
+    assert be.host_fallbacks == 0
+
+
+def test_zone_masks_are_runtime_inputs_no_retrace():
+    """Appends move the zone verdicts but must NOT retrace the compiled
+    program: masks are data, not trace constants."""
+    table = _stream_table(n=10_000)
+    tree = normalize(And([Atom("ts", "lt", 30.0, selectivity=0.3),
+                          Atom("x", "gt", 0.0, selectivity=0.5)]))
+    plan = deepfish(tree, PerAtomCostModel(),
+                    total_records=table.n_records)
+    tape = compile_tape(plan)
+    be = DeviceTapeBackend(table, block=BLOCK)
+    be.run_tape(tape)
+    prog = _TAPE_PROGRAMS[(tape.key, be.pallas, be.interpret, True, False)]
+    n_traces = prog._cache_size()
+    # two appends small enough to stay inside the power-of-two block
+    # bucket: same program must serve all three zone-map states
+    for rnd in range(2):
+        table.append(_append_like(table, 400, seed=rnd, ts_from=200.0))
+        be.refresh()
+        res = be.run_tape(tape)
+        want = pack_bits(oracle_mask(table, tree.root))
+        np.testing.assert_array_equal(res, want)
+    assert prog._cache_size() == n_traces == 1
+
+
+def test_zone_pruning_identical_when_disabled_and_prunes_when_on():
+    table = _stream_table()
+    tree = _selective_trees(table)[0]
+    res_on, _, be_on = run_query(tree, table, planner="deepfish",
+                                 engine="tape",
+                                 backend=DeviceTapeBackend(table,
+                                                           block=BLOCK))
+    res_off, _, be_off = run_query(
+        tree, table, planner="deepfish", engine="tape",
+        backend=DeviceTapeBackend(table, block=BLOCK, zone_prune=False))
+    np.testing.assert_array_equal(res_on, res_off)
+    assert be_on.blocks_pruned > 0
+    assert be_off.blocks_pruned == 0
+    # pruning shrinks the touched-block accounting, never the paper metric
+    assert be_on.blocks_touched < be_off.blocks_touched
+    assert (be_on.stats.records_evaluated
+            == be_off.stats.records_evaluated)
+
+
+def test_fully_decided_atoms_prune_every_live_block():
+    """ALL-everywhere and NONE-everywhere selective atoms: the compiled
+    path must honor a mask with no MAYBE block at all (the lax.cond skip
+    branch) and stay exact."""
+    table = _stream_table()
+    hi = float(table["ts"].max())
+    for tree in (
+            normalize(And([Atom("ts", "gt", hi + 1.0, selectivity=0.001),
+                           Atom("x", "lt", 0.0, selectivity=0.5)])),
+            # ALL-everywhere atom as its own ATOM op (an Or sibling blocks
+            # chain fusion; fused conj chains correctly stay MAYBE — the
+            # sibling atom still needs the block)
+            normalize(And([Atom("ts", "ge", -1.0, selectivity=0.999),
+                           Or([Atom("x", "lt", 0.0, selectivity=0.5),
+                               Atom("y", "gt", 1.5, selectivity=0.05)])])),
+            normalize(Or([Atom("ts", "ge", -1.0, selectivity=0.999),
+                          Atom("x", "lt", 0.0, selectivity=0.5)]))):
+        res, _, be = run_query(tree, table, planner="deepfish",
+                               engine="tape",
+                               backend=DeviceTapeBackend(table,
+                                                         block=BLOCK))
+        want = pack_bits(oracle_mask(table, tree.root))
+        np.testing.assert_array_equal(res, want)
+        assert be.blocks_pruned > 0
+        assert be.host_syncs == 1 and be.device_dispatches == 1
+
+
+def test_lockstep_device_executor_consumes_zone_masks():
+    """batched=True: the lockstep executor prunes through the same masks,
+    keeps the one-bundled-sync contract and stays bit-identical —
+    including across an append round."""
+    table = _stream_table()
+    queries = _selective_trees(table)
+    sess = QuerySession(table, planner="deepfish", engine="tape",
+                        batched=True, block=BLOCK)
+    for rnd in range(2):
+        if rnd:
+            table.append(_append_like(table, 900, seed=77,
+                                      ts_from=150.0))
+        res = sess.execute(queries)
+        be = res.backend
+        for tree, bm in zip(queries, res.bitmaps):
+            want = pack_bits(oracle_mask(table, tree.root))
+            np.testing.assert_array_equal(bm, want)
+    assert be.host_fallbacks == 0
+    assert be.blocks_pruned > 0
+    assert be.host_syncs == 2            # one bundled sync per batch
+
+
+def test_unpruned_and_pruned_sessions_agree_on_pallas_tape():
+    table = _stream_table(n=8_000)
+    tree = _selective_trees(table)[2]    # fragmented strings + zones
+    res, _, be = run_query(tree, table, planner="deepfish",
+                           engine="tape-pallas",
+                           backend=DeviceTapeBackend(table, block=BLOCK,
+                                                     kernels="pallas"))
+    want = pack_bits(oracle_mask(table, tree.root))
+    np.testing.assert_array_equal(res, want)
+    assert be.host_fallbacks == 0
+    assert be.host_syncs == 1
