@@ -40,8 +40,9 @@ from repro.columnar import (BitmapBackend, DeviceTapeBackend, JaxBlockBackend,
                             random_tree, rewrite_string_atoms, run_query)
 from repro.columnar.device import _TAPE_PROGRAMS
 from repro.columnar.table import annotate_selectivities
-from repro.core import PerAtomCostModel, compile_tape, deepfish, execute_plan
-from repro.core.predicate import And, Atom, Or, normalize
+from repro.core import (PerAtomCostModel, compile_tape, deepfish,
+                        execute_plan, plan_cost)
+from repro.core.predicate import And, Atom, Or, atom_key, normalize, tree_copy
 from repro.core.tape import ATOM, CHAIN
 
 
@@ -482,6 +483,137 @@ def bench_differential(table, n_seeds: int, block: int) -> dict:
             "identical": mismatches == 0}
 
 
+def _drift_table(rows: int, seed: int = 11) -> Table:
+    """Feedback-loop workload shape: a skewed low-cardinality numeric
+    (crude eq estimates), a correlated pair (marginal estimates can never
+    explain conditional truth), and a column whose distribution the append
+    stream drifts."""
+    rng = np.random.default_rng(seed)
+    cat = rng.choice(7, size=rows,
+                     p=[0.45, 0.2, 0.1, 0.1, 0.05, 0.05, 0.05]
+                     ).astype(np.float64)
+    x = rng.uniform(size=rows)
+    y = np.clip(x + rng.normal(scale=0.05, size=rows), 0.0, 1.5)
+    return Table({"cat": cat, "w": rng.uniform(size=rows), "x": x, "y": y,
+                  "z": rng.normal(size=rows)})
+
+
+def _drift_rows(n: int, round_idx: int, seed: int) -> dict:
+    """Append batch: cat/w/x/y keep their distribution; z drifts upward."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(size=n)
+    return {
+        "cat": rng.choice(7, size=n,
+                          p=[0.45, 0.2, 0.1, 0.1, 0.05, 0.05, 0.05]
+                          ).astype(np.float64),
+        "w": rng.uniform(size=n),
+        "x": x,
+        "y": np.clip(x + rng.normal(scale=0.05, size=n), 0.0, 1.5),
+        "z": rng.normal(loc=0.5 * (round_idx + 1), size=n),
+    }
+
+
+def bench_drift(rows: int, block: int, rounds: int = 5) -> dict:
+    """Closed Q-Error feedback loop under a drifting workload.
+
+    A lockstep tape session with ``feedback_absorb=True`` serves three
+    fixed query shapes for ``rounds`` batches, interleaved with appends
+    that drift one column's distribution:
+
+    * ``cat == 0`` (skewed value, crude 1/n_distinct estimate): the
+      realized count from round 1's bundled sync corrects the estimate,
+      so the per-key Q-Error must collapse (``qerror_reduction``) and the
+      replanned order must match the truth-annotated plan
+      (``plan_cost_ratio_feedback``) where the naive estimate picked the
+      wrong first atom (``plan_cost_ratio_naive`` > 1).
+    * ``x < q33 AND y < q42`` with y correlated to x: marginal estimates
+      are exact, so the canonical plan key never moves — but the realized
+      conditional fraction stays ~2.4x the estimate, so the cached plan
+      must be evicted-and-replanned (``drift_evictions``).
+    * ``z < v`` while appends shift z: sketch extension + EWMA tracking
+      keep serving bit-identical results as the data moves.
+
+    Every batch must stay ONE bundled host sync, and every bitmap is
+    checked against the numpy oracle on the current snapshot.
+    """
+    table = _drift_table(rows)
+    model = PerAtomCostModel()
+    # cut points sit mid-bucket (sel_step=0.05) so estimate jitter across
+    # appends cannot flip the correlated query's canonical plan key — the
+    # eviction-on-drift path needs genuine cache-hit servings to observe
+    vx = float(np.quantile(table.columns["x"], 0.33))
+    vy = float(np.quantile(table.columns["y"], 0.42))
+    vz = float(np.quantile(table.columns["z"], 0.5))
+
+    def make_queries():
+        return [normalize(And([Atom("cat", "eq", 0.0),
+                               Atom("w", "lt", 0.3)])),
+                normalize(And([Atom("x", "lt", vx), Atom("y", "lt", vy)])),
+                normalize(And([Atom("z", "lt", vz),
+                               Atom("w", "lt", 0.7)]))]
+
+    sess = QuerySession(table, planner="deepfish", engine="tape",
+                        block=block, batched=True, feedback_absorb=True)
+    eq_key = ("cat", "eq", 0.0)
+    eq_qerrs, max_qerrs = [], []
+    evictions = 0
+    identical = True
+    syncs_per_batch = []
+    last = None
+    for r in range(rounds):
+        queries = make_queries()
+        syncs0 = sess._backend.host_syncs if sess._backend is not None else 0
+        res = sess.execute(queries)
+        last = res
+        syncs_per_batch.append(res.backend.host_syncs - syncs0)
+        eq_qerrs.append(res.stats.atom_qerrors.get(eq_key, 1.0))
+        max_qerrs.append(res.stats.max_qerror)
+        evictions += res.stats.drift_evictions
+        for q, bm in zip(queries, res.bitmaps):
+            identical = identical and bool(
+                np.array_equal(bm, _oracle_bitmap(table, q)))
+        if r < rounds - 1:
+            table.append(_drift_rows(max(rows // 16, 1), r, seed=100 + r))
+
+    # plan quality on the eq query: cost the feedback-corrected order and
+    # the naive (no-feedback) order under TRUTH selectivities
+    truth = normalize(And([Atom("cat", "eq", 0.0), Atom("w", "lt", 0.3)]))
+    annotate_selectivities(truth, table, empirical=True,
+                           sample=min(table.n_records, 262_144))
+    truth_plan = deepfish(truth, model, total_records=table.n_records)
+    cost_truth = plan_cost(truth, truth_plan.order, model, table.n_records)
+    key_to_aid = {atom_key(a): a.aid for a in truth.atoms}
+
+    def cost_of(plan):
+        order = [key_to_aid[atom_key(plan.tree.atoms[i])]
+                 for i in plan.order]
+        return plan_cost(truth, order, model, table.n_records)
+
+    cost_feedback = cost_of(last.plans[0])
+    naive = normalize(tree_copy(And([Atom("cat", "eq", 0.0),
+                                     Atom("w", "lt", 0.3)])))
+    annotate_selectivities(naive, table)      # analytic estimates only
+    cost_naive = cost_of(deepfish(naive, model,
+                                  total_records=table.n_records))
+
+    return {
+        "rows": table.n_records,
+        "rounds": rounds,
+        "queries_per_round": 3,
+        "pre_max_qerror": round(max_qerrs[0], 4),
+        "post_max_qerror": round(max_qerrs[-1], 4),
+        "eq_qerror_pre": round(eq_qerrs[0], 4),
+        "eq_qerror_post": round(eq_qerrs[-1], 4),
+        "qerror_reduction": round(eq_qerrs[0] / max(eq_qerrs[-1], 1e-9), 2),
+        "drift_evictions": evictions,
+        "feedback_observations": last.stats.feedback_observations,
+        "host_syncs_per_batch": max(syncs_per_batch),
+        "plan_cost_ratio_feedback": round(cost_feedback / cost_truth, 4),
+        "plan_cost_ratio_naive": round(cost_naive / cost_truth, 4),
+        "identical": identical,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=1_000_000)
@@ -497,6 +629,11 @@ def main():
                     default=True,
                     help="run the dict-string workload (default: on)")
     ap.add_argument("--no-strings", dest="strings", action="store_false")
+    ap.add_argument("--drift", dest="drift", action="store_true",
+                    default=True,
+                    help="run the Q-Error feedback-loop drift workload "
+                         "(default: on)")
+    ap.add_argument("--no-drift", dest="drift", action="store_false")
     ap.add_argument("--smoke", action="store_true",
                     help="CI preset: small table, tiny batch")
     args = ap.parse_args()
@@ -580,6 +717,19 @@ def main():
     print(f"differential sweep: {diff['seeds']} seeds, "
           f"{diff['mismatches']} mismatches")
 
+    drift = None
+    if args.drift:
+        drift = bench_drift(args.rows, args.block)
+        print(f"drift ({drift['rounds']} rounds x "
+              f"{drift['queries_per_round']} queries): eq Q-Error "
+              f"{drift['eq_qerror_pre']:.2f} -> {drift['eq_qerror_post']:.2f} "
+              f"({drift['qerror_reduction']:.1f}x), "
+              f"{drift['drift_evictions']} drift evictions, "
+              f"{drift['host_syncs_per_batch']} sync/batch, plan cost "
+              f"{drift['plan_cost_ratio_feedback']:.3f}x truth "
+              f"(naive {drift['plan_cost_ratio_naive']:.3f}x)  "
+              f"identical={drift['identical']}")
+
     report = {
         "rows": table.n_records,
         "block": args.block,
@@ -619,6 +769,15 @@ def main():
             fragmented["tape_device_dispatches"] == 1
             and fragmented["tape_host_syncs_per_query"] == 1
             and fragmented["host_fallbacks"] == 0)
+    if drift is not None:
+        report["drift"] = drift
+        report["acceptance"]["drift_feedback_loop_closes"] = bool(
+            drift["identical"]
+            and drift["drift_evictions"] > 0
+            and drift["host_syncs_per_batch"] == 1
+            and drift["qerror_reduction"] >= 1.5
+            and drift["plan_cost_ratio_feedback"]
+            <= drift["plan_cost_ratio_naive"] + 1e-9)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {args.out}")
@@ -635,6 +794,11 @@ def main():
     if not report["acceptance"]["selective_pruning_pays"]:
         raise SystemExit("FAIL: zone pruning did not prune/pay on the "
                          "selective workload (or appends retraced)")
+    if drift is not None and not report["acceptance"][
+            "drift_feedback_loop_closes"]:
+        raise SystemExit("FAIL: the Q-Error feedback loop did not close on "
+                         "the drift workload (divergence, no evictions, "
+                         "extra syncs, or no estimate correction)")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,11 @@ contract (exact, noise-free — these ARE the paper-level guarantees):
     checks against a full baseline (64-query batch)
   * ``host_fallbacks == 0`` on the numeric and dict-string workloads (the
     dictionary rewrite keeps mixed plans device-resident)
+  * the drift workload's Q-Error feedback loop closes: realized
+    selectivities correct the estimator (``qerror_reduction``), stale
+    cached plans are evicted-and-replanned (``drift_evictions > 0``), the
+    replanned order is no worse than the naive plan under truth
+    statistics, and the batch stays ONE bundled host sync throughout
 
 throughput (tolerance-gated — CI machines and smoke sizes differ from the
 committed 1M-row baseline, so this is a coarse floor, not a tight bound):
@@ -144,6 +149,31 @@ def check_device(gate: Gate, fresh: dict, base: dict, tol: float) -> None:
         gate.check("selective.speedup > 1 in committed baseline",
                    (bselective or {}).get("speedup", 0.0) > 1.0,
                    f"baseline={(bselective or {}).get('speedup')}")
+
+    # -- contract: the Q-Error feedback loop closes under drift --------------
+    drift = fresh.get("drift")
+    gate.check("drift section present", drift is not None)
+    if drift is not None:
+        gate.check("drift.identical", bool(drift.get("identical")))
+        gate.check("drift.drift_evictions > 0",
+                   drift.get("drift_evictions", 0) > 0,
+                   f"fresh={drift.get('drift_evictions')}")
+        gate.check("drift.host_syncs_per_batch == 1",
+                   drift.get("host_syncs_per_batch") == 1,
+                   f"fresh={drift.get('host_syncs_per_batch')}")
+        gate.check("drift.qerror_reduction >= 1.5",
+                   drift.get("qerror_reduction", 0.0) >= 1.5,
+                   f"fresh={drift.get('qerror_reduction')}")
+        # the replanned (post-feedback) order must be at least as good as
+        # the naive fresh plan when both are costed under truth statistics
+        gate.check("drift: post-feedback plan no worse than naive",
+                   drift.get("plan_cost_ratio_feedback", 99.0)
+                   <= drift.get("plan_cost_ratio_naive", 0.0) + 1e-9,
+                   f"feedback={drift.get('plan_cost_ratio_feedback')} "
+                   f"naive={drift.get('plan_cost_ratio_naive')}")
+        gate.check("drift: post-feedback plan near truth (<= 1.05x)",
+                   drift.get("plan_cost_ratio_feedback", 99.0) <= 1.05,
+                   f"fresh={drift.get('plan_cost_ratio_feedback')}")
 
     # -- throughput floors ----------------------------------------------------
     for name, sec, bsec in (("single", single, bsingle),

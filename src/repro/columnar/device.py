@@ -80,14 +80,15 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.feedback import group_selectivity
 from ..core.predicate import (Atom, ZONE_ALL, ZONE_MAYBE, ZONE_NONE,
-                              decode_column)
+                              atom_key, decode_column)
 from ..core.sets import SetBackend, Stats
 from ..core.tape import (ATOM, CHAIN, CMP_OPCODE, EMPTY, FULL, IN_OPCODE,
                          OP_AND, OP_ANDNOT, OP_OR, PlanTape, SETOP,
-                         device_atom, lookup_atom)
+                         device_atom, lookup_atom, op_observation_meta)
 from .bitmap import (WORD, bitmap_full, extend_bitmap, live_block_count,
-                     n_words, next_pow2, pack_bits, unpack_bits)
+                     n_words, next_pow2, pack_bits, popcount, unpack_bits)
 from .executor import _ZonePruner
 from .table import Table
 
@@ -372,6 +373,10 @@ def _jitted_prims():
 _TAPE_PROGRAMS: "OrderedDict[tuple, object]" = OrderedDict()
 _TAPE_PROGRAM_CAP = 256
 
+#: bound on a backend's undrained observation log — sessions drain it every
+#: batch; standalone benchmark loops must not grow it without bound
+_OP_LOG_CAP = 4096
+
 
 class DeviceTapeBackend(SetBackend):
     """Device-resident executor: whole-plan tapes + a device SetBackend.
@@ -428,6 +433,15 @@ class DeviceTapeBackend(SetBackend):
         self._pend_weights: List[float] = []
         self._pend_blocks: List[object] = []
         self._pend_pruned: List[object] = []
+        # realized-selectivity observations (the Q-Error feedback channel):
+        # op_log holds host-resolved (atom_keys, est, src, out) tuples;
+        # device-resident src/out popcount scalars queue in _fb_* and ride
+        # the SAME bundled transfer materialize() already makes — feedback
+        # adds zero host syncs and zero kernel dispatches
+        self.op_log: List[Tuple] = []
+        self._fb_meta: List[Tuple[Tuple, float]] = []
+        self._fb_src: List[object] = []
+        self._fb_out: List[object] = []
 
     # -- conversions -----------------------------------------------------------
     def _col_bitmajor(self, name: str):
@@ -472,22 +486,24 @@ class DeviceTapeBackend(SetBackend):
         hits[idx] = True
         return pack_bits(hits)
 
-    def _zone_mask(self, atoms: Sequence[Atom],
-                   conj: bool = True) -> Optional[np.ndarray]:
+    def _zone_mask(self, atoms: Sequence[Atom], conj: bool = True,
+                   exact: bool = False) -> Optional[np.ndarray]:
         """Combined ``i32[nblocks]`` NONE/ALL/MAYBE verdicts for one
         ATOM/CHAIN op's atom group, or None when nothing prunes (no zone
         maps, every block MAYBE, or a stale map mid-append).  CHAIN groups
         combine per-atom verdicts with the group's own connective: under
         AND a single NONE decides the block and ALL needs every atom ALL;
         under OR dually.  Power-of-two padding blocks get NONE — they
-        carry zero bitmaps either way."""
+        carry zero bitmaps either way.  ``exact=True`` skips the f32
+        rounding of the verdicts — required by the host-gather fallback,
+        which evaluates in float64 (the JaxBlockBackend precedent)."""
         if self._zones is None:
             return None
         real = (self.n + self.block - 1) // self.block
         out = None
         any_verdict = False
         for a in atoms:
-            v = self._zones.verdicts(a)
+            v = self._zones.verdicts(a, exact=exact)
             if v is None:
                 v = np.full(real, ZONE_MAYBE, dtype=np.int8)
             elif len(v) != real:
@@ -669,20 +685,85 @@ class DeviceTapeBackend(SetBackend):
             self._pend_blocks.append((live & maybe).sum())
             self._pend_pruned.append((live & ~maybe).sum())
 
+    # -- realized-selectivity feedback (rides the existing syncs) --------------
+    def _log_op(self, keys: Tuple, est: float, src: int, out: int) -> None:
+        """Record one host-resolved observation ``(atom_keys, estimated
+        fraction, source popcount, output popcount)``.  Sessions drain the
+        log every batch (:meth:`drain_op_log`); it is capped so undrained
+        standalone loops stay bounded."""
+        self.op_log.append((keys, float(est), int(src), int(out)))
+        if len(self.op_log) > _OP_LOG_CAP:
+            del self.op_log[: len(self.op_log) - _OP_LOG_CAP]
+
+    def _fb_queue(self, atoms: Sequence[Atom], conj: bool, src, out) -> None:
+        """Queue one observation whose src/out popcounts are still device
+        scalars (or stacked ``i32[Q]`` vectors); they ride the bundled
+        transfer :meth:`materialize` already makes — no extra sync."""
+        est = group_selectivity([a.selectivity for a in atoms], conj)
+        self._fb_meta.append((tuple(atom_key(a) for a in atoms), est))
+        self._fb_src.append(src)
+        self._fb_out.append(out)
+
+    def drain_op_log(self) -> List[Tuple]:
+        """Pop accumulated ``(keys, est, src, out)`` observations."""
+        out = self.op_log
+        self.op_log = []
+        return out
+
+    def _host_gather(self, grp: Sequence[Atom], conj: bool,
+                     sw: np.ndarray) -> Tuple[np.ndarray, int, int]:
+        """Zone-pruned gather-evaluate-scatter for a host-fallback atom
+        group: exact float64 zone verdicts (combined under the group's
+        connective) restrict the gather to MAYBE blocks — NONE blocks
+        contribute nothing, ALL blocks pass their source bits through
+        without touching the records (the ``JaxBlockBackend._eval_blocked``
+        fallback precedent).  Returns ``(packed result words, source
+        popcount, output popcount)``."""
+        wpb = self.wpb
+        u2 = np.zeros((self.nblocks, wpb), dtype=np.uint32)
+        u2.reshape(-1)[: n_words(self.n)] = sw
+        src_count = int(popcount(sw))
+        verd = self._zone_mask(grp, conj=conj, exact=True)
+        all_rows = None
+        all_bits = None
+        if verd is not None:
+            live = (u2 != 0).any(axis=1)
+            maybe = verd == ZONE_MAYBE
+            self.blocks_pruned += float((live & ~maybe).sum())
+            all_rows = verd == ZONE_ALL
+            all_bits = u2[all_rows].copy()
+            u2[~maybe] = 0
+        uw = u2.reshape(-1)[: n_words(self.n)]
+        mask = unpack_bits(uw, self.n)
+        idx = np.nonzero(mask)[0]
+        acc = None
+        for a in grp:
+            hits = self.table.eval_atom(a, idx)
+            acc = hits if acc is None else (
+                (acc & hits) if conj else (acc | hits))
+        out = np.zeros(self.n, dtype=bool)
+        if len(idx):
+            out[idx[acc]] = True
+        words = pack_bits(out)
+        if all_bits is not None and all_bits.size:
+            o2 = np.zeros((self.nblocks, wpb), dtype=np.uint32)
+            o2.reshape(-1)[: n_words(self.n)] = words
+            o2[all_rows] |= all_bits
+            words = o2.reshape(-1)[: n_words(self.n)].copy()
+        # gather cost: post-prune records, block-granular touch count
+        self.records_touched += len(idx) * len(grp)
+        self.blocks_touched += live_block_count(uw, self.nblocks, wpb)
+        return words, src_count, int(popcount(words))
+
     def _apply_host(self, atom: Atom, ds: Sequence[_DevSet],
                     union: _DevSet) -> List[_DevSet]:
         """Host-gather fallback for atoms a device kernel cannot run."""
         self.host_fallbacks += 1
         uw = self._pull_flat(union)
-        mask = unpack_bits(uw, self.n)
-        idx = np.nonzero(mask)[0]
-        hits = self.table.eval_atom(atom, idx)
-        out = np.zeros(self.n, dtype=bool)
-        out[idx[hits]] = True
-        sat = self._from_flat(pack_bits(out))
-        # gather cost: count(union) records, block-granular touch count
-        self.records_touched += len(idx)
-        self.blocks_touched += live_block_count(uw, self.nblocks, self.wpb)
+        words, src_count, out_count = self._host_gather([atom], True, uw)
+        self._log_op((atom_key(atom),), atom.selectivity, src_count,
+                     out_count)
+        sat = self._from_flat(words)
         return [self._setop(sat, d, OP_AND) for d in ds]
 
     def _bind_atom(self, atom: Atom):
@@ -720,6 +801,7 @@ class DeviceTapeBackend(SetBackend):
                                                 opcode=_CMP_OPCODE[atom.op],
                                                 pallas=self.pallas,
                                                 interpret=self.interpret)
+        self._fb_queue([atom], True, d.pops.sum(), pops.sum())
         return _DevSet(out, pops)
 
     def apply_atom_multi(self, atom: Atom, ds: Sequence[_DevSet]
@@ -755,6 +837,8 @@ class DeviceTapeBackend(SetBackend):
                                                   opcode=_CMP_OPCODE[atom.op],
                                                   pallas=self.pallas,
                                                   interpret=self.interpret)
+        self._fb_queue([atom], True, pops.sum(axis=-1),
+                       opops.sum(axis=-1))
         return [_DevSet(out[j], opops[j]) for j in range(len(ds))]
 
     # -- the single end-of-query (or end-of-batch) host sync -------------------
@@ -773,7 +857,8 @@ class DeviceTapeBackend(SetBackend):
             blk = jnp.zeros((0,), dtype=jnp.int32)
             prn = jnp.zeros((0,), dtype=jnp.int32)
         self.host_syncs += 1
-        flats, rec, blk, prn = jax.device_get((flats, rec, blk, prn))
+        flats, rec, blk, prn, fsrc, fout = jax.device_get(
+            (flats, rec, blk, prn, self._fb_src, self._fb_out))
         rec = np.asarray(rec, dtype=np.float64)
         blk = np.asarray(blk, dtype=np.float64)
         ks = np.asarray(self._pend_k, dtype=np.float64)
@@ -786,27 +871,30 @@ class DeviceTapeBackend(SetBackend):
             (np.asarray(prn, dtype=np.float64) * ks).sum())
         self._pend_records, self._pend_weights = [], []
         self._pend_k, self._pend_blocks, self._pend_pruned = [], [], []
+        # resolve the queued realized-selectivity observations (stacked
+        # i32[Q] entries expand to one observation per lockstep query)
+        for (keys, est), s, o in zip(self._fb_meta, fsrc, fout):
+            s = np.asarray(s).reshape(-1)
+            o = np.asarray(o).reshape(-1)
+            for sj, oj in zip(s, o):
+                self._log_op(keys, est, int(sj), int(oj))
+        self._fb_meta, self._fb_src, self._fb_out = [], [], []
         return [np.asarray(f) for f in flats]
 
     def _host_atom_group(self, op, src: _DevSet) -> _DevSet:
-        """Host fallback for a tape ATOM/CHAIN op: gather src's records
-        once, evaluate the group's atoms on them, combine (∧/∨), scatter."""
+        """Host fallback for a tape ATOM/CHAIN op: zone-pruned gather of
+        src's records, evaluate the group's atoms on them, combine (∧/∨),
+        scatter (see :meth:`_host_gather`)."""
         atoms = self.last_tape.tree.atoms
+        grp = [atoms[a] for a in op.aids]
         self.host_fallbacks += 1
-        self._account([atoms[a] for a in op.aids], src.pops, device=False)
+        self._account(grp, src.pops, device=False)
         sw = self._pull_flat(src)
-        mask = unpack_bits(sw, self.n)
-        idx = np.nonzero(mask)[0]
-        acc = None
-        for a in op.aids:
-            hits = self.table.eval_atom(atoms[a], idx)
-            acc = hits if acc is None else (
-                (acc & hits) if op.conj else (acc | hits))
-        out = np.zeros(self.n, dtype=bool)
-        out[idx[acc]] = True
-        self.records_touched += len(idx) * len(op.aids)
-        self.blocks_touched += live_block_count(sw, self.nblocks, self.wpb)
-        return self._from_flat(pack_bits(out))
+        words, src_count, out_count = self._host_gather(grp, op.conj, sw)
+        est = group_selectivity([a.selectivity for a in grp], op.conj)
+        self._log_op(tuple(atom_key(a) for a in grp), est, src_count,
+                     out_count)
+        return self._from_flat(words)
 
     # -- whole-tape execution --------------------------------------------------
     def _tape_bindings(self, tape: PlanTape):
@@ -942,7 +1030,7 @@ class DeviceTapeBackend(SetBackend):
             import jax.numpy as jnp
             bits: List[object] = [None] * n_slots
             pops: List[object] = [None] * n_slots
-            recs, blks, prns = [], [], []
+            recs, blks, prns, outs = [], [], [], []
             mi = 0
             for oi, op in enumerate(ops):
                 if op.kind == FULL:
@@ -986,6 +1074,10 @@ class DeviceTapeBackend(SetBackend):
                         b, p = _chain_impl(stack, sb, sp, vals, opcodes,
                                            op.conj, pallas, interpret,
                                            zone=zone, skip=skip)
+                    # realized output popcount — already computed for the
+                    # dead-block skip, so surfacing it is free: the Q-Error
+                    # feedback loop's ground truth rides the existing sync
+                    outs.append(p.sum())
                 bits[op.dst] = b
                 pops[op.dst] = p
             rec = (jnp.stack(recs) if recs
@@ -994,7 +1086,9 @@ class DeviceTapeBackend(SetBackend):
                    else jnp.zeros((0,), dtype=jnp.int32))
             prn = (jnp.stack(prns) if prns
                    else jnp.zeros((0,), dtype=jnp.int32))
-            return bits[result], rec, blk, prn
+            out = (jnp.stack(outs) if outs
+                   else jnp.zeros((0,), dtype=jnp.int32))
+            return bits[result], rec, blk, prn, out
 
         prog = jax.jit(program)
         _TAPE_PROGRAMS[key] = prog
@@ -1028,15 +1122,15 @@ class DeviceTapeBackend(SetBackend):
             zmasks, any_decided = self._tape_zone_masks(tape)
             prog = self._tape_program(tape, tuple(meta), skip=any_decided)
             self.device_dispatches += 1
-            res, rec, blk, prn = prog(tuple(cols),
-                                      jnp.asarray(values,
-                                                  dtype=jnp.float32),
-                                      jnp.asarray(lmasks), zmasks,
-                                      full.bits, full.pops)
+            res, rec, blk, prn, outs = prog(tuple(cols),
+                                            jnp.asarray(values,
+                                                        dtype=jnp.float32),
+                                            jnp.asarray(lmasks), zmasks,
+                                            full.bits, full.pops)
             import jax
             self.host_syncs += 1
-            res, rec, blk, prn = jax.device_get(
-                (res.reshape(-1)[: n_words(self.n)], rec, blk, prn))
+            res, rec, blk, prn, outs = jax.device_get(
+                (res.reshape(-1)[: n_words(self.n)], rec, blk, prn, outs))
             rec = np.asarray(rec, dtype=np.float64)
             weights = np.asarray([sum(atoms[a].cost_factor
                                       for a in op.aids) for op in costed])
@@ -1047,6 +1141,11 @@ class DeviceTapeBackend(SetBackend):
             self.records_touched += blk_total * self.block
             self.blocks_pruned += float(
                 (np.asarray(prn, dtype=np.float64) * ks).sum())
+            # per-op realized selectivities rode the same device_get:
+            # (keys, est) metadata is tape-order aligned with rec/outs
+            for (opm, keys, est), s, o in zip(op_observation_meta(tape),
+                                              rec, np.asarray(outs)):
+                self._log_op(keys, est, int(s), int(o))
             return np.asarray(res)
         return self._run_tape_mixed(tape, lmasks, meta, device_ok)
 
@@ -1100,6 +1199,8 @@ class DeviceTapeBackend(SetBackend):
                             stack, src.bits, src.pops, vals, zone=zj,
                             skip=skip, opcodes=opcodes, conj=op.conj,
                             pallas=self.pallas, interpret=self.interpret)
+                    self._fb_queue(grp, op.conj, src.pops.sum(),
+                                   pops.sum())
                     s = _DevSet(out, pops)
             slots[op.dst] = s
         return self.materialize([slots[tape.result]])[0]

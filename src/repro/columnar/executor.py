@@ -24,6 +24,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from typing import List, Tuple
+
 from ..core.plan import Plan, execute_plan
 from ..core.predicate import (Atom, PredicateTree, ZONE_ALL, ZONE_MAYBE,
                               ZONE_NONE, atom_key, zone_verdicts)
@@ -93,7 +95,33 @@ class _ZonePruner:
         return verd
 
 
-class BitmapBackend(SetBackend):
+class _HostOpLog:
+    """Realized-selectivity observation log shared by the host engines.
+
+    Host engines already hold every popcount on the host (they sync per
+    step), so logging ``(atom_keys, estimated fraction, source popcount,
+    output popcount)`` per costed application is free.  Sessions drain the
+    log each batch and feed it to the Q-Error feedback loop; the cap bounds
+    undrained standalone use.  Mirrors ``DeviceTapeBackend.op_log``, where
+    the popcounts instead ride the one bundled device transfer.
+    """
+
+    _OP_LOG_CAP = 4096
+
+    def _log_op(self, atom: Atom, src: float, out: float) -> None:
+        log = self.__dict__.setdefault("op_log", [])
+        log.append(((atom_key(atom),), float(atom.selectivity),
+                    int(src), int(out)))
+        if len(log) > self._OP_LOG_CAP:
+            del log[: len(log) - self._OP_LOG_CAP]
+
+    def drain_op_log(self) -> List[Tuple]:
+        log = self.__dict__.setdefault("op_log", [])
+        self.op_log = []
+        return log
+
+
+class BitmapBackend(_HostOpLog, SetBackend):
     """Numpy oracle engine on packed record bitmaps.
 
     ``scan_threshold``: optional fraction above which an atom application
@@ -194,7 +222,9 @@ class BitmapBackend(SetBackend):
         self.stats.atom_applications += 1
         self.stats.records_evaluated += cnt
         self.stats.weighted_cost += atom.cost_factor * cnt
-        return self._eval_packed(atom, d, cnt)
+        sat = self._eval_packed(atom, d, cnt)
+        self._log_op(atom, cnt, popcount(sat))
+        return sat
 
     def apply_atom_multi(self, atom: Atom, ds):
         """Batched apply: evaluate ``atom`` once on the *union* of the record
@@ -209,10 +239,11 @@ class BitmapBackend(SetBackend):
         self.stats.records_evaluated += cnt
         self.stats.weighted_cost += atom.cost_factor * cnt
         sat = self._eval_packed(atom, union, cnt)
+        self._log_op(atom, cnt, popcount(sat))
         return [bitmap_and(sat, d) for d in ds]
 
 
-class JaxBlockBackend(SetBackend):
+class JaxBlockBackend(_HostOpLog, SetBackend):
     """Blocked JAX/Pallas engine with block skipping.
 
     Non-comparison atoms (LIKE / UDF) fall back to the numpy oracle path —
@@ -462,7 +493,9 @@ class JaxBlockBackend(SetBackend):
         cnt = popcount(d)
         self.stats.records_evaluated += cnt
         self.stats.weighted_cost += atom.cost_factor * cnt
-        return self._eval_blocked(atom, [d], d)[0]
+        res = self._eval_blocked(atom, [d], d)[0]
+        self._log_op(atom, cnt, popcount(res))
+        return res
 
     def apply_atom_multi(self, atom: Atom, ds):
         """Batched apply: Q record sets against one atom in one fused kernel
@@ -477,7 +510,10 @@ class JaxBlockBackend(SetBackend):
         self.stats.atom_applications += 1
         self.stats.records_evaluated += cnt
         self.stats.weighted_cost += atom.cost_factor * cnt
-        return self._eval_blocked(atom, ds, union)
+        res = self._eval_blocked(atom, ds, union)
+        for d, r in zip(ds, res):
+            self._log_op(atom, popcount(d), popcount(r))
+        return res
 
 
 def run_query(tree: PredicateTree, table: Table, planner: str = "shallowfish",

@@ -42,7 +42,7 @@ means the entry must be dropped.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
 import numpy as np
@@ -143,6 +143,62 @@ class QuantileSketch:
     grids: list               # list of float64[SKETCH_POINTS]
     counts: list              # rows summarized per chunk
     n_rows: int               # rows covered when (last) built
+    # realized-CDF anchors absorbed from the feedback loop: entries are
+    # (value, observed_cdf, rows_at_observation).  merged_quantiles() warps
+    # the mixture CDF through them with a weight that decays as the table
+    # outgrows the observation, so stale truth fades instead of pinning the
+    # estimate.  Anchors ride the sketch object: append-extension keeps
+    # them, a column rewrite rebuilds the sketch and (correctly) drops them.
+    anchors: list = field(default_factory=list)
+
+
+#: absorbed anchors kept per sketch (newest win; one per distinct value)
+ANCHOR_CAP = 64
+
+
+def absorb_cdf_anchor(table: Table, column: str, value: float,
+                      cdf: float, rows: int) -> bool:
+    """Fold a *realized* CDF observation — "``cdf`` of the column's rows
+    were ``< value`` when the table had ``rows`` rows" — back into the
+    column's quantile sketch (the feedback loop's estimator-correction
+    write).  Returns False for non-numeric/unknown columns.  Invalidates
+    the cached stats grid so the next :meth:`Table.stats` re-merges."""
+    try:
+        sk = table_quantile_sketch(table, column)
+    except KeyError:
+        return False
+    if sk is None:
+        return False
+    v = float(value)
+    sk.anchors = [a for a in sk.anchors if a[0] != v]
+    sk.anchors.append((v, float(min(max(cdf, 0.0), 1.0)), int(rows)))
+    if len(sk.anchors) > ANCHOR_CAP:
+        del sk.anchors[: len(sk.anchors) - ANCHOR_CAP]
+    table._stats.pop(column, None)
+    return True
+
+
+def _warp_through_anchors(q: np.ndarray, probs: np.ndarray,
+                          anchors: list, n_rows: int) -> np.ndarray:
+    """Warp quantile grid ``q`` (values at ``probs``) so its implied CDF
+    passes through the blended anchors.  Each anchor pulls the CDF at its
+    value from the sketch estimate toward the observed fraction with weight
+    ``rows_at_obs / n_rows`` (full-truth observations on the current
+    snapshot override; old ones fade as the table grows).  Monotonicity is
+    enforced by sorting + running max, so the warp is a valid CDF."""
+    pb, pn = [], []
+    for v, cdf, rows in anchors:
+        base = float(np.interp(v, q, probs))
+        w = min(1.0, rows / max(n_rows, 1))
+        pb.append(base)
+        pn.append(w * cdf + (1.0 - w) * base)
+    order = np.argsort(pb, kind="stable")
+    pb = np.concatenate([[0.0], np.asarray(pb)[order], [1.0]])
+    pn = np.concatenate([[0.0], np.asarray(pn)[order], [1.0]])
+    pn = np.maximum.accumulate(np.clip(pn, 0.0, 1.0))
+    # quantile at p is the base quantile at warp^{-1}(p)
+    base_probs = np.interp(probs, pn, pb)
+    return np.interp(base_probs, probs, q)
 
 
 def _chunk_grids(col: np.ndarray, chunk: int, start_chunk: int = 0):
@@ -170,15 +226,20 @@ def merged_quantiles(sk: QuantileSketch, points: int) -> np.ndarray:
     if len(sk.grids) == 1:
         g = sk.grids[0]
         if len(g) == points:
-            return g.copy()
-        return np.interp(probs, np.linspace(0.0, 1.0, len(g)), g)
-    vals = np.concatenate(sk.grids)
-    w = np.concatenate([np.full(len(g), c / len(g), dtype=np.float64)
-                        for g, c in zip(sk.grids, sk.counts)])
-    order = np.argsort(vals, kind="stable")
-    vals, w = vals[order], w[order]
-    cdf = (np.cumsum(w) - 0.5 * w) / w.sum()
-    return np.interp(probs, cdf, vals)
+            q = g.copy()
+        else:
+            q = np.interp(probs, np.linspace(0.0, 1.0, len(g)), g)
+    else:
+        vals = np.concatenate(sk.grids)
+        w = np.concatenate([np.full(len(g), c / len(g), dtype=np.float64)
+                            for g, c in zip(sk.grids, sk.counts)])
+        order = np.argsort(vals, kind="stable")
+        vals, w = vals[order], w[order]
+        cdf = (np.cumsum(w) - 0.5 * w) / w.sum()
+        q = np.interp(probs, cdf, vals)
+    if sk.anchors:
+        q = _warp_through_anchors(q, probs, sk.anchors, sk.n_rows)
+    return q
 
 
 def table_quantile_sketch(table: Table, name: str

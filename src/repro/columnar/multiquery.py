@@ -45,9 +45,11 @@ import numpy as np
 from ..core import deepfish, nooropt, optimal_plan, shallowfish
 from ..core.bestd import BestDMachine
 from ..core.cost import CostModel, PerAtomCostModel
+from ..core.feedback import FeedbackStore, qerror
 from ..core.plan import Plan, execute_plan, finalize_plan
 from ..core.predicate import (Atom, DICT_SEL_STEP, Node, PredicateTree,
-                              atom_key, canonical_key, normalize, tree_copy)
+                              atom_key, canonical_key, decode_column,
+                              normalize, tree_copy)
 from ..core.sets import SetBackend
 from .executor import BitmapBackend, JaxBlockBackend
 from .table import Table, annotate_selectivities, rewrite_string_atoms
@@ -67,8 +69,11 @@ _ORDERED = ("shallowfish", "deepfish", "optimal")
 class PlanCacheStats:
     hits: int = 0
     misses: int = 0
-    evictions: int = 0
+    evictions: int = 0      # capacity (LRU) evictions only
     tape_hits: int = 0      # compiled host tapes served by rebinding
+    # Q-Error feedback-loop accounting (distinct from LRU `evictions`):
+    drift_evictions: int = 0   # entries evicted for realized-Q-Error drift
+    sel_step_retunes: int = 0  # auto-tune sel_step adjustments
 
     @property
     def hit_rate(self) -> float:
@@ -95,12 +100,33 @@ class LRUPlanCache:
 
     def __init__(self, capacity: int = 256, sel_step: float = 0.05,
                  cost_step: float = 0.5,
-                 dict_sel_step: Optional[float] = DICT_SEL_STEP):
+                 dict_sel_step: Optional[float] = DICT_SEL_STEP,
+                 drift_threshold: float = 2.0, drift_consecutive: int = 2,
+                 auto_tune: bool = False):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self.sel_step = sel_step
         self.cost_step = cost_step
+        # eviction-on-drift (the Q-Error feedback loop's cache contract):
+        # an entry served with realized plan Q-Error > drift_threshold for
+        # drift_consecutive consecutive servings is evicted, so the next
+        # key-equal query replans against the *current* statistics instead
+        # of riding a stale within-bucket ordering forever.  Distinct from
+        # capacity eviction; counted in ``stats.drift_evictions``.
+        self.drift_threshold = drift_threshold
+        self.drift_consecutive = drift_consecutive
+        # opt-in sel_step auto-tune: widen buckets when plans are healthy
+        # but the hit rate is poor, tighten them when realized quality says
+        # the buckets hide real drift.  Off by default — a step change
+        # clears the cache, which sessions pinning hit-count contracts
+        # (e.g. the streaming rebind gates) must not pay implicitly.
+        self.auto_tune = auto_tune
+        self._tune_window = 64
+        self._tune_served = 0
+        self._tune_bad = 0
+        self._tune_hits0 = 0
+        self._tune_misses0 = 0
         # dictionary-code atoms carry EXACT selectivities (computed from
         # code frequencies), so they get a much tighter bucket than the
         # generic sel_step; None buckets them coarsely like everything
@@ -145,6 +171,7 @@ class LRUPlanCache:
             order = [atom_order[p] for p in ent["cpos"]]
             plan = finalize_plan(tree, order, planner, model, t0,
                                  total_records)
+            plan.cache_key = full_key
             if not with_tape:
                 return plan
             if ent["tape"] is None:
@@ -159,15 +186,69 @@ class LRUPlanCache:
             return plan, rebind_tape(ent["tape"], tree, aid_map)
         self.stats.misses += 1
         plan = _PLANNERS[planner](tree, model, total_records=total_records)
+        plan.cache_key = full_key
         inv = {aid: p for p, aid in enumerate(atom_order)}
         tape = compile_tape(plan) if with_tape else None
         self._entries[full_key] = {
             "cpos": [inv[aid] for aid in plan.order],
-            "inv": inv, "tape": tape}
+            "inv": inv, "tape": tape, "bad": 0}
         if len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.stats.evictions += 1
         return (plan, tape) if with_tape else plan
+
+    # -- Q-Error feedback (eviction-on-drift + sel_step auto-tune) -------------
+    def record_served(self, full_key: Optional[tuple], qerr: float) -> bool:
+        """Report the realized plan Q-Error of a serving of ``full_key``
+        (recorded *after* execution — a serving always runs to completion).
+        A streak of ``drift_consecutive`` servings above ``drift_threshold``
+        evicts the entry so the next key-equal query replans on current
+        statistics.  Returns True when this report evicted the entry."""
+        evicted = False
+        ent = self._entries.get(full_key) if full_key is not None else None
+        if ent is not None:
+            if qerr > self.drift_threshold:
+                ent["bad"] = ent.get("bad", 0) + 1
+                if ent["bad"] >= self.drift_consecutive:
+                    del self._entries[full_key]
+                    self.stats.drift_evictions += 1
+                    evicted = True
+            else:
+                ent["bad"] = 0
+        if self.auto_tune:
+            self._maybe_retune(qerr)
+        return evicted
+
+    _SEL_STEP_MIN = 0.00625
+    _SEL_STEP_MAX = 0.2
+
+    def _maybe_retune(self, qerr: float) -> None:
+        """Auto-tune ``sel_step`` from observed hit rate vs realized plan
+        quality over a sliding window: buckets that hide drift (many bad
+        servings) tighten, healthy-but-missing buckets widen.  Any change
+        clears the cache — every cached position list was keyed under the
+        old quantization."""
+        self._tune_served += 1
+        if qerr > self.drift_threshold:
+            self._tune_bad += 1
+        if self._tune_served < self._tune_window:
+            return
+        hits = self.stats.hits - self._tune_hits0
+        misses = self.stats.misses - self._tune_misses0
+        bad_rate = self._tune_bad / self._tune_served
+        hit_rate = hits / (hits + misses) if (hits + misses) else 0.0
+        new_step = self.sel_step
+        if bad_rate > 0.25:
+            new_step = max(self._SEL_STEP_MIN, self.sel_step / 2.0)
+        elif bad_rate < 0.02 and hit_rate < 0.5:
+            new_step = min(self._SEL_STEP_MAX, self.sel_step * 2.0)
+        if new_step != self.sel_step:
+            self.sel_step = new_step
+            self._entries.clear()
+            self.stats.sel_step_retunes += 1
+        self._tune_served = self._tune_bad = 0
+        self._tune_hits0 = self.stats.hits
+        self._tune_misses0 = self.stats.misses
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +284,15 @@ class BatchStats:
     delta_rows_evaluated: float = 0.0  # appended rows actually (re)evaluated
     delta_rows_reused: float = 0.0     # prefix rows served from cache
     upload_bytes: float = 0.0          # host->device column bytes this batch
+    # Q-Error feedback loop: realized selectivities surfaced from the
+    # engines' per-op popcounts (already paid for by cost accounting — no
+    # extra syncs), compared against the planner's estimates
+    feedback_observations: int = 0     # per-op (est, realized) pairs logged
+    max_qerror: float = 0.0            # worst per-op Q-Error this batch
+    mean_qerror: float = 0.0           # mean per-op Q-Error this batch
+    atom_qerrors: Dict[tuple, float] = field(default_factory=dict)
+    plan_qerrors: List[float] = field(default_factory=list)  # per query
+    drift_evictions: int = 0           # plan-cache entries evicted for drift
 
     @property
     def dedupe_ratio(self) -> float:
@@ -353,6 +443,28 @@ class QuerySession:
                       share ``atom_key`` results across queries exactly
                       like native numeric atoms — and the tape engines keep
                       their one-sync contract on mixed plans.
+    feedback:         the Q-Error feedback loop.  True (default) creates a
+                      per-session :class:`~repro.core.feedback.FeedbackStore`;
+                      pass a store to share one across sessions, or False
+                      to disable.  After every batch the engines' realized
+                      per-op selectivities (from popcounts the cost
+                      accounting already pays for — zero extra host syncs)
+                      are compared against the planner estimates; per-plan
+                      Q-Errors feed the plan cache's eviction-on-drift and
+                      per-key traffic stats feed the sharing discount.
+    feedback_absorb:  additionally merge observed truth back into the
+                      *estimator*: full-truth observations update
+                      per-atom-key selectivities blended into annotation,
+                      and realized CDF anchors warp the table's mergeable
+                      quantile sketches
+                      (:func:`~repro.columnar.ingest.absorb_cdf_anchor`).
+                      Off by default — corrected estimates move atoms
+                      across canonical-key buckets, i.e. key-equal repeats
+                      deliberately *replan* on the better statistics, which
+                      sessions pinning cache-hit contracts must opt into
+                      (same posture as ``LRUPlanCache.auto_tune``).
+                      Requires ``feedback``; only meaningful with
+                      ``annotate=True``.
     """
 
     _ENGINES = ("numpy", "jax", "pallas", "tape", "tape-pallas")
@@ -364,7 +476,9 @@ class QuerySession:
                  batched: Union[bool, str] = "auto", block: int = 8192,
                  annotate: bool = True, persist_atom_cache: bool = True,
                  rewrite_strings: bool = True, zone_prune: bool = True,
-                 share_margin: Optional[float] = 1.0):
+                 share_margin: Optional[float] = 1.0,
+                 feedback: Union[bool, FeedbackStore] = True,
+                 feedback_absorb: bool = False):
         if planner not in ("auto",) + tuple(_PLANNERS):
             raise ValueError(f"unknown planner {planner!r}")
         if engine not in self._ENGINES:
@@ -383,6 +497,13 @@ class QuerySession:
         self.rewrite_strings = rewrite_strings
         self.zone_prune = zone_prune
         self.share_margin = share_margin
+        if feedback is True:
+            self.feedback: Optional[FeedbackStore] = FeedbackStore()
+        elif feedback:
+            self.feedback = feedback
+        else:
+            self.feedback = None
+        self.feedback_absorb = feedback_absorb and self.feedback is not None
         self.last_result: Optional[BatchResult] = None
         self._atom_cache: Dict[tuple, object] = {}
         self._cache_version = self._table_fingerprint()
@@ -475,6 +596,14 @@ class QuerySession:
         census behavior; ``share_margin=None`` disables the heuristic
         entirely.  The decision trail lands in
         ``BatchStats.sharing_frac_sums``.
+
+        With feedback enabled the margin is *traffic-aware*: the per-batch
+        check is myopic for long-lived sessions, where a promoted atom's
+        |R| touch amortizes across future batches at delta-splice cost.
+        Each candidate's margin is discounted by its expected future
+        repeats (``FeedbackStore.expected_repeats`` — cross-batch repeat
+        rate times a bounded horizon), so hot keys promote on evidence
+        while one-off atoms still face the full break-even bar.
         """
         if not candidates:
             return set()
@@ -493,7 +622,14 @@ class QuerySession:
         stats.sharing_frac_sums = frac_sums
         if self.share_margin is None:
             return set(candidates)
-        return {k for k, s in frac_sums.items() if s >= self.share_margin}
+        shared = set()
+        for k, s in frac_sums.items():
+            margin = self.share_margin
+            if self.feedback is not None:
+                margin = margin / (1.0 + self.feedback.expected_repeats(k))
+            if s >= margin:
+                shared.add(k)
+        return shared
 
     # -- entry point ----------------------------------------------------------
     def execute(self, queries: Sequence[Union[Node, PredicateTree]]
@@ -507,8 +643,9 @@ class QuerySession:
             # atoms the table cannot estimate) must stay untouched
             trees = [normalize(tree_copy(q.root if isinstance(q, PredicateTree)
                                          else q)) for q in queries]
+            fb = self.feedback if self.feedback_absorb else None
             for t in trees:
-                annotate_selectivities(t, self.table)
+                annotate_selectivities(t, self.table, feedback=fb)
         else:
             trees = [q if isinstance(q, PredicateTree)
                      else normalize(tree_copy(q)) for q in queries]
@@ -606,11 +743,70 @@ class QuerySession:
                                 - base_applications)
         stats.upload_bytes = (getattr(inner, "uploaded_bytes", 0)
                               - (up0 if inner is reuse_backend else 0))
+        if self.feedback is not None:
+            self._absorb_feedback(inner, trees, plans, stats)
         result = BatchResult(bitmaps=bitmaps, plans=plans, stats=stats,
                              backend=inner,
                              wall_s=time.perf_counter() - t0)
         self.last_result = result
         return result
+
+    # -- the Q-Error feedback loop (runs after the batch's bundled sync) -------
+    def _absorb_feedback(self, inner: SetBackend,
+                         trees: Sequence[PredicateTree],
+                         plans: Sequence[Plan], stats: BatchStats) -> None:
+        """Close the loop on a finished batch: compare realized per-op
+        selectivities (drained from the engine's op log — popcounts the
+        cost accounting already computed, so zero extra syncs/dispatches)
+        against the estimates, attribute Q-Errors to atom keys and plans,
+        report servings to the plan cache's eviction-on-drift, and — with
+        ``feedback_absorb`` — merge full-truth observations back into the
+        estimator (per-key selectivities + quantile-sketch CDF anchors)."""
+        fb = self.feedback
+        n = self.table.n_records
+        key_qerr: Dict[tuple, float] = {}
+        qerrs: List[float] = []
+        entries = (inner.drain_op_log()
+                   if hasattr(inner, "drain_op_log") else [])
+        for keys, est, src, out in entries:
+            if src <= 0:
+                continue
+            if len(keys) == 1:
+                qe = fb.observe(keys[0], est, src, out, n)
+            else:
+                # multi-atom fused group: realized truth is conditional on
+                # the group connective — judge the estimate, do not absorb
+                qe = qerror(est, out / src, weight=src)
+                fb.observations += 1
+            qerrs.append(qe)
+            for k in keys:
+                key_qerr[k] = max(key_qerr.get(k, 1.0), qe)
+        stats.feedback_observations = len(qerrs)
+        if qerrs:
+            stats.max_qerror = max(qerrs)
+            stats.mean_qerror = sum(qerrs) / len(qerrs)
+        stats.atom_qerrors = key_qerr
+        # cross-batch traffic: which keys showed up this batch (feeds the
+        # repeat-rate share_margin discount on the next batch)
+        fb.note_batch(k for t in trees for k in
+                      set(atom_key(a) for a in t.atoms))
+        # per-plan realized quality -> eviction-on-drift.  Recorded AFTER
+        # execution: a served plan always runs to completion, the *next*
+        # key-equal query replans when the streak trips.
+        for t, p in zip(trees, plans):
+            observed = [key_qerr[k] for k in
+                        (atom_key(a) for a in t.atoms) if k in key_qerr]
+            pq = max(observed) if observed else 1.0
+            stats.plan_qerrors.append(pq)
+            if p.cache_key is not None:
+                if self.plan_cache.record_served(p.cache_key, pq):
+                    stats.drift_evictions += 1
+        if self.feedback_absorb:
+            from .ingest import absorb_cdf_anchor
+            for column, value, cdf, rows in fb.drain_anchors():
+                if decode_column(column) is not None:
+                    continue    # code-space estimates are already exact
+                absorb_cdf_anchor(self.table, column, value, cdf, rows)
 
     # -- lockstep batched executor --------------------------------------------
     def _execute_lockstep(self, trees: List[PredicateTree],

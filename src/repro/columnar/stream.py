@@ -102,6 +102,10 @@ class StreamStats:
     delta_rows_reused: float = 0.0
     upload_bytes: float = 0.0
     tape_cache_hits: int = 0
+    # Q-Error feedback loop (aggregated across drains)
+    feedback_observations: int = 0
+    drift_evictions: int = 0
+    max_qerror: float = 0.0
     last_batch: Optional[BatchStats] = field(default=None, repr=False)
 
     @property
@@ -122,6 +126,9 @@ class StreamStats:
         self.delta_rows_reused += bs.delta_rows_reused
         self.upload_bytes += bs.upload_bytes
         self.tape_cache_hits += bs.tape_cache_hits
+        self.feedback_observations += bs.feedback_observations
+        self.drift_evictions += bs.drift_evictions
+        self.max_qerror = max(self.max_qerror, bs.max_qerror)
         self.last_batch = bs
 
 
@@ -141,12 +148,15 @@ class StreamSession:
             raise ValueError("max_pending must be >= 1")
         self.table = table
         self.max_pending = max_pending
-        # promote every sharing candidate by default: the per-batch
-        # share_margin cost check is myopic for a long-lived streaming
-        # session, where a promoted atom's |R| touch amortizes across all
-        # future drains at delta-splice cost (appended rows only).  Pass
-        # share_margin= explicitly to restore the per-batch heuristic.
-        session_kwargs.setdefault("share_margin", None)
+        # the QuerySession's share_margin default (break-even) applies
+        # as-is: the margin is traffic-aware — the session's FeedbackStore
+        # tracks cross-drain repeat rates per atom key and discounts the
+        # break-even bar by each key's expected future appearances, so hot
+        # streaming atoms promote on evidence (their |R| touch amortizes
+        # across future drains at delta-splice cost) while one-off atoms
+        # still face the full per-batch check.  The old behavior here —
+        # share_margin=None, promote *everything* — paid the |R| touch for
+        # atoms that never reappeared.
         self.session = QuerySession(table, planner=planner, engine=engine,
                                     batched=batched, **session_kwargs)
         self.stats = StreamStats()

@@ -23,9 +23,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
-from ..core.predicate import (Atom, Node, Not, PredicateTree, code_column,
-                              codes_expression, decode_column, normalize,
-                              tree_copy)
+from ..core.predicate import (Atom, Node, Not, PredicateTree, atom_key,
+                              code_column, codes_expression, decode_column,
+                              normalize, tree_copy)
 
 _QUANTILE_GRID = 512
 
@@ -364,6 +364,17 @@ class Table:
         st = self.stats(col)
         if st.quantiles is not None:
             grid = np.linspace(0.0, 1.0, _QUANTILE_GRID)
+            if atom.op in ("in", "not_in"):
+                # membership over a numeric column: each member is an eq;
+                # clamp by the quantile grid's distinct-value count
+                try:
+                    k = len(atom.value)
+                except TypeError:
+                    k = 1
+                g = min(1.0, k / max(len(np.unique(st.quantiles)), 2))
+                if atom.op == "not_in":
+                    g = 1.0 - g
+                return float(min(max(g, 1e-6), 1.0 - 1e-6))
             cdf = float(np.interp(atom.value, st.quantiles, grid))
             if atom.op == "lt" or atom.op == "le":
                 g = cdf
@@ -465,13 +476,26 @@ def empirical_selectivity(table: Table, atom: Atom,
 
 
 def annotate_selectivities(tree: PredicateTree, table: Table,
-                           empirical: bool = False, sample: int = 65536) -> PredicateTree:
-    """Fill atom selectivities from table stats (in place; returns tree)."""
+                           empirical: bool = False, sample: int = 65536,
+                           feedback=None) -> PredicateTree:
+    """Fill atom selectivities from table stats (in place; returns tree).
+
+    ``feedback`` optionally supplies a
+    :class:`~repro.core.feedback.FeedbackStore`: stats-based estimates are
+    then blended toward realized full-truth observations of the same atom
+    key (blend weight decays as the table outgrows the observation) — the
+    estimator-correction read of the Q-Error feedback loop.  Empirical
+    sampling is already measured truth, so it skips the blend.
+    """
     for atom in tree.atoms:
         if empirical:
             atom.selectivity = empirical_selectivity(table, atom, sample)
         else:
-            atom.selectivity = table.estimate_selectivity(atom)
+            g = table.estimate_selectivity(atom)
+            if feedback is not None:
+                g = feedback.selectivity(atom_key(atom), g,
+                                         n_records=table.n_records)
+            atom.selectivity = g
     return tree
 
 

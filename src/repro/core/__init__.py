@@ -13,6 +13,7 @@ from .cost import (BlockCostModel, CostModel, HddCostModel, MemoryCostModel,
                    PerAtomCostModel, check_triangle)
 from .deepfish import deepfish, one_lookahead_order
 from .estimate import EstimatorState, plan_cost, step_fractions
+from .feedback import FeedbackStore, group_selectivity, qerror
 from .nooropt import nooropt, nooropt_execute
 from .optimal import optimal_bruteforce, optimal_plan
 from .orderp import orderp, orderp_with_cost
@@ -31,6 +32,7 @@ __all__ = [
     "SetBackend", "VertexBackend", "Stats", "BestDMachine",
     "orderp", "orderp_with_cost",
     "EstimatorState", "plan_cost", "step_fractions",
+    "FeedbackStore", "qerror", "group_selectivity",
     "Plan", "execute_plan", "execute_bestd", "finalize_plan",
     "shallowfish", "shallowfish_execute",
     "deepfish", "one_lookahead_order",

@@ -1,0 +1,221 @@
+"""Runtime selectivity feedback: Q-Error, traffic stats, corrected estimates.
+
+The engine pays for ground truth on every query: each costed tape op's
+output popcount rides back with the one bundled host sync (zero extra
+syncs, zero extra dispatches — see ``columnar/device.py``).  This module
+turns those popcounts into planner-usable state:
+
+* :func:`qerror` — the standard estimation-error metric
+  ``max(est/act, act/est)`` (Moerkotte et al.; the feedback signal argued
+  for in Shin's sampling-free selectivity-estimation thesis,
+  arXiv 1806.08384).  Plan quality degrades multiplicatively with Q-Error,
+  which is why it (and not absolute error) gates plan-cache eviction.
+* :class:`FeedbackStore` — a per-session accumulator holding, per
+  ``atom_key``:
+
+  - an exponentially-weighted estimate of the atom's *true marginal*
+    selectivity, fed only by **full-truth** observations (ops whose source
+    set was the whole table: first plan steps and shared full-table
+    evaluations).  Conditional observations (ops applied to an already
+    filtered set) carry correlation with the plan prefix and must not be
+    mistaken for marginals — they feed Q-Error and traffic stats only.
+  - repeat-rate traffic statistics across batches, which make the
+    selective-sharing ``share_margin`` check principled for long-lived
+    sessions: a promoted atom's full-|R| evaluation amortizes over the
+    batches it is *expected* to reappear in.
+
+Observations are weighted by the number of source records they were
+measured over, and full-truth corrections decay as the table grows past
+the observed row count (appends shift the truth; stale truth degrades to
+an ordinary estimate).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["qerror", "group_selectivity", "FeedbackStore", "Observation"]
+
+
+def qerror(est: float, act: float, weight: float = 1.0) -> float:
+    """Q-Error ``max(est/act, act/est)`` with small-sample clamping.
+
+    Both fractions are clamped to ``eps = 0.5 / max(weight, 1)`` — half a
+    record's worth of mass at the observation's sample size — so an
+    estimate of 1e-6 against a realized 0-of-100 count reads as "consistent
+    with the data", not as an infinite error.
+    """
+    eps = 0.5 / max(float(weight), 1.0)
+    e = max(float(est), eps)
+    a = max(float(act), eps)
+    return max(e / a, a / e)
+
+
+def group_selectivity(gammas: Sequence[float], conj: bool) -> float:
+    """Combined selectivity of a sibling atom group under independence:
+    product for a conjunction, inclusion-exclusion complement for a
+    disjunction.  This is the estimate a CHAIN tape op's realized output
+    fraction is compared against."""
+    if conj:
+        g = 1.0
+        for x in gammas:
+            g *= float(x)
+        return g
+    g = 1.0
+    for x in gammas:
+        g *= (1.0 - float(x))
+    return 1.0 - g
+
+
+@dataclass
+class Observation:
+    """One realized (estimate vs truth) measurement for an atom key."""
+
+    key: Tuple
+    est: float          # estimated fraction of the source set
+    src: int            # source-set popcount (pre-evaluation)
+    out: int            # output popcount (post-evaluation, exact)
+    full: bool          # source was (approximately) the whole table
+
+    @property
+    def act(self) -> float:
+        return self.out / self.src if self.src else 0.0
+
+    @property
+    def qerror(self) -> float:
+        return qerror(self.est, self.act, self.src)
+
+
+class _KeyState:
+    __slots__ = ("ewma", "obs", "rows", "batches_seen", "last_batch")
+
+    def __init__(self):
+        self.ewma: Optional[float] = None   # EWMA of full-truth act
+        self.obs = 0                        # full-truth observation count
+        self.rows = 0                       # table rows at last full truth
+        self.batches_seen = 0               # distinct batches key appeared in
+        self.last_batch = -1
+
+
+class FeedbackStore:
+    """Per-session runtime-feedback state (see module docstring).
+
+    Parameters
+    ----------
+    alpha:
+        EWMA step for full-truth selectivity corrections.  High by default:
+        a full-table popcount *is* the truth at observation time, so the
+        memory mostly serves to smooth sampling of drifting streams.
+    full_fraction:
+        an observation counts as full-truth when its source popcount covers
+        at least this fraction of the table.
+    repeat_horizon:
+        cap on the expected-repeats credit used by the traffic-aware
+        ``share_margin`` discount — a promoted atom's full-|R| cost is
+        assumed to amortize over at most this many future batches.
+    """
+
+    def __init__(self, alpha: float = 0.75, full_fraction: float = 0.98,
+                 repeat_horizon: int = 8):
+        self.alpha = float(alpha)
+        self.full_fraction = float(full_fraction)
+        self.repeat_horizon = int(repeat_horizon)
+        self.batches = 0
+        self.observations = 0
+        self.full_observations = 0
+        self._keys: Dict[Tuple, _KeyState] = {}
+        # (column, op, value, realized_fraction, rows) anchors pending
+        # absorption into the table's quantile sketch (columnar layer pulls
+        # these via drain_anchors(); core stays table-agnostic)
+        self._pending_anchors: List[Tuple] = []
+
+    # -- observations -------------------------------------------------------
+    def observe(self, key: Tuple, est: float, src: int, out: int,
+                n_records: int) -> float:
+        """Record one realized measurement; returns its Q-Error."""
+        self.observations += 1
+        st = self._keys.get(key)
+        if st is None:
+            st = self._keys[key] = _KeyState()
+        if src <= 0:
+            return 1.0
+        act = out / src
+        if src >= self.full_fraction * max(n_records, 1):
+            self.full_observations += 1
+            st.obs += 1
+            st.rows = int(n_records)
+            if st.ewma is None:
+                st.ewma = act
+            else:
+                st.ewma += self.alpha * (act - st.ewma)
+            self._queue_anchor(key, st.ewma, n_records)
+        return qerror(est, act, src)
+
+    def _queue_anchor(self, key: Tuple, act: float, rows: int) -> None:
+        """Full-truth range observations double as CDF anchors for the
+        column's quantile sketch (generalizes the correction to *other*
+        values on the same column, not just the observed key)."""
+        if len(key) != 3:
+            return
+        column, op, value = key
+        if op not in ("lt", "le", "gt", "ge") or not isinstance(column, str):
+            return
+        try:
+            v = float(value)
+        except (TypeError, ValueError):
+            return
+        cdf = act if op in ("lt", "le") else 1.0 - act
+        self._pending_anchors.append((column, v, cdf, rows))
+
+    def drain_anchors(self) -> List[Tuple]:
+        """Pop pending ``(column, value, cdf, rows)`` sketch anchors."""
+        out = self._pending_anchors
+        self._pending_anchors = []
+        return out
+
+    # -- corrected estimates ------------------------------------------------
+    def selectivity(self, key: Tuple, default: float,
+                    n_records: Optional[int] = None) -> float:
+        """Feedback-corrected marginal selectivity for ``key``.
+
+        Full truth overrides the analytic estimate, but decays as the table
+        grows past the observed row count: with ``w = rows_observed /
+        rows_now`` the blend is ``w * truth + (1 - w) * default``, so an
+        observation over the whole current table wins outright while one
+        taken before the table doubled counts half.
+        """
+        st = self._keys.get(key)
+        if st is None or st.ewma is None:
+            return default
+        w = 1.0
+        if n_records and st.rows:
+            w = min(1.0, st.rows / float(n_records))
+        g = w * st.ewma + (1.0 - w) * float(default)
+        return min(max(g, 1e-6), 1.0 - 1e-6)
+
+    # -- traffic / repeat-rate stats ----------------------------------------
+    def note_batch(self, keys: Iterable[Tuple]) -> None:
+        """Record one served batch and the distinct atom keys it touched."""
+        self.batches += 1
+        for k in set(keys):
+            st = self._keys.get(k)
+            if st is None:
+                st = self._keys[k] = _KeyState()
+            if st.last_batch != self.batches:
+                st.last_batch = self.batches
+                st.batches_seen += 1
+
+    def repeat_score(self, key: Tuple) -> float:
+        """Fraction of past batches that touched ``key`` (0 when unseen —
+        a brand-new session applies no discount)."""
+        if self.batches <= 0:
+            return 0.0
+        st = self._keys.get(key)
+        if st is None:
+            return 0.0
+        return min(1.0, st.batches_seen / self.batches)
+
+    def expected_repeats(self, key: Tuple) -> float:
+        """Expected number of *future* batches containing ``key``, capped at
+        ``repeat_horizon``: the amortization credit for promoting it."""
+        return self.repeat_score(key) * min(self.batches, self.repeat_horizon)

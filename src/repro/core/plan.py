@@ -35,6 +35,10 @@ class Plan:
     est_cost:   planner's expected cost (cost-model units)
     est_fracs:  expected count(D_i)/|R| per step
     plan_time_s: wall time spent planning
+    cache_key:  plan-cache identity this plan was served under (set by
+                ``LRUPlanCache.get_or_plan``; None when uncached) — the
+                handle realized Q-Error reports attach to for
+                eviction-on-drift
     """
 
     tree: PredicateTree
@@ -43,6 +47,7 @@ class Plan:
     est_cost: float = 0.0
     est_fracs: List[float] = field(default_factory=list)
     plan_time_s: float = 0.0
+    cache_key: Optional[tuple] = None
 
     @property
     def n(self) -> int:

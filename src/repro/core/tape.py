@@ -48,8 +48,9 @@ from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 from .bestd import BestDMachine
+from .feedback import group_selectivity
 from .plan import Plan
-from .predicate import And, Atom, PredicateTree, decode_column
+from .predicate import And, Atom, PredicateTree, atom_key, decode_column
 from .sets import SetBackend
 
 # op kinds
@@ -181,6 +182,30 @@ class PlanTape:
                 lines.append(f"  {i:3d}: s{op.dst} = {op.kind}")
         lines.append(f"  result: s{self.result}")
         return "\n".join(lines)
+
+
+def op_observation_meta(tape: PlanTape
+                        ) -> List[Tuple["TapeOp", Tuple[Tuple, ...], float]]:
+    """Per costed op (ATOM/CHAIN, in tape order): ``(op, atom_keys,
+    estimated_fraction)``.
+
+    The estimated fraction is the op's expected output/source ratio under
+    the planner's independence assumption — per-atom selectivity for ATOM
+    ops, :func:`~repro.core.feedback.group_selectivity` under the chain's
+    connective for CHAIN ops.  Backends compare it against the realized
+    ``output_popcount / source_popcount`` that rides back with the one host
+    sync, producing the per-op Q-Error observations the feedback loop runs
+    on.  Pure metadata: consuming it adds no device work.
+    """
+    atoms = tape.tree.atoms
+    out = []
+    for op in tape.ops:
+        if op.kind not in (ATOM, CHAIN):
+            continue
+        grp = [atoms[a] for a in op.aids]
+        est = group_selectivity([a.selectivity for a in grp], op.conj)
+        out.append((op, tuple(atom_key(a) for a in grp), est))
+    return out
 
 
 class _TapeEmitter(SetBackend):

@@ -1,0 +1,422 @@
+"""The Q-Error feedback loop (runtime-corrected selectivities).
+
+Covers: the Q-Error metric + FeedbackStore blending/traffic stats, the
+quantile-sketch CDF-anchor absorption, plan-cache eviction-on-drift (and
+its separation from LRU capacity eviction), the sel_step auto-tune, the
+zone-pruned host-gather fallback (bit-identical to the numpy oracle with
+``blocks_pruned > 0`` on ALL/NONE-heavy data), the traffic-aware
+share_margin discount (hot repeated atoms promote, one-offs don't), the
+append-until-recode stale-plan regression, and the drift-workload
+differential sweep: results stay bit-identical while eviction fires,
+post-feedback Q-Error drops, and per-batch host syncs stay at one.
+"""
+import numpy as np
+import pytest
+
+from repro.columnar import (QuerySession, StreamSession, Table,
+                            make_forest_table, pack_bits, random_tree,
+                            run_query, unpack_bits)
+from repro.columnar.ingest import absorb_cdf_anchor
+from repro.columnar.multiquery import LRUPlanCache
+from repro.core import (And, Atom, FeedbackStore, Or, normalize, qerror,
+                        tree_copy)
+from repro.core.feedback import group_selectivity
+from repro.core.predicate import atom_key
+
+
+def _oracle_bits(table, tree):
+    res, _, _ = run_query(tree, table, planner="deepfish", engine="numpy")
+    return res
+
+
+# -- the metric + store -------------------------------------------------------
+
+def test_qerror_metric():
+    assert qerror(0.1, 0.1, weight=1000) == pytest.approx(1.0)
+    assert qerror(0.1, 0.4, weight=1000) == pytest.approx(4.0)
+    assert qerror(0.4, 0.1, weight=1000) == pytest.approx(4.0)
+    # small-sample clamp: est 1e-6 vs 0 hits over 100 records is consistent
+    assert qerror(1e-6, 0.0, weight=100) < 2.0
+    # ... but over a million records it is not
+    assert qerror(1e-3, 0.0, weight=1_000_000) > 100.0
+    # a single-record observation cannot contradict any estimate
+    assert qerror(0.1, 0.4, weight=1) == pytest.approx(1.0)
+
+
+def test_group_selectivity():
+    assert group_selectivity([0.5, 0.5], conj=True) == pytest.approx(0.25)
+    assert group_selectivity([0.5, 0.5], conj=False) == pytest.approx(0.75)
+
+
+def test_feedback_store_full_truth_overrides_and_decays():
+    fb = FeedbackStore()
+    k = ("a", "lt", 1.0)
+    fb.observe(k, est=0.10, src=1000, out=300, n_records=1000)
+    # full truth on the current snapshot wins outright
+    assert fb.selectivity(k, 0.10, n_records=1000) == pytest.approx(0.3)
+    # after the table doubles, the observation counts half
+    blended = fb.selectivity(k, 0.10, n_records=2000)
+    assert blended == pytest.approx(0.5 * 0.3 + 0.5 * 0.1)
+
+
+def test_feedback_store_conditional_observations_do_not_absorb():
+    fb = FeedbackStore()
+    k = ("a", "lt", 1.0)
+    # source covered only 10% of the table: correlated with the plan
+    # prefix, must not be mistaken for the marginal
+    qe = fb.observe(k, est=0.10, src=100, out=50, n_records=1000)
+    assert qe == pytest.approx(5.0)
+    assert fb.selectivity(k, 0.10, n_records=1000) == pytest.approx(0.10)
+    assert fb.full_observations == 0
+
+
+def test_feedback_store_repeat_rate():
+    fb = FeedbackStore()
+    hot, cold = ("a", "lt", 1.0), ("b", "lt", 2.0)
+    for _ in range(4):
+        fb.note_batch([hot])
+    fb.note_batch([hot, cold])
+    assert fb.repeat_score(hot) == pytest.approx(1.0)
+    assert fb.repeat_score(cold) == pytest.approx(1 / 5)
+    assert fb.expected_repeats(hot) == pytest.approx(5.0)
+    assert fb.expected_repeats(("never", "lt", 0.0)) == 0.0
+
+
+# -- sketch CDF-anchor absorption ---------------------------------------------
+
+def test_absorb_cdf_anchor_corrects_estimates():
+    rng = np.random.default_rng(0)
+    t = Table({"a": rng.normal(size=4000)})
+    v = float(np.quantile(t["a"], 0.5))
+    base = t.estimate_selectivity(Atom("a", "lt", v))
+    assert base == pytest.approx(0.5, abs=0.02)
+    # claim realized truth says CDF(v) = 0.7 over the whole table
+    assert absorb_cdf_anchor(t, "a", v, 0.7, rows=t.n_records)
+    warped = t.estimate_selectivity(Atom("a", "lt", v))
+    assert warped == pytest.approx(0.7, abs=0.02)
+    # monotone: estimates at other values stay ordered
+    lo = t.estimate_selectivity(Atom("a", "lt", v - 1.0))
+    hi = t.estimate_selectivity(Atom("a", "lt", v + 1.0))
+    assert lo <= warped <= hi
+    # non-numeric / unknown columns refuse
+    t2 = Table({"s": np.array(["x", "y"] * 10)})
+    assert not absorb_cdf_anchor(t2, "s", 0.0, 0.5, rows=20)
+    assert not absorb_cdf_anchor(t, "nope", 0.0, 0.5, rows=20)
+
+
+def test_absorb_cdf_anchor_decays_as_table_grows():
+    rng = np.random.default_rng(1)
+    t = Table({"a": rng.uniform(size=2000)})
+    absorb_cdf_anchor(t, "a", 0.5, 0.9, rows=t.n_records)
+    assert t.estimate_selectivity(Atom("a", "lt", 0.5)) == pytest.approx(
+        0.9, abs=0.03)
+    # triple the table with the same distribution: the stale anchor's
+    # weight drops to ~1/3 and the estimate pulls back toward the data
+    t.append({"a": rng.uniform(size=4000)})
+    g = t.estimate_selectivity(Atom("a", "lt", 0.5))
+    assert 0.5 < g < 0.75
+
+
+def test_anchor_on_multichunk_sketch_stays_monotone():
+    rng = np.random.default_rng(2)
+    t = Table({"a": rng.normal(size=70_000)})   # > SKETCH_CHUNK: 2 chunks
+    absorb_cdf_anchor(t, "a", 0.0, 0.8, rows=t.n_records)
+    q = t.stats("a").quantiles
+    assert (np.diff(q) >= -1e-12).all()
+
+
+# -- plan-cache eviction-on-drift ---------------------------------------------
+
+def _two_atom_tree(seed=0):
+    return normalize(And([Atom("a", "lt", 0.5, selectivity=0.3),
+                          Atom("b", "lt", float(seed), selectivity=0.6)]))
+
+
+def test_record_served_evicts_after_consecutive_bad_servings():
+    cache = LRUPlanCache(drift_threshold=2.0, drift_consecutive=2)
+    tree = _two_atom_tree()
+    plan = cache.get_or_plan(tree, "deepfish")
+    assert plan.cache_key is not None
+    assert not cache.record_served(plan.cache_key, 3.0)   # streak 1
+    assert cache.record_served(plan.cache_key, 3.0)       # streak 2: evict
+    assert cache.stats.drift_evictions == 1
+    assert cache.stats.evictions == 0                     # LRU untouched
+    m0 = cache.stats.misses
+    cache.get_or_plan(tree, "deepfish")                   # replans
+    assert cache.stats.misses == m0 + 1
+
+
+def test_record_served_good_serving_resets_streak():
+    cache = LRUPlanCache(drift_threshold=2.0, drift_consecutive=2)
+    plan = cache.get_or_plan(_two_atom_tree(), "deepfish")
+    assert not cache.record_served(plan.cache_key, 5.0)
+    assert not cache.record_served(plan.cache_key, 1.1)   # healthy: reset
+    assert not cache.record_served(plan.cache_key, 5.0)   # streak back to 1
+    assert cache.stats.drift_evictions == 0
+    # unknown / stale keys are a no-op
+    assert not cache.record_served(("nope",), 9.0)
+    assert not cache.record_served(None, 9.0)
+
+
+def test_auto_tune_tightens_sel_step_under_drift():
+    cache = LRUPlanCache(sel_step=0.05, auto_tune=True, drift_consecutive=10**9)
+    plan = cache.get_or_plan(_two_atom_tree(), "deepfish")
+    for _ in range(cache._tune_window):
+        cache.record_served(plan.cache_key, 5.0)
+    assert cache.sel_step == pytest.approx(0.025)
+    assert cache.stats.sel_step_retunes == 1
+    assert len(cache) == 0                 # step change clears the cache
+
+
+# -- zone-pruned host-gather fallback (satellite: tape fallback bugfix) -------
+
+def _sorted_table(n=32768):
+    # strictly increasing column: every block is a tight zone
+    return Table({"a": np.arange(n, dtype=np.float64),
+                  "b": np.linspace(0.0, 1.0, n)})
+
+
+def test_tape_fallback_in_atom_zone_prunes_none_heavy():
+    t = _sorted_table()
+    # numeric IN has no device opcode -> host-gather fallback; all its
+    # values live in one 8192-block, so every other block is NONE
+    tree = normalize(And([Atom("a", "in", (5.0, 6.0, 7.0), selectivity=0.01),
+                          Atom("b", "lt", 0.9, selectivity=0.9)]))
+    res, _, be = run_query(tree, t, planner="deepfish", engine="tape")
+    np.testing.assert_array_equal(res, _oracle_bits(t, tree))
+    assert be.host_fallbacks > 0
+    assert be.blocks_pruned > 0
+
+
+def test_tape_fallback_not_in_atom_zone_prunes_all_heavy():
+    t = _sorted_table()
+    # NOT IN over values inside one block: every other block is ALL —
+    # the fallback must OR the source bits straight through
+    tree = normalize(And([Atom("a", "not_in", (5.0, 6.0), selectivity=0.99),
+                          Atom("b", "lt", 0.5, selectivity=0.5)]))
+    res, _, be = run_query(tree, t, planner="deepfish", engine="tape")
+    np.testing.assert_array_equal(res, _oracle_bits(t, tree))
+    assert be.host_fallbacks > 0
+    assert be.blocks_pruned > 0
+
+
+def test_tape_fallback_group_zone_prunes_disjunction():
+    t = _sorted_table()
+    # an OR chain of two host-only IN atoms: the group verdict prunes
+    # blocks NONE for *both* members
+    tree = normalize(Or([Atom("a", "in", (5.0, 6.0), selectivity=0.01),
+                         Atom("a", "in", (9.0, 10.0), selectivity=0.01)]))
+    res, _, be = run_query(tree, t, planner="deepfish", engine="tape")
+    np.testing.assert_array_equal(res, _oracle_bits(t, tree))
+    assert be.host_fallbacks > 0
+    assert be.blocks_pruned > 0
+
+
+def test_tape_fallback_prune_differential_sweep():
+    rng = np.random.default_rng(3)
+    n = 20000
+    t = Table({"a": np.sort(rng.normal(size=n)),
+               "b": rng.uniform(size=n),
+               "c": np.arange(n, dtype=np.float64)})
+    for i in range(6):
+        vals = tuple(float(t["a"][rng.integers(0, n)]) for _ in range(3))
+        tree = normalize(And([Atom("a", "in", vals, selectivity=0.01),
+                              Atom("b", "lt", float(rng.uniform()),
+                                   selectivity=0.5)]))
+        res, _, be = run_query(tree, t, planner="deepfish", engine="tape")
+        np.testing.assert_array_equal(res, _oracle_bits(t, tree))
+        assert be.host_fallbacks > 0
+
+
+def test_tape_fallback_results_identical_with_pruning_disabled():
+    t = _sorted_table(16384)
+    tree = normalize(And([Atom("a", "in", (3.0, 4.0), selectivity=0.01),
+                          Atom("b", "ge", 0.1, selectivity=0.9)]))
+    on, _, be_on = run_query(tree, t, planner="deepfish", engine="tape")
+    s_off = QuerySession(t, planner="deepfish", engine="tape",
+                         zone_prune=False, batched=False)
+    r_off = s_off.execute([tree])
+    np.testing.assert_array_equal(on, r_off.bitmaps[0])
+    assert be_on.blocks_pruned > 0
+    assert r_off.backend.blocks_pruned == 0
+
+
+# -- traffic-aware share_margin (satellite: stream share_margin bugfix) -------
+
+def _margin_queries(t, batch, hot_value):
+    """Two 2-atom conjunctions; the 'hot' second atom repeats across
+    batches, the one-off second atom changes every batch.  Both sit in
+    plan position 2 with expected frac ~0.3 — under the break-even margin,
+    so only traffic evidence can promote them."""
+    qa = And([Atom("a", "lt", 0.30 + 0.001 * batch, selectivity=0.3),
+              Atom("hot", "lt", hot_value, selectivity=0.6)])
+    qb = And([Atom("b", "lt", 0.30 + 0.001 * batch, selectivity=0.3),
+              Atom("one", "lt", 0.60 + 0.001 * batch, selectivity=0.6)])
+    return [normalize(qa), normalize(qb)]
+
+
+def test_hot_repeated_atom_promotes_one_off_does_not():
+    rng = np.random.default_rng(4)
+    n = 8000
+    t = Table({k: rng.uniform(size=n) for k in ("a", "b", "hot", "one")})
+    sess = QuerySession(t, planner="deepfish", engine="numpy",
+                        share_threshold=1, annotate=False)
+    hot_key = ("hot", "lt", 0.6)
+    promoted_at = None
+    for batch in range(6):
+        sess.execute(_margin_queries(t, batch, 0.6))
+        if promoted_at is None and hot_key in sess._atom_cache:
+            promoted_at = batch
+        # the per-batch one-off key never accumulates repeat evidence
+        one_key = ("one", "lt", 0.60 + 0.001 * batch)
+        assert one_key not in sess._atom_cache
+    # cold start: batch 0 has no history, the break-even margin holds
+    assert promoted_at is not None and promoted_at > 0
+    assert sess.feedback.expected_repeats(hot_key) > 1.0
+
+
+def test_share_margin_none_still_promotes_everything():
+    rng = np.random.default_rng(5)
+    t = Table({k: rng.uniform(size=4000) for k in ("a", "b", "hot", "one")})
+    sess = QuerySession(t, planner="deepfish", engine="numpy",
+                        share_threshold=1, share_margin=None, annotate=False)
+    r = sess.execute(_margin_queries(t, 0, 0.6))
+    assert r.stats.shared_rejected_keys == 0
+    assert r.stats.shared_atom_keys == r.stats.shared_candidate_keys
+
+
+def test_stream_session_uses_real_share_margin_default():
+    t = make_forest_table(4000, n_dup=1, seed=7)
+    stream = StreamSession(t, engine="numpy", max_pending=64)
+    assert stream.session.share_margin == 1.0
+    assert stream.session.feedback is not None
+
+
+# -- append-until-recode (satellite: DictColumn stale-plan regression) --------
+
+def test_recode_on_overflow_never_serves_stale_plan():
+    rng = np.random.default_rng(6)
+    n = 6000
+    base_vocab = np.array([f"m_{i:02d}" for i in range(8)])
+    t = Table({"s": rng.choice(base_vocab, size=n),
+               "x": rng.uniform(size=n).astype(np.float64)})
+    t.dict_column("s")                      # materialize the dictionary
+    sess = QuerySession(t, planner="deepfish", engine="tape", block=2048)
+    query = And([Atom("s", "in", ("m_01", "m_03", "zz_00")),
+                 Atom("x", "lt", 0.7)])
+
+    def check():
+        r = sess.execute([normalize(tree_copy(query))])
+        want = _oracle_bits(t, normalize(tree_copy(query)))
+        np.testing.assert_array_equal(r.bitmaps[0], want)
+
+    check()
+    recoded = False
+    for step in range(8):
+        # out-of-order vocabulary ("a_*" sorts before every "m_*") grows
+        # the unsorted dictionary tail until recode-on-overflow fires
+        tail_vocab = np.array([f"a_{step}_{i}" for i in range(2)])
+        t.append({"s": rng.choice(np.concatenate([base_vocab, tail_vocab]),
+                                  size=500),
+                  "x": rng.uniform(size=500).astype(np.float64)})
+        dc = t.dict_column("s")
+        if dc.sorted_n == dc.n and dc.n > len(base_vocab):
+            recoded = True
+        check()                             # bit-identical on every snapshot
+    assert recoded, "workload never triggered recode-on-overflow"
+
+
+# -- drift workload: the whole loop, end to end (satellite: test sweep) -------
+
+def _skewed_cat_table(n=20000, seed=8):
+    rng = np.random.default_rng(seed)
+    # category 0 holds ~45% of rows: the analytic eq estimate (~1/7) is
+    # wrong by > 2x, which the feedback loop must surface and correct
+    cat = rng.choice(7, size=n, p=[0.45, 0.2, 0.1, 0.1, 0.05, 0.05, 0.05])
+    return Table({"cat": cat.astype(np.float64),
+                  "x": rng.uniform(size=n),
+                  "y": rng.normal(size=n)}), rng
+
+
+def test_drift_eviction_fires_on_persistently_bad_plan():
+    t, _ = _skewed_cat_table()
+    sess = QuerySession(t, planner="deepfish", engine="tape",
+                        feedback_absorb=False)
+    q = And([Atom("cat", "eq", 0.0), Atom("x", "lt", 0.5)])
+    r1 = sess.execute([tree_copy(q)])
+    assert r1.stats.max_qerror > 2.0
+    assert r1.stats.drift_evictions == 0           # streak of 1
+    r2 = sess.execute([tree_copy(q)])
+    assert r2.stats.plan_cache_hits == 1
+    assert r2.stats.drift_evictions == 1           # streak of 2: evicted
+    assert sess.plan_cache.stats.drift_evictions == 1
+    assert sess.plan_cache.stats.evictions == 0
+    r3 = sess.execute([tree_copy(q)])
+    assert r3.stats.plan_cache_misses == 1         # replanned
+    np.testing.assert_array_equal(
+        r3.bitmaps[0], _oracle_bits(t, normalize(tree_copy(q))))
+
+
+def test_post_feedback_qerror_improves_and_results_identical():
+    # batched=True: the lockstep executor applies atoms individually, so
+    # the first (full-table) step yields the per-atom full-truth
+    # observation absorption needs — the per-query compiled-tape path
+    # fuses the AND into one chain op, whose group observation is judged
+    # but (correctly) never mistaken for a per-atom marginal
+    t, _ = _skewed_cat_table()
+    sess = QuerySession(t, planner="deepfish", engine="tape", batched=True,
+                        feedback_absorb=True)
+    q = And([Atom("cat", "eq", 0.0), Atom("x", "lt", 0.5)])
+    r1 = sess.execute([normalize(tree_copy(q))])
+    r2 = sess.execute([normalize(tree_copy(q))])
+    want = _oracle_bits(t, normalize(tree_copy(q)))
+    np.testing.assert_array_equal(r1.bitmaps[0], want)
+    np.testing.assert_array_equal(r2.bitmaps[0], want)
+    assert r1.stats.max_qerror > 2.0
+    assert r2.stats.max_qerror < r1.stats.max_qerror
+    assert r2.stats.max_qerror < 1.5
+
+
+def test_drift_workload_differential_sweep():
+    """Appends shift the distribution while fixed-value queries keep
+    serving: every snapshot stays bit-identical to the numpy oracle, the
+    loop corrects estimates, and the one-bundled-sync contract holds."""
+    t, rng = _skewed_cat_table(n=16000, seed=9)
+    sess = QuerySession(t, planner="deepfish", engine="tape", batched=True,
+                        feedback_absorb=True)
+    fixed = And([Atom("cat", "eq", 0.0), Atom("x", "lt", 0.5)])
+    v_y = float(np.quantile(t["y"], 0.3))
+    drifting = And([Atom("y", "lt", v_y), Atom("x", "lt", 0.8)])
+    max_qerrs, syncs0 = [], 0
+    for round_ in range(5):
+        qs = [normalize(tree_copy(fixed)), normalize(tree_copy(drifting))]
+        r = sess.execute(qs)
+        for q, bm in zip(qs, r.bitmaps):
+            np.testing.assert_array_equal(bm, _oracle_bits(t, q))
+        max_qerrs.append(r.stats.max_qerror)
+        # the feedback drain rides the ONE bundled lockstep sync
+        assert r.backend.host_syncs == syncs0 + 1
+        syncs0 = r.backend.host_syncs
+        # drift: append rows whose y is shifted +2 sigma — the realized
+        # selectivity of (y < v_y) keeps falling away from its history
+        cat = rng.choice(7, size=2000,
+                         p=[0.45, 0.2, 0.1, 0.1, 0.05, 0.05, 0.05])
+        t.append({"cat": cat.astype(np.float64),
+                  "x": rng.uniform(size=2000),
+                  "y": rng.normal(loc=2.0, size=2000)})
+    assert sess.feedback.full_observations > 0
+    # the crude eq estimate was corrected after the first serving
+    assert max_qerrs[0] > 2.0
+    assert max_qerrs[-1] < max_qerrs[0]
+
+
+def test_feedback_disabled_keeps_legacy_behavior():
+    t, _ = _skewed_cat_table(n=4000)
+    sess = QuerySession(t, planner="deepfish", engine="tape",
+                        feedback=False)
+    q = normalize(And([Atom("cat", "eq", 0.0), Atom("x", "lt", 0.5)]))
+    r = sess.execute([q])
+    assert sess.feedback is None
+    assert r.stats.feedback_observations == 0
+    assert r.stats.max_qerror == 0.0
+    np.testing.assert_array_equal(r.bitmaps[0], _oracle_bits(t, q))
