@@ -34,8 +34,10 @@ from .forest import make_forest_table
 from .ingest import ZoneMap
 from .multiquery import (BatchResult, BatchStats, LRUPlanCache, PlanCacheStats,
                          QuerySession)
+from .drainer import BackgroundDrainer, DrainPolicy, LatencyWindow
 from .queries import random_query_suite, random_tree
-from .stream import StreamFuture, StreamSession, StreamStats
+from .stream import (StreamBackpressure, StreamClosed, StreamFuture,
+                     StreamQueryError, StreamSession, StreamStats)
 from .table import (DictColumn, Table, annotate_selectivities,
                     empirical_selectivity, rewrite_string_atoms)
 
@@ -48,4 +50,6 @@ __all__ = [
     "ZoneMap", "random_tree", "random_query_suite",
     "QuerySession", "LRUPlanCache", "BatchResult", "BatchStats",
     "PlanCacheStats", "StreamFuture", "StreamSession", "StreamStats",
+    "StreamQueryError", "StreamClosed", "StreamBackpressure",
+    "BackgroundDrainer", "DrainPolicy", "LatencyWindow",
 ]

@@ -84,6 +84,7 @@ from ..core.feedback import group_selectivity
 from ..core.predicate import (Atom, ZONE_ALL, ZONE_MAYBE, ZONE_NONE,
                               atom_key, decode_column)
 from ..core.sets import SetBackend, Stats
+from ..runtime import faults as _faults
 from ..core.tape import (ATOM, CHAIN, CMP_OPCODE, EMPTY, FULL, IN_OPCODE,
                          OP_AND, OP_ANDNOT, OP_OR, PlanTape, SETOP,
                          device_atom, lookup_atom, op_observation_meta)
@@ -536,6 +537,7 @@ class DeviceTapeBackend(SetBackend):
         must have proven the append via :meth:`Table.delta_since`.  Returns
         the bytes uploaded."""
         import jax.numpy as jnp
+        _faults.trip("device.upload", backend=self)
         if self._zones:
             self._zones.clear()
         n_new = self.table.n_records
@@ -847,6 +849,7 @@ class DeviceTapeBackend(SetBackend):
         bundled transfer — the query/batch's single host sync."""
         import jax
         import jax.numpy as jnp
+        _faults.trip("device.dispatch", backend=self, where="materialize")
         flats = [self._flat_device(d) for d in sets]
         if self._pend_records:
             rec = jnp.stack(self._pend_records)
@@ -1106,6 +1109,7 @@ class DeviceTapeBackend(SetBackend):
         at the end.
         """
         import jax.numpy as jnp
+        _faults.trip("device.dispatch", backend=self, where="run_tape")
         self.last_tape = tape
         cols, values, lmasks, meta, device_ok = self._tape_bindings(tape)
         atoms = tape.tree.atoms

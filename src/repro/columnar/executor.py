@@ -553,7 +553,8 @@ def run_query(tree: PredicateTree, table: Table, planner: str = "shallowfish",
         be = backend or DeviceTapeBackend(
             table, kernels="pallas" if engine == "tape-pallas" else "jax")
         result = be.run_tape(compile_tape(plan))
-        return result, plan, be
+        lw = table.live_words()
+        return (result if lw is None else result & lw), plan, be
     if engine == "numpy":
         if backend is not None and not isinstance(backend, BitmapBackend):
             raise ValueError("engine 'numpy' needs a BitmapBackend")
@@ -566,4 +567,8 @@ def run_query(tree: PredicateTree, table: Table, planner: str = "shallowfish",
                              "JaxBlockBackend")
         be = backend or JaxBlockBackend(table, engine=engine)
     result = execute_plan(plan, be)
-    return result, plan, be
+    # tombstone deletes apply at materialize time on every engine: the
+    # engines evaluate the predicate over all physical rows (caches stay
+    # prefix-valid), the live mask ANDs the dead rows away at the end
+    lw = table.live_words()
+    return (result if lw is None else result & lw), plan, be

@@ -331,3 +331,33 @@ def append_rows(table: Table, rows: Dict[str, Any]) -> int:
     for name in recoded:
         table._log_mutation("col", name)
     return old_n
+
+
+def compact_table(table: Table) -> int:
+    """Implementation of :meth:`Table.compact`: physically drop tombstoned
+    rows.  Compaction is the one mutation the block-delta contract cannot
+    express — rows *move* — so it bumps ``version`` and logs a ``compact``
+    mutation that makes ``delta_since`` answer None for every older
+    snapshot: atom-result caches, device uploads, zone maps and quantile
+    sketches all drop and rebuild against the compacted table through the
+    existing invalidation question.  (Tombstoning itself is the cheap half:
+    it never moves rows, so it bumps nothing.)  Returns rows removed."""
+    ts = table._tombstones
+    if ts is None or not ts.any():
+        return 0
+    live = np.ones(table.n_records, dtype=bool)
+    live[: len(ts)] &= ~ts
+    removed = int((~live).sum())
+    table.columns = {name: col[live] for name, col in table.columns.items()}
+    table.n_records = int(live.sum())
+    table._tombstones = None
+    table._live_words = None
+    # every derived structure described the pre-compaction row space
+    table._stats.clear()
+    table._dicts.clear()
+    table._zones.clear()
+    table._qsketch.clear()
+    table.version += 1
+    table._log_mutation("compact", removed)
+    table.tombstone_epoch += 1
+    return removed

@@ -51,6 +51,7 @@ from ..core.predicate import (Atom, DICT_SEL_STEP, Node, PredicateTree,
                               atom_key, canonical_key, decode_column,
                               normalize, tree_copy)
 from ..core.sets import SetBackend
+from ..runtime import faults as _faults
 from .executor import BitmapBackend, JaxBlockBackend
 from .table import Table, annotate_selectivities, rewrite_string_atoms
 
@@ -551,6 +552,17 @@ class QuerySession:
         self._backend_version = fp
         return be
 
+    def reset_backend(self) -> None:
+        """Drop the engine backend and every backend-resident cache (the
+        post-device-fault recovery hook: after an ``XlaRuntimeError`` the
+        backend's device buffers and pending counter queues are suspect).
+        The next ``execute`` rebuilds from the table — a full re-upload,
+        never wrong results."""
+        self._backend = None
+        self._backend_version = None
+        self._atom_cache.clear()
+        self._cache_version = self._table_fingerprint()
+
     def _extend_atom_cache(self, from_row: int, backend: SetBackend,
                            stats: BatchStats) -> None:
         """Splice appended rows into the persisted atom-result cache: each
@@ -637,6 +649,11 @@ class QuerySession:
         """Plan + execute a batch; returns per-query record bitmaps (in
         input order) plus the batch's sharing statistics."""
         t0 = time.perf_counter()
+        # fault-plane hook: a test can poison one query of the batch (the
+        # stream layer's quarantine must fail only that query's future)
+        if _faults.fault_plane().active:
+            for i, q in enumerate(queries):
+                _faults.trip("query.plan", index=i, query=q)
         if self.annotate:
             # work on private copies: annotation overwrites atom
             # selectivities, and caller-supplied trees (hand-set stats, UDF
@@ -739,6 +756,12 @@ class QuerySession:
                 bitmaps[0], np.ndarray):
             # device engines: ONE bundled host sync for the whole batch
             bitmaps = inner.materialize(bitmaps)
+        lw = self.table.live_words()
+        if lw is not None:
+            # tombstone deletes: the engines evaluated over all physical
+            # rows (their caches stay prefix-valid — deletes never move
+            # rows); dead rows drop here, at materialize time
+            bitmaps = [b & lw for b in bitmaps]
         stats.physical_atoms = (inner.stats.atom_applications
                                 - base_applications)
         stats.upload_bytes = (getattr(inner, "uploaded_bytes", 0)

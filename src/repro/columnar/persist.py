@@ -1,0 +1,203 @@
+"""Warm restarts: plan/tape/feedback caches that survive the process.
+
+A cold server pays three stacked costs on its first drain: planning
+(trace / chain-fusion / DCE / slot allocation per query shape), jit
+tracing of the whole-tape program, and XLA compilation (~1.5 s at 1M rows,
+``BENCH_device.json`` ``tape_cold_ms``).  All three are pure functions of
+inputs that survive restarts unchanged, so all three persist:
+
+* **plan-cache entries** — each ``LRUPlanCache`` entry (canonical plan
+  positions + the compiled :class:`~repro.core.tape.PlanTape`) is keyed by
+  ``(planner, n_atoms, repr(cost model), canonical_key)``.  Every part of
+  that key is content-derived — ``canonical_key`` hashes tree shape +
+  quantized statistics, never object identities — so a restarted process
+  computes byte-equal keys for the same traffic and hits immediately
+  (``tape_cache_hits > 0`` on the first drain).  Tapes are stored as
+  ``(root node, ops, ...)`` and the :class:`PredicateTree` is re-derived on
+  load: the tree's internal indices are ``id()``-keyed and must never be
+  pickled.  Entries whose trees hold opaque UDF callables are skipped.
+* **the FeedbackStore** — per-key EWMA selectivities and traffic stats
+  (the PR 6 loop), so corrected estimates and the share-margin discount
+  survive restarts instead of relearning from scratch.
+* **jitted programs** — via JAX's persistent compilation cache
+  (``jax_compilation_cache_dir``): the whole-tape programs' XLA
+  executables are content-addressed by HLO hash, so a restarted server's
+  first drain skips compilation too (measured ≥3x in the ``--slo`` bench).
+
+Loads are best-effort by design: a corrupt/stale/foreign cache file must
+never take a serving process down, so every reader validates a format tag
+and the quantization parameters and silently cold-starts on mismatch.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+from typing import Optional
+
+from ..core.feedback import FeedbackStore
+from ..core.predicate import PredicateTree
+from ..core.tape import PlanTape
+from .multiquery import LRUPlanCache, QuerySession
+
+#: bump when the entry layout changes — old files then cold-start cleanly
+FORMAT = 1
+
+PLAN_CACHE_FILE = "plan_cache.pkl"
+FEEDBACK_FILE = "feedback.pkl"
+XLA_CACHE_DIR = "xla"
+
+
+def _tape_state(tape: PlanTape) -> Optional[dict]:
+    """Picklable form of a compiled tape, or None when it cannot persist
+    (opaque UDF callables).  The tree is stored as its root node only —
+    ``PredicateTree``'s lookup tables are ``id()``-keyed and meaningless
+    in another process; reload re-indexes the root, reassigning the same
+    tree-order atom ids the ops reference."""
+    if any(a.fn is not None for a in tape.tree.atoms):
+        return None
+    return {"root": tape.tree.root, "ops": tape.ops, "result": tape.result,
+            "n_slots": tape.n_slots, "planner": tape.planner}
+
+
+def _tape_from_state(st: dict) -> PlanTape:
+    return PlanTape(tree=PredicateTree(st["root"]), ops=st["ops"],
+                    result=st["result"], n_slots=st["n_slots"],
+                    planner=st["planner"])
+
+
+def save_plan_cache(cache: LRUPlanCache, path: str) -> int:
+    """Serialize the cache's entries (LRU order preserved); returns the
+    number written.  Entries that cannot pickle (UDF trees) are skipped —
+    they re-plan on first touch after restart, exactly like a miss."""
+    entries = []
+    for full_key, ent in cache._entries.items():
+        tape_st = _tape_state(ent["tape"]) if ent["tape"] is not None \
+            else None
+        if ent["tape"] is not None and tape_st is None:
+            continue
+        try:
+            blob = pickle.dumps(
+                (full_key, ent["cpos"], ent["inv"], tape_st),
+                protocol=pickle.HIGHEST_PROTOCOL)
+        except Exception:
+            continue                    # unpicklable key/value: skip entry
+        entries.append(blob)
+    payload = {"format": FORMAT, "sel_step": cache.sel_step,
+               "cost_step": cache.cost_step,
+               "dict_sel_step": cache.dict_sel_step, "entries": entries}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+    os.replace(tmp, path)               # atomic: a crash never corrupts
+    return len(entries)
+
+
+def load_plan_cache(cache: LRUPlanCache, path: str) -> int:
+    """Load persisted entries into ``cache``; returns the number loaded
+    (0 on any mismatch — missing file, format bump, different quantization
+    parameters: keys computed under another bucketing would never match,
+    so the load degrades to a clean cold start)."""
+    try:
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+    except Exception:       # corrupt/foreign file: cold start, never crash
+        return 0
+    if (not isinstance(payload, dict) or payload.get("format") != FORMAT
+            or payload.get("sel_step") != cache.sel_step
+            or payload.get("cost_step") != cache.cost_step
+            or payload.get("dict_sel_step") != cache.dict_sel_step):
+        return 0
+    loaded = 0
+    for blob in payload.get("entries", []):
+        try:
+            full_key, cpos, inv, tape_st = pickle.loads(blob)
+            tape = _tape_from_state(tape_st) if tape_st is not None else None
+        except Exception:
+            continue
+        cache._entries[full_key] = {"cpos": cpos, "inv": inv, "tape": tape,
+                                    "bad": 0}
+        loaded += 1
+        if len(cache._entries) > cache.capacity:
+            cache._entries.popitem(last=False)
+    return loaded
+
+
+def save_feedback(store: FeedbackStore, path: str) -> int:
+    """Persist the feedback store's learned state; returns keys written."""
+    payload = {"format": FORMAT, "store": store}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+    os.replace(tmp, path)
+    return len(store._keys)
+
+
+def load_feedback(path: str) -> Optional[FeedbackStore]:
+    """The persisted store, or None when absent/unreadable/stale."""
+    try:
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+    except Exception:       # corrupt/foreign file: cold start, never crash
+        return None
+    if not isinstance(payload, dict) or payload.get("format") != FORMAT:
+        return None
+    store = payload.get("store")
+    return store if isinstance(store, FeedbackStore) else None
+
+
+_XLA_CACHE_WIRED: Optional[str] = None
+
+
+def enable_compilation_cache(cache_dir: str) -> bool:
+    """Point JAX's persistent compilation cache at ``cache_dir`` so jitted
+    whole-tape programs persist across processes (content-addressed by HLO
+    hash — restarts with unchanged tape structure skip XLA entirely).
+    Thresholds drop to zero: serving cares about the 1.5 s cold tape, not
+    disk frugality.  Global (JAX config is process-wide); repeat calls
+    with the same directory are no-ops, a different directory rewires."""
+    global _XLA_CACHE_WIRED
+    path = os.path.join(cache_dir, XLA_CACHE_DIR)
+    if _XLA_CACHE_WIRED == path:
+        return True
+    try:
+        import jax
+        os.makedirs(path, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        try:
+            jax.config.update("jax_persistent_cache_enable_xla_caches",
+                              "all")
+        except Exception:
+            pass                    # older jax: core cache still works
+    except Exception:
+        return False
+    _XLA_CACHE_WIRED = path
+    return True
+
+
+def save_session_caches(session: QuerySession, cache_dir: str) -> dict:
+    """Flush a session's warm state to ``cache_dir``; returns counts."""
+    os.makedirs(cache_dir, exist_ok=True)
+    out = {"plans": save_plan_cache(
+        session.plan_cache, os.path.join(cache_dir, PLAN_CACHE_FILE))}
+    if session.feedback is not None:
+        out["feedback_keys"] = save_feedback(
+            session.feedback, os.path.join(cache_dir, FEEDBACK_FILE))
+    return out
+
+
+def load_session_caches(session: QuerySession, cache_dir: str,
+                        compilation_cache: bool = True) -> dict:
+    """Warm a fresh session from ``cache_dir`` (and wire the persistent
+    compilation cache); returns counts.  Safe on an empty/missing
+    directory — everything cold-starts."""
+    out = {"plans": load_plan_cache(
+        session.plan_cache, os.path.join(cache_dir, PLAN_CACHE_FILE))}
+    fb = load_feedback(os.path.join(cache_dir, FEEDBACK_FILE))
+    if fb is not None and session.feedback is not None:
+        session.feedback.__dict__.update(fb.__dict__)
+        out["feedback_keys"] = len(fb._keys)
+    if compilation_cache:
+        out["compilation_cache"] = enable_compilation_cache(cache_dir)
+    return out

@@ -1,63 +1,111 @@
-"""Async query admission over an append-only table.
+"""Async query admission over an append-only table, hardened for serving.
 
 :class:`StreamSession` is the serving front of the streaming-ingest
 subsystem: queries are *admitted* into an in-flight batch
 (:meth:`submit` returns a :class:`StreamFuture` immediately) while rows
-keep appending (:meth:`append`), and the batch *drains* through a
-:class:`~repro.columnar.multiquery.QuerySession` — by default the
-device-resident lockstep tape executor, whose one-bundled-host-sync-
-per-batch contract is untouched because a drain is just one
-``QuerySession.execute`` call.
+keep appending (:meth:`append`) and dying (:meth:`delete`), and batches
+*drain* through a :class:`~repro.columnar.multiquery.QuerySession` — by
+default the device-resident lockstep tape executor, whose
+one-bundled-host-sync-per-batch contract is untouched because a drain is
+just one ``QuerySession.execute`` call.
 
 Consistency contract — **snapshot-at-drain**: every query in a drained
 batch evaluates against the table state at drain time (the paper's
-optimality results are per-snapshot; interleaved appends move which
-snapshot a query sees, never its correctness).  A query submitted before
-an append but drained after it therefore *does* see the appended rows.
-Callers needing a bound use :meth:`drain` explicitly or ``max_pending``.
+optimality results are per-snapshot; interleaved appends/deletes move
+which snapshot a query sees, never its correctness).  Each resolved
+future records its snapshot (row count + live-row mask), so results stay
+auditable after the table moves on.
 
-Drains are cheap under churn because of the block-delta machinery
-underneath: the session's atom-result cache splices appended rows into
-cached bitmaps instead of re-evaluating the table, the device backend
-uploads only dirty tail blocks, and plan-cache hits rebind compiled
-tapes (``BatchStats.delta_reuse_ratio`` / ``upload_bytes`` /
-``tape_cache_hits`` make all three visible per batch).
+Serving hardening on top of the cooperative PR 4 layer:
 
-The layer is cooperative and thread-safe: ``submit`` / ``append`` /
-``drain`` may be called from multiple threads (one lock, no background
-thread of its own); ``StreamFuture.result()`` triggers a drain when its
-batch is still pending, so single-threaded callers never deadlock.
+* **Background drainer with SLOs** (``background=True``): a daemon
+  thread (:class:`~repro.columnar.drainer.BackgroundDrainer`) drains on
+  deadlines — a batch goes when its oldest query exceeds the lane's wait
+  target or total pending hits ``max_pending``.  Two priority lanes:
+  ``interactive`` (short deadline, may drain alone, preempting) and
+  ``bulk`` (long deadline; when due, waiting interactive queries ride
+  along).  Admission past ``max_queue`` blocks (or raises
+  :class:`StreamBackpressure` with ``overflow="raise"``).  Admit-to-
+  result latency lands in ``stats.latency`` (p50/p99).
+* **Graceful degradation**: a failed drain walks a recovery ladder —
+  transient faults retry with exponential backoff; device faults reset
+  the device backend and re-run the *whole batch* on a host (numpy)
+  fallback session (bit-identical results, ``stats.degraded_batches``);
+  anything still failing quarantines per query, so a poisoned plan fails
+  only its own future (:class:`StreamQueryError`, original exception as
+  ``__cause__``) while the rest of the batch resolves normally.  Drains
+  never raise; failures surface through futures.
+* **Warm restarts** (``cache_dir=...``): plan-cache entries, compiled
+  tapes, the feedback store, and JAX's persistent compilation cache are
+  loaded at construction and flushed at :meth:`close` (see
+  :mod:`~repro.columnar.persist`), so a restarted server's first drain
+  rebinds cached tapes instead of replanning and recompiling.
+* **Tombstone deletes**: :meth:`delete` marks rows dead without bumping
+  ``table.version`` — atom caches, device uploads, and zone maps stay
+  valid; the live mask is ANDed into every result at materialize time.
+  ``auto_compact=<fraction>`` compacts when the dead fraction crosses
+  the threshold (the only row-moving mutation; invalidates caches
+  through the normal version/delta contract).
+
+Without ``background=True`` the layer stays cooperative exactly as
+before: ``submit`` drains inline at ``max_pending`` and
+``StreamFuture.result()`` drains the pending batch itself, so
+single-threaded callers never deadlock.  With a drainer running,
+``result()`` just waits — the thread owns draining.
 """
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, NamedTuple, Optional, Tuple, Union
 
 import numpy as np
 
 from ..core.predicate import Node, PredicateTree
+from ..runtime import faults as _faults
 from .bitmap import unpack_bits
+from .drainer import LANES, BackgroundDrainer, DrainPolicy, LatencyWindow
 from .multiquery import BatchResult, BatchStats, QuerySession
 from .table import Table
+
+
+class StreamClosed(RuntimeError):
+    """Raised by submit/append/delete after :meth:`StreamSession.close`."""
+
+
+class StreamBackpressure(RuntimeError):
+    """Raised by ``submit`` past ``max_queue`` under ``overflow="raise"``."""
+
+
+class StreamQueryError(RuntimeError):
+    """One query's failure, isolated from its batch.
+
+    Every failed future gets its *own* instance wrapping the underlying
+    error as ``__cause__`` — batch-mates never share an exception object,
+    and a traceback always names the query's index and lane."""
 
 
 class StreamFuture:
     """Handle for one admitted query; resolves when its batch drains."""
 
-    def __init__(self, session: "StreamSession"):
+    def __init__(self, session: "StreamSession", lane: str = "bulk"):
         self._session = session
+        self.lane = lane
         self._event = threading.Event()
         self._bitmap: Optional[np.ndarray] = None
         self._n_records = 0
+        self._live_words: Optional[np.ndarray] = None
         self._exc: Optional[BaseException] = None
 
     def done(self) -> bool:
         return self._event.is_set()
 
-    def _resolve(self, bitmap: np.ndarray, n_records: int) -> None:
+    def _resolve(self, bitmap: np.ndarray, n_records: int,
+                 live_words: Optional[np.ndarray] = None) -> None:
         self._bitmap = bitmap
         self._n_records = n_records
+        self._live_words = live_words
         self._event.set()
 
     def _fail(self, exc: BaseException) -> None:
@@ -66,8 +114,10 @@ class StreamFuture:
 
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
         """The query's packed record bitmap (over the snapshot its batch
-        drained against).  Triggers a drain if the batch is still pending —
-        a single-threaded caller never blocks."""
+        drained against).  With a background drainer running this waits —
+        up to ``timeout`` seconds — for the deadline drain; without one it
+        drains the pending batch itself, so a single-threaded caller
+        never blocks."""
         if not self._event.is_set():
             self._session._drain_for(self)
         if not self._event.wait(timeout):
@@ -85,6 +135,19 @@ class StreamFuture:
         """Rows in the snapshot the query was evaluated against."""
         return self._n_records
 
+    @property
+    def snapshot(self) -> Tuple[int, Optional[np.ndarray]]:
+        """``(n_records, live_words)`` at drain time — enough to replay
+        this query against an append-only table and reproduce the bitmap
+        bit-for-bit (live_words is None when nothing was tombstoned)."""
+        return self._n_records, self._live_words
+
+
+class _Pending(NamedTuple):
+    query: Union[Node, PredicateTree]
+    fut: StreamFuture
+    t_admit: float
+
 
 @dataclass
 class StreamStats:
@@ -96,6 +159,22 @@ class StreamStats:
     appends: int = 0
     appended_rows: int = 0
     max_batch: int = 0
+    # tombstone deletes / compaction
+    deletes: int = 0
+    deleted_rows: int = 0
+    compactions: int = 0
+    compacted_rows: int = 0
+    # degradation ladder
+    retries: int = 0
+    degraded_batches: int = 0
+    quarantined_queries: int = 0
+    failed: int = 0
+    # admission control
+    backpressure_waits: int = 0
+    backpressure_rejects: int = 0
+    # admit-to-result latency (SLO readout; milliseconds)
+    latency: LatencyWindow = field(default_factory=LatencyWindow,
+                                   repr=False)
     # aggregated from the underlying QuerySession's per-batch stats
     atoms_delta_extended: int = 0
     delta_rows_evaluated: float = 0.0
@@ -117,6 +196,14 @@ class StreamStats:
         total = self.delta_rows_reused + self.delta_rows_evaluated
         return self.delta_rows_reused / total if total else 0.0
 
+    @property
+    def latency_p50_ms(self) -> float:
+        return self.latency.p50
+
+    @property
+    def latency_p99_ms(self) -> float:
+        return self.latency.p99
+
     def absorb(self, bs: BatchStats) -> None:
         self.batches += 1
         self.completed += bs.n_queries
@@ -133,96 +220,371 @@ class StreamStats:
 
 
 class StreamSession:
-    """Admit queries into an in-flight batch interleaved with appends.
+    """Admit queries into an in-flight batch interleaved with appends
+    and deletes.
 
     Parameters mirror :class:`QuerySession` (``engine="tape"`` +
     ``batched=True`` by default: drains run the device-resident lockstep
-    executor, one bundled host sync per batch); ``max_pending`` bounds the
-    in-flight batch — admission past it drains synchronously.
+    executor, one bundled host sync per batch).  Serving knobs:
+
+    ``max_pending``
+        in-flight batch bound; admission at it drains (inline without a
+        drainer, immediately-by-deadline with one).
+    ``background`` / ``policy``
+        start a :class:`~repro.columnar.drainer.BackgroundDrainer` with
+        the given :class:`~repro.columnar.drainer.DrainPolicy` (lane wait
+        targets).
+    ``max_queue`` / ``overflow``
+        total-pending bound past which ``submit`` blocks (``"block"``,
+        default) or raises :class:`StreamBackpressure` (``"raise"``).
+        Defaults to ``8 * max_pending`` when a drainer runs, unbounded
+        otherwise (inline drains already bound cooperative sessions).
+    ``max_retries`` / ``retry_backoff_s``
+        transient-fault retry budget for the degradation ladder.
+    ``cache_dir``
+        warm-restart directory (see :mod:`~repro.columnar.persist`);
+        loaded now, flushed at :meth:`close` / :meth:`flush_caches`.
+    ``auto_compact``
+        dead-row fraction above which :meth:`delete` triggers
+        compaction (None = manual only).
     """
 
     def __init__(self, table: Table, planner: str = "deepfish",
                  engine: str = "tape", max_pending: int = 64,
-                 batched: Union[bool, str] = True, **session_kwargs):
+                 batched: Union[bool, str] = True,
+                 background: bool = False,
+                 policy: Optional[DrainPolicy] = None,
+                 max_queue: Optional[int] = None,
+                 overflow: str = "block",
+                 max_retries: int = 2, retry_backoff_s: float = 0.01,
+                 cache_dir: Optional[str] = None,
+                 auto_compact: Optional[float] = None,
+                 **session_kwargs):
         if max_pending < 1:
             raise ValueError("max_pending must be >= 1")
+        if overflow not in ("block", "raise"):
+            raise ValueError("overflow must be 'block' or 'raise'")
+        if max_queue is None and background:
+            max_queue = 8 * max_pending
+        if max_queue is not None and max_queue < max_pending:
+            raise ValueError("max_queue must be >= max_pending")
         self.table = table
         self.max_pending = max_pending
+        self.max_queue = max_queue
+        self.overflow = overflow
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.auto_compact = auto_compact
+        self.cache_dir = cache_dir
         # the QuerySession's share_margin default (break-even) applies
         # as-is: the margin is traffic-aware — the session's FeedbackStore
         # tracks cross-drain repeat rates per atom key and discounts the
         # break-even bar by each key's expected future appearances, so hot
         # streaming atoms promote on evidence (their |R| touch amortizes
         # across future drains at delta-splice cost) while one-off atoms
-        # still face the full per-batch check.  The old behavior here —
-        # share_margin=None, promote *everything* — paid the |R| touch for
-        # atoms that never reappeared.
+        # still face the full per-batch check.
         self.session = QuerySession(table, planner=planner, engine=engine,
                                     batched=batched, **session_kwargs)
+        self.restore_info: Optional[dict] = None
+        if cache_dir:
+            from . import persist as _persist
+            self.restore_info = _persist.load_session_caches(
+                self.session, cache_dir)
         self.stats = StreamStats()
         self.last_result: Optional[BatchResult] = None
-        self._lock = threading.RLock()
-        self._pending: List[tuple] = []     # [(query, future), ...]
+        # two locks, strict order drain -> admit: _drain_lock serializes
+        # everything that touches table state or executes (drain, append,
+        # delete, close); _admit guards the pending lanes, stats, and the
+        # backpressure/drainer condition.  Nothing executes while holding
+        # _admit, so submit never stalls behind a running batch.
+        self._drain_lock = threading.Lock()
+        self._admit = threading.Condition(threading.Lock())
+        self._lanes: Dict[str, List[_Pending]] = {ln: [] for ln in LANES}
+        self._closed = False
+        self._final_result: Optional[BatchResult] = None
+        self._fallback_session: Optional[QuerySession] = None
+        self._drainer: Optional[BackgroundDrainer] = None
+        if background:
+            self._drainer = BackgroundDrainer(self, policy or DrainPolicy())
+            self._drainer.start()
 
+    # -- introspection ---------------------------------------------------------
     @property
     def pending(self) -> int:
-        with self._lock:
-            return len(self._pending)
+        with self._admit:
+            return self._total_pending_locked()
+
+    @property
+    def pending_by_lane(self) -> Dict[str, int]:
+        with self._admit:
+            return {ln: len(pend) for ln, pend in self._lanes.items()}
+
+    @property
+    def closed(self) -> bool:
+        with self._admit:
+            return self._closed
+
+    def _total_pending_locked(self) -> int:
+        return sum(len(pend) for pend in self._lanes.values())
 
     # -- admission -------------------------------------------------------------
-    def submit(self, query: Union[Node, PredicateTree]) -> StreamFuture:
-        """Admit a query; returns immediately with a future that resolves
-        at the next drain (which this call performs itself when the
-        in-flight batch reaches ``max_pending``)."""
-        fut = StreamFuture(self)
-        with self._lock:
+    def submit(self, query: Union[Node, PredicateTree],
+               lane: str = "bulk") -> StreamFuture:
+        """Admit a query into ``lane``; returns immediately with a future
+        that resolves at the next drain of that lane.  Cooperative
+        sessions drain inline at ``max_pending``; with a drainer the
+        notify below re-arms its deadline instead (an interactive submit
+        into an idle session drains within ``interactive_wait_ms``)."""
+        if lane not in self._lanes:
+            raise ValueError(f"unknown lane {lane!r} (expected one of "
+                             f"{LANES})")
+        fut = StreamFuture(self, lane)
+        with self._admit:
+            self._check_open_locked()
+            if self.max_queue is not None:
+                self._admission_control_locked()
             self.stats.submitted += 1
-            self._pending.append((query, fut))
-            if len(self._pending) >= self.max_pending:
-                self._drain_locked()
+            self._lanes[lane].append(_Pending(query, fut,
+                                              time.perf_counter()))
+            inline = (self._drainer is None
+                      and self._total_pending_locked() >= self.max_pending)
+            self._admit.notify_all()
+        if inline:
+            self._drain_lanes(LANES)
         return fut
+
+    def _check_open_locked(self) -> None:
+        if self._closed:
+            raise StreamClosed("stream session is closed")
+
+    def _admission_control_locked(self) -> None:
+        """Bounded admission: block (waking on drains) or raise when the
+        total pending backlog is at ``max_queue``."""
+        if self._total_pending_locked() < self.max_queue:
+            return
+        if self.overflow == "raise":
+            self.stats.backpressure_rejects += 1
+            raise StreamBackpressure(
+                f"{self._total_pending_locked()} queries pending "
+                f"(max_queue={self.max_queue})")
+        self.stats.backpressure_waits += 1
+        while self._total_pending_locked() >= self.max_queue:
+            self._check_open_locked()
+            # bounded wait guards against a lost notify; drains
+            # notify_all after swapping the lanes out
+            self._admit.wait(0.05)
+        self._check_open_locked()
 
     def append(self, rows: Dict) -> int:
         """Interleave an append with admission: lands in the table as a
         block-aligned delta (see :meth:`Table.append`); queries draining
         *after* this call see the rows (snapshot-at-drain)."""
-        with self._lock:
+        with self._drain_lock:
+            with self._admit:
+                self._check_open_locked()
             start = self.table.append(rows)
-            self.stats.appends += 1
-            self.stats.appended_rows += self.table.n_records - start
+            with self._admit:
+                self.stats.appends += 1
+                self.stats.appended_rows += self.table.n_records - start
             return start
+
+    def delete(self, rows) -> int:
+        """Tombstone rows (indices or a boolean mask — see
+        :meth:`Table.delete`); queries draining *after* this call exclude
+        them (snapshot-at-drain).  No caches are invalidated — the live
+        mask applies at materialize time.  When ``auto_compact`` is set
+        and the dead fraction crosses it, the table compacts (the
+        version-bumping, cache-invalidating path).  Returns the number of
+        rows newly tombstoned."""
+        with self._drain_lock:
+            with self._admit:
+                self._check_open_locked()
+            new = self.table.delete(rows)
+            removed = 0
+            if self.auto_compact is not None:
+                removed = self.table.maybe_compact(self.auto_compact)
+            with self._admit:
+                self.stats.deletes += 1
+                self.stats.deleted_rows += new
+                if removed:
+                    self.stats.compactions += 1
+                    self.stats.compacted_rows += removed
+            return new
+
+    def compact(self) -> int:
+        """Compact now (see :meth:`Table.compact`); returns rows removed."""
+        with self._drain_lock:
+            removed = self.table.compact()
+            with self._admit:
+                if removed:
+                    self.stats.compactions += 1
+                    self.stats.compacted_rows += removed
+            return removed
 
     # -- draining --------------------------------------------------------------
     def drain(self) -> Optional[BatchResult]:
-        """Execute the in-flight batch now (one ``QuerySession.execute`` =
-        one lockstep run, one bundled sync on the device engines); resolves
-        every pending future.  Returns the batch result, or None when
-        nothing was pending."""
-        with self._lock:
-            return self._drain_locked()
+        """Execute everything in flight now (one ``QuerySession.execute``
+        = one lockstep run, one bundled sync on the device engines);
+        resolves every pending future.  Returns the primary batch result
+        (the fallback's when the batch degraded, None when nothing was
+        pending or the batch ended in per-query quarantine — failures
+        surface through the futures, never from here)."""
+        return self._drain_lanes(LANES)
 
     def _drain_for(self, fut: StreamFuture) -> None:
-        with self._lock:
-            if not fut.done():
-                self._drain_locked()
+        if self._drainer is not None and self._drainer.running:
+            return                      # the drainer's deadline owns it
+        self._drain_lanes(LANES)
 
-    def _drain_locked(self) -> Optional[BatchResult]:
-        if not self._pending:
+    def _drain_lanes(self, lanes: Tuple[str, ...]
+                     ) -> Optional[BatchResult]:
+        with self._drain_lock:
+            with self._admit:
+                batch: List[_Pending] = []
+                for lane in lanes:
+                    pend = self._lanes[lane]
+                    if pend:
+                        batch.extend(pend)
+                        self._lanes[lane] = []
+                if not batch:
+                    return None
+                self._admit.notify_all()    # backpressure waiters: space
+            outcomes, res = self._execute_resilient(
+                [p.query for p in batch])
+            # snapshot stamped under _drain_lock: append/delete also hold
+            # it, so n_records/live_words here are exactly what executed
+            n = self.table.n_records
+            lw = self.table.live_words()
+            lw = lw.copy() if lw is not None else None
+            now = time.perf_counter()
+            with self._admit:
+                ok = 0
+                for p, out in zip(batch, outcomes):
+                    if isinstance(out, BaseException):
+                        p.fut._fail(out)
+                        self.stats.failed += 1
+                    else:
+                        p.fut._resolve(out, n, lw)
+                        self.stats.latency.add(
+                            (now - p.t_admit) * 1000.0)
+                        ok += 1
+                if res is not None:
+                    self.stats.absorb(res.stats)
+                    self.last_result = res
+                else:
+                    # quarantine drains have no single BatchStats
+                    self.stats.batches += 1
+                    self.stats.completed += ok
+                    self.stats.max_batch = max(self.stats.max_batch,
+                                               len(batch))
+            return res
+
+    # -- the degradation ladder ------------------------------------------------
+    def _fallback(self) -> QuerySession:
+        """Lazily-built host execution path: numpy engine (no device, no
+        jit) over the same table, sharing the plan cache so degraded
+        batches still reuse cached plan orders.  Feedback stays off — a
+        degraded batch is an emergency serving, not a statistics
+        source."""
+        if self._fallback_session is None:
+            self._fallback_session = QuerySession(
+                self.table, planner=self.session.planner, engine="numpy",
+                plan_cache=self.session.plan_cache, batched=False,
+                feedback=False)
+        return self._fallback_session
+
+    def _execute_resilient(self, queries: list
+                           ) -> Tuple[list, Optional[BatchResult]]:
+        """Run a batch down the recovery ladder.  Returns
+        ``(outcomes, result)`` where each outcome is a packed bitmap or a
+        :class:`StreamQueryError`, and ``result`` is the successful
+        :class:`BatchResult` (primary or fallback) or None after
+        quarantine.
+
+        Ladder: (1) primary execute, retrying transient faults with
+        exponential backoff; (2) on a device fault, reset the device
+        backend (so the *next* batch retries the device path) and re-run
+        this batch on the host fallback — bit-identical, counted in
+        ``stats.degraded_batches``; (3) anything else, or a fallback that
+        also fails, quarantines per query on the host engine so one
+        poisoned plan cannot take down its batch-mates."""
+        delay = self.retry_backoff_s
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                res = self.session.execute(queries)
+                return list(res.bitmaps), res
+            except BaseException as exc:
+                last = exc
+                if _faults.is_transient(exc) and attempt < self.max_retries:
+                    with self._admit:
+                        self.stats.retries += 1
+                    time.sleep(delay)
+                    delay *= 2.0
+                    continue
+                break
+        if _faults.is_device_fault(last):
+            try:
+                self.session.reset_backend()
+            except Exception:
+                pass            # a broken backend must not block recovery
+            try:
+                res = self._fallback().execute(queries)
+                with self._admit:
+                    self.stats.degraded_batches += 1
+                return list(res.bitmaps), res
+            except BaseException:
+                pass            # fall through to per-query quarantine
+        outcomes: list = []
+        quarantined = 0
+        fb = self._fallback()
+        for i, q in enumerate(queries):
+            try:
+                r = fb.execute([q])
+                outcomes.append(r.bitmaps[0])
+            except BaseException as qe:
+                err = StreamQueryError(
+                    f"query {i}/{len(queries)} failed in quarantine: "
+                    f"{type(qe).__name__}: {qe}")
+                err.__cause__ = qe
+                outcomes.append(err)
+                quarantined += 1
+        with self._admit:
+            self.stats.degraded_batches += 1
+            self.stats.quarantined_queries += quarantined
+        return outcomes, None
+
+    # -- persistence / lifecycle -----------------------------------------------
+    def flush_caches(self) -> Optional[dict]:
+        """Write warm-restart state to ``cache_dir`` now (also happens at
+        :meth:`close`); returns persist counts, or None without a
+        ``cache_dir``."""
+        if not self.cache_dir:
             return None
-        batch, self._pending = self._pending, []
-        try:
-            result = self.session.execute([q for q, _ in batch])
-        except BaseException as exc:
-            for _, fut in batch:
-                fut._fail(exc)
-            raise
-        n = self.table.n_records
-        for (_, fut), bm in zip(batch, result.bitmaps):
-            fut._resolve(bm, n)
-        self.stats.absorb(result.stats)
-        self.last_result = result
-        return result
+        from . import persist as _persist
+        return _persist.save_session_caches(self.session, self.cache_dir)
 
     def close(self) -> Optional[BatchResult]:
-        """Drain whatever is still in flight (alias for :meth:`drain`)."""
-        return self.drain()
+        """Shut the session down: stop the drainer, drain whatever is
+        still in flight (resolving every admitted future), and flush
+        warm-restart caches.  Idempotent — repeat calls return the final
+        drain's result; submit/append/delete afterwards raise
+        :class:`StreamClosed` (so do submits blocked on backpressure when
+        close wakes them)."""
+        with self._admit:
+            if self._closed:
+                return self._final_result
+            self._closed = True
+            self._admit.notify_all()    # fail blocked submits fast
+        if self._drainer is not None:
+            self._drainer.stop()
+        self._final_result = self._drain_lanes(LANES)
+        if self.cache_dir:
+            self.flush_caches()
+        return self._final_result
+
+    def __enter__(self) -> "StreamSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

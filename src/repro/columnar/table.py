@@ -211,6 +211,17 @@ class Table:
         self._mutlog_base = 0
         self._zones: Dict[Tuple[str, int], tuple] = {}
         self._qsketch: Dict[str, tuple] = {}
+        # tombstone deletes: a row-aligned boolean mask ANDed into every
+        # result at materialize time (None until the first delete).
+        # Tombstoning never moves rows, so it does NOT bump ``version`` —
+        # every prefix-keyed cache (atom results, device uploads, zone
+        # maps) stays valid and only the final live-mask AND changes.
+        # ``tombstone_epoch`` counts delete events for observers that want
+        # a cheap "did the live set move" check; ``compact()`` is the
+        # mutation that physically moves rows and bumps ``version``.
+        self._tombstones: Optional[np.ndarray] = None
+        self._live_words: Optional[np.ndarray] = None
+        self.tombstone_epoch = 0
 
     def __getitem__(self, name: str) -> np.ndarray:
         return self.columns[name]
@@ -248,6 +259,81 @@ class Table:
         from .ingest import append_rows
         return append_rows(self, rows)
 
+    # -- tombstone deletes -----------------------------------------------------
+    def delete(self, rows) -> int:
+        """Tombstone rows (a row-index array or a full-length boolean
+        mask).  Deleted rows vanish from every engine's results from the
+        next materialize on, but stay physically in place — appends,
+        cached atom bitmaps and device uploads are untouched (``version``
+        does not move).  Idempotent per row; returns the number of rows
+        newly tombstoned.  Physical removal is :meth:`compact`."""
+        rows = np.asarray(rows)
+        if rows.dtype == bool:
+            if len(rows) != self.n_records:
+                raise ValueError("tombstone mask length mismatch")
+            mask = rows
+        else:
+            if len(rows) and (rows.min() < 0
+                              or rows.max() >= self.n_records):
+                raise IndexError("tombstone index out of range")
+            mask = np.zeros(self.n_records, dtype=bool)
+            mask[rows] = True
+        if self._tombstones is None:
+            self._tombstones = np.zeros(self.n_records, dtype=bool)
+        elif len(self._tombstones) < self.n_records:
+            grown = np.zeros(self.n_records, dtype=bool)   # appends are live
+            grown[: len(self._tombstones)] = self._tombstones
+            self._tombstones = grown
+        new = int((mask & ~self._tombstones).sum())
+        if new:
+            self._tombstones |= mask
+            self._live_words = None
+            self.tombstone_epoch += 1
+        return new
+
+    @property
+    def n_deleted(self) -> int:
+        return int(self._tombstones.sum()) if self._tombstones is not None \
+            else 0
+
+    @property
+    def deleted_fraction(self) -> float:
+        return self.n_deleted / self.n_records if self.n_records else 0.0
+
+    def live_words(self) -> Optional[np.ndarray]:
+        """Packed ``u32`` live-row mask (bit set = row NOT tombstoned), or
+        None when nothing is deleted — the word array every result bitmap
+        is ANDed with at materialize time.  Cached until the live set or
+        the row count moves."""
+        if self._tombstones is None or not self._tombstones.any():
+            return None
+        if len(self._tombstones) < self.n_records:
+            # appends since the last delete: appended rows are live
+            grown = np.zeros(self.n_records, dtype=bool)
+            grown[: len(self._tombstones)] = self._tombstones
+            self._tombstones = grown
+            self._live_words = None
+        if self._live_words is None:
+            from .bitmap import pack_bits
+            self._live_words = pack_bits(~self._tombstones)
+        return self._live_words
+
+    def compact(self) -> int:
+        """Physically drop tombstoned rows.  This is the one mutation the
+        delta contract cannot express — rows move — so it bumps
+        ``version`` and logs a ``compact`` mutation that makes
+        :meth:`delta_since` answer None for every older snapshot: all
+        prefix-keyed caches drop and rebuild against the compacted table.
+        Returns the number of rows removed."""
+        from .ingest import compact_table
+        return compact_table(self)
+
+    def maybe_compact(self, threshold: float = 0.25) -> int:
+        """Compact when the tombstoned fraction exceeds ``threshold``
+        (the periodic-compaction policy serving layers call after
+        drains); returns rows removed (0 = below threshold)."""
+        return self.compact() if self.deleted_fraction > threshold else 0
+
     def delta_since(self, version: int,
                     columns: Optional[set] = None) -> Optional[int]:
         """Explain what changed since ``version``: the first changed row
@@ -273,6 +359,8 @@ class Table:
                 break
             if kind == "append":
                 boundary = min(boundary, payload)
+            elif kind == "compact":
+                return None    # rows moved: no column survives by prefix
             elif columns is None or payload in columns:
                 return None
         return boundary

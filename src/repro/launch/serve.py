@@ -22,6 +22,10 @@ def main():
                     help="demo the streaming admission layer: interleaved "
                          "metadata appends + async rule queries drained "
                          "through the batched tape executor")
+    ap.add_argument("--cache-dir", default=None,
+                    help="warm-restart cache directory for the --stream "
+                         "demo (plan/tape/feedback + XLA compilation "
+                         "caches persist across launches)")
     args = ap.parse_args()
 
     from ..configs import get_config, get_smoke
@@ -46,30 +50,51 @@ def main():
         Atom("prompt_tokens", "lt", 1024) & Atom("flagged", "eq", 0),  # small
     ]
     if args.stream:
-        # streaming admission: queries admitted while request metadata
-        # appends; each drain is one lockstep batch (one bundled sync on
-        # the tape engines), and appends reuse cached work below the
-        # append boundary (delta splicing + tail-block-only uploads)
-        from ..columnar import StreamSession, Table
+        # streaming admission through the hardened serving shell: a
+        # background drainer with priority lanes (the admit rule rides the
+        # interactive lane and preempts the bulk routing rules), appends
+        # reusing cached work below the append boundary, tombstone deletes
+        # for revoked requests, and — with --cache-dir — plan/tape/XLA
+        # caches that survive the process for warm restarts
+        from ..columnar import DrainPolicy, StreamSession, Table
         engine = args.engine if args.engine != "numpy" else "tape"
-        stream = StreamSession(Table(dict(requests)), engine=engine,
-                               max_pending=len(rules))
-        futs = [stream.submit(r) for r in rules]
-        admitted = futs[0].mask()                  # triggers the drain
-        print(f"stream drain 1: {admitted.sum()}/{stream.table.n_records} "
-              f"admitted")
-        for _ in range(3):
-            stream.append({k: rng.permutation(v) for k, v in
-                           requests.items()})
-            futs = [stream.submit(r) for r in rules]
-            stream.drain()
-        st = stream.stats
-        print(f"stream: {st.batches} batches (mean {st.mean_batch:.1f} "
-              f"queries), {st.appends} appends interleaved "
-              f"({st.appended_rows} rows); delta reuse "
-              f"{st.delta_reuse_ratio:.0%}, re-upload "
-              f"{st.upload_bytes / 1024:.0f} KiB, tape-cache hits "
-              f"{st.tape_cache_hits}")
+        with StreamSession(Table(dict(requests)), engine=engine,
+                           max_pending=8 * len(rules), background=True,
+                           policy=DrainPolicy(max_wait_ms=20.0,
+                                              interactive_wait_ms=2.0),
+                           cache_dir=args.cache_dir) as stream:
+            if args.cache_dir:
+                print(f"warm restore: {stream.restore_info}")
+            admit_fut = stream.submit(rules[0], lane="interactive")
+            futs = [stream.submit(r) for r in rules[1:]]
+            admit_fut.result(timeout=60.0)
+            print(f"stream drain 1: {admit_fut.mask().sum()}"
+                  f"/{stream.table.n_records} admitted")
+            for _ in range(3):
+                stream.append({k: rng.permutation(v) for k, v in
+                               requests.items()})
+                futs = [stream.submit(r) for r in rules]
+                for f in futs:
+                    f.result(timeout=60.0)
+            # revoked/expired requests tombstone out without moving rows
+            stream.delete(np.flatnonzero(requests["flagged"])[:2])
+            f = stream.submit(rules[0], lane="interactive")
+            f.result(timeout=60.0)
+            print(f"post-delete admit: {f.mask().sum()}"
+                  f"/{stream.table.n_records - stream.stats.deleted_rows} "
+                  f"live")
+            st = stream.stats
+            print(f"stream: {st.batches} batches (mean {st.mean_batch:.1f} "
+                  f"queries), {st.appends} appends interleaved "
+                  f"({st.appended_rows} rows), {st.deleted_rows} rows "
+                  f"tombstoned; delta reuse {st.delta_reuse_ratio:.0%}, "
+                  f"re-upload {st.upload_bytes / 1024:.0f} KiB, tape-cache "
+                  f"hits {st.tape_cache_hits}; admit-to-result p50 "
+                  f"{st.latency_p50_ms:.1f} ms / p99 "
+                  f"{st.latency_p99_ms:.1f} ms, degraded "
+                  f"{st.degraded_batches}")
+        if args.cache_dir:
+            print(f"caches flushed to {args.cache_dir} for the next launch")
 
     router = RequestRouter(rules, engine=args.engine)
     routes = router.route(requests)

@@ -1,5 +1,22 @@
 """Fault-tolerant runtime: step loop with checkpoint/restart, straggler
-watchdog, failure injection for tests."""
-from .loop import FailureInjector, StragglerWatchdog, TrainLoop
+watchdog, failure injection for tests, and the serving fault plane.
 
-__all__ = ["TrainLoop", "StragglerWatchdog", "FailureInjector"]
+``faults`` (the serving fault plane) is import-light and consumed by the
+columnar hot path; the training loop pulls in jax via the checkpoint
+manager, so it loads lazily on first attribute access.
+"""
+from .faults import (DeviceFault, FaultPlane, TransientFault, fault_plane,
+                     inject, is_device_fault, is_transient)
+
+__all__ = ["TrainLoop", "StragglerWatchdog", "FailureInjector",
+           "FaultPlane", "DeviceFault", "TransientFault", "fault_plane",
+           "inject", "is_device_fault", "is_transient"]
+
+_LOOP_EXPORTS = ("TrainLoop", "StragglerWatchdog", "FailureInjector")
+
+
+def __getattr__(name):
+    if name in _LOOP_EXPORTS:
+        from . import loop
+        return getattr(loop, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

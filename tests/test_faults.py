@@ -1,0 +1,195 @@
+"""Fault plane + the stream degradation ladder.
+
+The acceptance contract under test: an injected device failure mid-drain
+degrades that batch to the host bitmap engine with bit-identical results
+(``degraded_batches > 0``, zero lost futures); transient faults retry in
+place; a poisoned query fails only its own future; and the batch after a
+degraded one runs on the device path again.
+"""
+import numpy as np
+import pytest
+
+from repro.columnar import (StreamQueryError, StreamSession,
+                            make_forest_table, random_tree)
+from repro.core import Atom
+from repro.runtime import faults
+
+
+@pytest.fixture(autouse=True)
+def _clean_plane():
+    faults.fault_plane().clear()
+    yield
+    faults.fault_plane().clear()
+
+
+def _table(n=6000, seed=7):
+    return make_forest_table(n, n_dup=1, seed=seed)
+
+
+def _trees(table, k, seed=0):
+    rng = np.random.default_rng(seed)
+    return [random_tree(table, 5, 3, rng) for _ in range(k)]
+
+
+# -- fault plane unit behavior ------------------------------------------------
+
+def test_fault_plane_times_and_match():
+    plane = faults.fault_plane()
+    spec = plane.arm("x.site", exc=faults.TransientFault, times=2,
+                     match=lambda ctx: ctx.get("k") == 1)
+    plane.trip("x.site", k=0)                   # match filter: no raise
+    with pytest.raises(faults.TransientFault):
+        plane.trip("x.site", k=1)
+    with pytest.raises(faults.TransientFault):
+        plane.trip("x.site", k=1)
+    plane.trip("x.site", k=1)                   # shots exhausted
+    assert spec.fired == 2 and not plane.active
+
+
+def test_inject_context_manager_withdraws():
+    with faults.inject("y.site", exc=faults.DeviceFault):
+        assert faults.fault_plane().active
+        with pytest.raises(faults.DeviceFault):
+            faults.trip("y.site")
+    assert not faults.fault_plane().active
+    faults.trip("y.site")                       # disarmed: no-op
+
+
+def test_fault_classifiers():
+    assert faults.is_transient(faults.TransientFault("x"))
+    assert faults.is_device_fault(faults.TransientFault("x"))
+    assert faults.is_device_fault(faults.DeviceFault("x"))
+    assert not faults.is_device_fault(KeyError("x"))
+
+    # real XLA runtime errors are matched structurally (by MRO class
+    # name), not by import identity — jaxlib moves the class around
+    class XlaRuntimeError(RuntimeError):
+        pass
+
+    assert faults.is_device_fault(XlaRuntimeError("boom"))
+
+
+# -- the degradation ladder ---------------------------------------------------
+
+def test_device_fault_mid_drain_degrades_bit_identical():
+    t = _table()
+    stream = StreamSession(t, engine="tape", block=2048, max_pending=64)
+    trees = _trees(t, 4)
+    futs = [stream.submit(tr) for tr in trees]
+    stream.drain()                              # clean device drain
+    baseline = [f.result() for f in futs]
+    assert stream.stats.degraded_batches == 0
+
+    with faults.inject("device.dispatch", exc=faults.DeviceFault, times=1):
+        futs2 = [stream.submit(tr) for tr in _trees(t, 4)]
+        assert stream.drain() is not None       # fallback BatchResult
+    assert all(f.done() for f in futs2)         # zero lost futures
+    for f, base in zip(futs2, baseline):
+        np.testing.assert_array_equal(f.result(), base)
+    assert stream.stats.degraded_batches == 1
+    assert stream.stats.failed == 0
+
+    # next batch re-attempts (and succeeds on) the device path
+    futs3 = [stream.submit(tr) for tr in _trees(t, 4)]
+    stream.drain()
+    for f, base in zip(futs3, baseline):
+        np.testing.assert_array_equal(f.result(), base)
+    assert stream.stats.degraded_batches == 1
+
+
+def test_transient_fault_retries_in_place():
+    t = _table()
+    stream = StreamSession(t, engine="tape", block=2048, max_pending=64,
+                           retry_backoff_s=0.001)
+    trees = _trees(t, 3)
+    futs = [stream.submit(tr) for tr in trees]
+    stream.drain()
+    baseline = [f.result() for f in futs]
+    with faults.inject("device.dispatch", exc=faults.TransientFault,
+                       times=2):
+        futs2 = [stream.submit(tr) for tr in _trees(t, 3)]
+        stream.drain()
+    assert stream.stats.retries == 2
+    assert stream.stats.degraded_batches == 0   # recovered on device
+    for f, base in zip(futs2, baseline):
+        np.testing.assert_array_equal(f.result(), base)
+
+
+def test_transient_storm_exhausts_retries_then_degrades():
+    t = _table()
+    stream = StreamSession(t, engine="tape", block=2048, max_pending=64,
+                           max_retries=1, retry_backoff_s=0.001)
+    trees = _trees(t, 2)
+    futs = [stream.submit(tr) for tr in trees]
+    stream.drain()
+    baseline = [f.result() for f in futs]
+    with faults.inject("device.dispatch", exc=faults.TransientFault,
+                       times=5):
+        futs2 = [stream.submit(tr) for tr in _trees(t, 2)]
+        stream.drain()
+    assert stream.stats.retries == 1            # budget, then the ladder
+    assert stream.stats.degraded_batches == 1
+    for f, base in zip(futs2, baseline):
+        np.testing.assert_array_equal(f.result(), base)
+
+
+def test_upload_fault_on_append_refresh_degrades():
+    t = _table()
+    stream = StreamSession(t, engine="tape", block=2048, max_pending=64)
+    trees = _trees(t, 3)
+    futs = [stream.submit(tr) for tr in trees]
+    stream.drain()
+    [f.result() for f in futs]
+    extra = make_forest_table(1000, n_dup=1, seed=9)
+    stream.append({name: extra.columns[name] for name in t.columns})
+    with faults.inject("device.upload", exc=faults.DeviceFault, times=1):
+        futs2 = [stream.submit(tr) for tr in _trees(t, 3)]
+        stream.drain()
+    assert stream.stats.degraded_batches == 1
+    assert all(f.done() for f in futs2)
+    # degraded results still evaluate the post-append snapshot
+    assert futs2[0].n_records == t.n_records == 7000
+
+
+def test_poisoned_query_fails_alone():
+    t = _table()
+    stream = StreamSession(t, engine="tape", block=2048, max_pending=64)
+    trees = _trees(t, 4)
+    futs = [stream.submit(tr) for tr in trees]
+    stream.drain()
+    baseline = [f.result() for f in futs]
+
+    trees2 = _trees(t, 4)
+    poisoned = trees2[2]
+    with faults.inject("query.plan", exc=lambda: ValueError("poisoned"),
+                       match=lambda ctx: ctx.get("query") is poisoned,
+                       times=8):
+        futs2 = [stream.submit(tr) for tr in trees2]
+        stream.drain()
+    assert all(f.done() for f in futs2)
+    for i, (f, base) in enumerate(zip(futs2, baseline)):
+        if i == 2:
+            with pytest.raises(StreamQueryError) as ei:
+                f.result()
+            assert isinstance(ei.value.__cause__, ValueError)
+        else:
+            np.testing.assert_array_equal(f.result(), base)
+    assert stream.stats.quarantined_queries == 1
+    assert stream.stats.failed == 1
+
+
+def test_degraded_batch_respects_tombstones():
+    t = _table()
+    stream = StreamSession(t, engine="tape", block=2048, max_pending=64)
+    tr = _trees(t, 1)[0]
+    f0 = stream.submit(tr)
+    stream.drain()
+    base = f0.mask()
+    stream.delete(np.arange(0, 1500))
+    with faults.inject("device.dispatch", exc=faults.DeviceFault, times=1):
+        f1 = stream.submit(_trees(t, 1)[0])
+        stream.drain()
+    m1 = f1.mask()
+    assert stream.stats.degraded_batches == 1
+    assert not m1[:1500].any()
+    np.testing.assert_array_equal(m1[1500:], base[1500:])

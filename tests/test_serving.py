@@ -1,0 +1,407 @@
+"""Serving-loop hardening: background drainer, lanes, backpressure,
+lifecycle, warm restarts, and the concurrency stress contract.
+
+The stress tests are the PR's acceptance backstop: threads hammer both
+lanes while others append and tombstone rows under injected faults, and
+at the end every future must be resolved (none lost, none deadlocked)
+with a bitmap bit-identical to a numpy-oracle replay of its recorded
+snapshot — prefix rows + stamped live mask reproduce any drain's world
+because appends only extend and tombstones only mask.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.columnar import (DrainPolicy, LatencyWindow, StreamBackpressure,
+                            StreamClosed, StreamQueryError, StreamSession,
+                            Table, make_forest_table, random_tree, run_query)
+from repro.core import Atom
+from repro.runtime import faults
+
+
+@pytest.fixture(autouse=True)
+def _clean_plane():
+    faults.fault_plane().clear()
+    yield
+    faults.fault_plane().clear()
+
+
+def _table(n=4000, seed=7):
+    return make_forest_table(n, n_dup=1, seed=seed)
+
+
+def _wait(pred, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.005)
+    return pred()
+
+
+# -- LatencyWindow ------------------------------------------------------------
+
+def test_latency_window_percentiles():
+    w = LatencyWindow(capacity=100)
+    for v in range(1, 101):
+        w.add(float(v))
+    assert w.p50 == 50.0
+    assert w.p99 == 99.0
+    assert w.percentile(100.0) == 100.0
+    assert w.count == 100
+
+
+def test_latency_window_ring_wraps():
+    w = LatencyWindow(capacity=4)
+    for v in [1.0, 2.0, 3.0, 4.0, 100.0, 200.0]:
+        w.add(v)
+    assert w.count == 6
+    assert w.percentile(100.0) == 200.0
+    assert w.percentile(0.0) == 3.0         # 1.0 and 2.0 were overwritten
+    assert LatencyWindow().p99 == 0.0       # empty window reads as zero
+
+
+# -- background drainer -------------------------------------------------------
+
+def test_background_drain_on_deadline():
+    # nobody calls result()/drain(): the deadline alone must resolve it
+    t = _table()
+    with StreamSession(t, engine="numpy", max_pending=64, background=True,
+                       policy=DrainPolicy(max_wait_ms=30,
+                                          interactive_wait_ms=5)) as s:
+        fut = s.submit(Atom("elevation_0", "lt", 3000.0))
+        assert _wait(fut.done)
+        assert s.stats.batches == 1
+        assert s.stats.latency.count == 1
+        assert s.stats.latency_p99_ms >= 25.0   # waited out the deadline
+
+
+def test_interactive_preempts_bulk():
+    t = _table()
+    with StreamSession(t, engine="numpy", max_pending=100, background=True,
+                       policy=DrainPolicy(max_wait_ms=10_000.0,
+                                          interactive_wait_ms=5)) as s:
+        bulk = s.submit(Atom("elevation_0", "lt", 3000.0))
+        inter = s.submit(Atom("slope_0", "lt", 20.0), lane="interactive")
+        assert _wait(inter.done)
+        # the interactive drain excluded the still-accumulating bulk lane
+        assert not bulk.done()
+        assert s.pending_by_lane == {"interactive": 0, "bulk": 1}
+        s.drain()                               # manual flush picks it up
+        assert bulk.done()
+
+
+def test_bulk_deadline_carries_interactive_along():
+    t = _table()
+    with StreamSession(t, engine="numpy", max_pending=100, background=True,
+                       policy=DrainPolicy(max_wait_ms=40,
+                                          interactive_wait_ms=10_000.0)) as s:
+        inter = s.submit(Atom("slope_0", "lt", 20.0), lane="interactive")
+        bulk = s.submit(Atom("elevation_0", "lt", 3000.0))
+        assert _wait(lambda: bulk.done() and inter.done())
+        assert s.stats.batches == 1             # one combined drain
+
+
+def test_max_pending_triggers_immediate_background_drain():
+    t = _table()
+    with StreamSession(t, engine="numpy", max_pending=4, background=True,
+                       policy=DrainPolicy(max_wait_ms=10_000.0,
+                                          interactive_wait_ms=10_000.0)) as s:
+        futs = [s.submit(Atom("elevation_0", "lt", 3000.0))
+                for _ in range(4)]
+        assert _wait(lambda: all(f.done() for f in futs))
+
+
+def test_result_waits_instead_of_draining_under_drainer():
+    t = _table()
+    with StreamSession(t, engine="numpy", max_pending=64, background=True,
+                       policy=DrainPolicy(max_wait_ms=80,
+                                          interactive_wait_ms=80)) as s:
+        fut = s.submit(Atom("elevation_0", "lt", 3000.0))
+        with pytest.raises(TimeoutError):
+            fut.result(timeout=0.005)           # deadline not reached yet
+        res = fut.result(timeout=5.0)           # the drainer resolves it
+        assert res is not None and s.stats.batches == 1
+
+
+# -- bounded admission --------------------------------------------------------
+
+def test_backpressure_raises_past_max_queue():
+    t = _table()
+    s = StreamSession(t, engine="numpy", max_pending=4, background=True,
+                      max_queue=4, overflow="raise",
+                      policy=DrainPolicy(max_wait_ms=10_000.0,
+                                         interactive_wait_ms=10_000.0))
+    try:
+        with s._drain_lock:                     # pin the drainer mid-cycle
+            for _ in range(4):
+                s.submit(Atom("elevation_0", "lt", 3000.0))
+            with pytest.raises(StreamBackpressure):
+                s.submit(Atom("elevation_0", "lt", 3000.0))
+            assert s.stats.backpressure_rejects == 1
+    finally:
+        s.close()
+
+
+def test_backpressure_blocks_until_drain():
+    t = _table()
+    s = StreamSession(t, engine="numpy", max_pending=4, background=True,
+                      max_queue=4, overflow="block",
+                      policy=DrainPolicy(max_wait_ms=1.0,
+                                         interactive_wait_ms=1.0))
+    blocked_fut = []
+    try:
+        s._drain_lock.acquire()
+        held = True
+        try:
+            for _ in range(4):
+                s.submit(Atom("elevation_0", "lt", 3000.0))
+
+            def overflow_submit():
+                blocked_fut.append(
+                    s.submit(Atom("slope_0", "lt", 20.0)))
+
+            th = threading.Thread(target=overflow_submit)
+            th.start()
+            th.join(timeout=0.15)
+            assert th.is_alive()                # held back, not dropped
+            assert s.stats.backpressure_waits == 1
+            s._drain_lock.release()
+            held = False
+            th.join(timeout=5.0)
+            assert not th.is_alive()
+        finally:
+            if held:
+                s._drain_lock.release()
+        assert _wait(lambda: blocked_fut and blocked_fut[0].done())
+    finally:
+        s.close()
+
+
+def test_close_wakes_blocked_submitter():
+    t = _table()
+    s = StreamSession(t, engine="numpy", max_pending=4, background=True,
+                      max_queue=4, overflow="block",
+                      policy=DrainPolicy(max_wait_ms=10_000.0,
+                                         interactive_wait_ms=10_000.0))
+    outcome = []
+    s._drain_lock.acquire()
+    try:
+        admitted = [s.submit(Atom("elevation_0", "lt", 3000.0))
+                    for _ in range(4)]
+
+        def overflow_submit():
+            try:
+                s.submit(Atom("slope_0", "lt", 20.0))
+                outcome.append("admitted")
+            except StreamClosed:
+                outcome.append("closed")
+
+        th = threading.Thread(target=overflow_submit)
+        th.start()
+        time.sleep(0.05)
+        closer = threading.Thread(target=s.close)
+        closer.start()
+        th.join(timeout=5.0)
+        assert not th.is_alive() and outcome == ["closed"]
+    finally:
+        s._drain_lock.release()
+    # close still drains the queries admitted before it
+    assert _wait(lambda: all(f.done() for f in admitted))
+
+
+# -- lifecycle ----------------------------------------------------------------
+
+def test_close_idempotent_and_drains_pending():
+    t = _table()
+    s = StreamSession(t, engine="numpy", max_pending=64)
+    fut = s.submit(Atom("elevation_0", "lt", 3000.0))
+    res = s.close()
+    assert fut.done() and res is not None and res.stats.n_queries == 1
+    assert s.close() is res                     # idempotent
+    for call in (lambda: s.submit(Atom("slope_0", "lt", 20.0)),
+                 lambda: s.append({}), lambda: s.delete([0])):
+        with pytest.raises(StreamClosed):
+            call()
+
+
+def test_context_manager_closes_and_stops_drainer():
+    t = _table()
+    with StreamSession(t, engine="numpy", max_pending=64,
+                       background=True) as s:
+        fut = s.submit(Atom("elevation_0", "lt", 3000.0))
+        drainer = s._drainer
+    assert s.closed and fut.done()
+    assert not drainer.running
+
+
+# -- warm restarts ------------------------------------------------------------
+
+def test_warm_restart_reloads_plans_and_tapes(tmp_path):
+    cache_dir = str(tmp_path / "warm")
+    t1 = _table(seed=3)
+    trees = [random_tree(t1, 5, 3, np.random.default_rng(i))
+             for i in range(3)]
+    # batched="auto" on the tape engine: per-query compiled tapes (the
+    # persistable artifact), still one bundled host sync per drain
+    s1 = StreamSession(t1, engine="tape", batched="auto", block=2048,
+                       max_pending=64, cache_dir=cache_dir)
+    futs = [s1.submit(tr) for tr in trees]
+    s1.drain()
+    baseline = [f.result() for f in futs]
+    assert s1.stats.tape_cache_hits == 0        # cold: everything compiled
+    s1.close()
+
+    # "restart": identical data, brand-new process-level state
+    t2 = _table(seed=3)
+    trees2 = [random_tree(t2, 5, 3, np.random.default_rng(i))
+              for i in range(3)]
+    s2 = StreamSession(t2, engine="tape", batched="auto", block=2048,
+                       max_pending=64, cache_dir=cache_dir)
+    assert s2.restore_info["plans"] >= 3
+    assert s2.restore_info.get("feedback_keys", 0) > 0
+    futs2 = [s2.submit(tr) for tr in trees2]
+    res = s2.drain()
+    assert res.stats.tape_cache_hits >= 3       # rebound, not recompiled
+    assert res.stats.plan_cache_hits >= 3
+    for f, base in zip(futs2, baseline):
+        np.testing.assert_array_equal(f.result(), base)
+    s2.close()
+
+
+def test_warm_restart_corrupt_cache_cold_starts(tmp_path):
+    from repro.columnar import persist
+    cache_dir = tmp_path / "warm"
+    cache_dir.mkdir()
+    (cache_dir / persist.PLAN_CACHE_FILE).write_bytes(b"not a pickle")
+    (cache_dir / persist.FEEDBACK_FILE).write_bytes(b"\x80garbage")
+    t = _table()
+    s = StreamSession(t, engine="numpy", max_pending=64,
+                      cache_dir=str(cache_dir))
+    assert s.restore_info["plans"] == 0         # degraded to cold start
+    fut = s.submit(Atom("elevation_0", "lt", 3000.0))
+    s.drain()
+    assert fut.done()
+    s.close()                                   # flush overwrites the junk
+    s3 = StreamSession(_table(), engine="numpy", max_pending=64,
+                       cache_dir=str(cache_dir))
+    assert s3.restore_info["plans"] >= 1
+    s3.close()
+
+
+# -- concurrency stress (the acceptance backstop) -----------------------------
+
+def _replay_oracle(table, tree, snapshot):
+    """Numpy-oracle replay of one future: evaluate over the first
+    ``n_records`` rows (append-only prefix == drain-time data) and apply
+    the stamped live mask."""
+    n, live_words = snapshot
+    sub = Table({name: col[:n] for name, col in table.columns.items()})
+    res, _, _ = run_query(tree, sub, planner="deepfish", engine="numpy")
+    return res if live_words is None else res & live_words
+
+
+def _run_stress(stream, table, *, n_submitters, per_thread, n_appends,
+                n_deletes, poison_every=0):
+    resolved = []               # (tree, future) — thread-safe via append
+    poisoned = []
+    stop = threading.Event()
+
+    def submitter(tid):
+        rng = np.random.default_rng(1000 + tid)
+        for i in range(per_thread):
+            lane = "interactive" if rng.random() < 0.4 else "bulk"
+            if poison_every and i % poison_every == poison_every - 1:
+                poisoned.append(
+                    stream.submit(Atom("no_such_column", "lt", 1.0), lane))
+            else:
+                tree = random_tree(table, 4, 2, rng)
+                resolved.append((tree, stream.submit(tree, lane)))
+            if rng.random() < 0.3:
+                time.sleep(0.001)
+
+    def appender():
+        for i in range(n_appends):
+            if stop.is_set():
+                return
+            extra = make_forest_table(256, n_dup=1, seed=100 + i)
+            stream.append({name: extra.columns[name]
+                           for name in table.columns})
+            time.sleep(0.002)
+
+    def deleter():
+        rng = np.random.default_rng(88)
+        for _ in range(n_deletes):
+            if stop.is_set():
+                return
+            n = table.n_records
+            stream.delete(rng.integers(0, n, size=16))
+            time.sleep(0.003)
+
+    threads = [threading.Thread(target=submitter, args=(tid,))
+               for tid in range(n_submitters)]
+    threads += [threading.Thread(target=appender),
+                threading.Thread(target=deleter)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=60.0)
+    stop.set()
+    assert not any(th.is_alive() for th in threads)     # no deadlock
+    stream.close()
+    return resolved, poisoned
+
+
+def test_stress_concurrent_lanes_appends_deletes_with_faults():
+    t = _table(n=3000, seed=13)
+    stream = StreamSession(
+        t, engine="numpy", max_pending=16, background=True,
+        max_queue=48, overflow="block", retry_backoff_s=0.001,
+        policy=DrainPolicy(max_wait_ms=10, interactive_wait_ms=2))
+    # a storm of transient faults early in the run exercises the retry
+    # rung under concurrency (site matching makes engine irrelevant)
+    faults.fault_plane().arm("query.plan", exc=faults.TransientFault,
+                             times=3)
+    resolved, poisoned = _run_stress(
+        stream, t, n_submitters=3, per_thread=30, n_appends=8,
+        n_deletes=8, poison_every=10)
+
+    # zero lost futures: everything admitted is resolved or failed
+    assert all(f.done() for _, f in resolved)
+    assert all(f.done() for f in poisoned)
+    for f in poisoned:
+        with pytest.raises(StreamQueryError):
+            f.result()
+    # every successful bitmap is bit-identical to the numpy-oracle
+    # replay of its drain-time snapshot
+    for tree, f in resolved:
+        np.testing.assert_array_equal(
+            f.result(), _replay_oracle(t, tree, f.snapshot))
+    st = stream.stats
+    assert st.submitted == 3 * 30 and st.failed == len(poisoned)
+    assert st.completed == len(resolved)
+    assert st.retries >= 1
+    assert st.quarantined_queries >= len(poisoned)
+    assert st.latency.count == len(resolved)
+
+
+def test_stress_device_engine_degrades_under_faults():
+    t = _table(n=3000, seed=17)
+    stream = StreamSession(
+        t, engine="tape", block=1024, max_pending=8, background=True,
+        max_queue=32, overflow="block", retry_backoff_s=0.001,
+        policy=DrainPolicy(max_wait_ms=15, interactive_wait_ms=3))
+    faults.fault_plane().arm("device.dispatch", exc=faults.DeviceFault,
+                             times=2)
+    faults.fault_plane().arm("device.dispatch", exc=faults.TransientFault,
+                             times=1)
+    resolved, _ = _run_stress(
+        stream, t, n_submitters=2, per_thread=10, n_appends=4, n_deletes=4)
+    assert all(f.done() for _, f in resolved)
+    for tree, f in resolved:
+        np.testing.assert_array_equal(
+            f.result(), _replay_oracle(t, tree, f.snapshot))
+    assert stream.stats.degraded_batches >= 1   # the injected OOMs landed
+    assert stream.stats.failed == 0

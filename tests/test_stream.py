@@ -2,8 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.columnar import (QuerySession, StreamSession, make_forest_table,
-                            random_tree, run_query)
+from repro.columnar import (QuerySession, StreamQueryError, StreamSession,
+                            make_forest_table, random_tree, run_query)
 from repro.core import Atom
 from repro.serve import RequestRouter
 
@@ -114,15 +114,29 @@ def test_stream_delta_reuse_on_host_engine():
         np.testing.assert_array_equal(f.result(), _oracle(t, q))
 
 
-def test_stream_failure_propagates_to_futures():
+def test_stream_failure_quarantined_to_own_future():
+    # a broken query must fail only itself: drain never raises, the bad
+    # future carries its own StreamQueryError (original as __cause__),
+    # and batch-mates resolve normally
     t = make_forest_table(1000, n_dup=1, seed=7)
     stream = StreamSession(t, engine="numpy", max_pending=64)
-    fut = stream.submit(Atom("no_such_column", "lt", 1.0))
-    with pytest.raises(KeyError):
-        stream.drain()
-    assert fut.done()
-    with pytest.raises(KeyError):
-        fut.result()
+    good = stream.submit(Atom("elevation_0", "lt", 3000.0))
+    bad = stream.submit(Atom("no_such_column", "lt", 1.0))
+    assert stream.drain() is None      # quarantine drains have no result
+    assert good.done() and bad.done()
+    from repro.columnar import pack_bits
+    np.testing.assert_array_equal(
+        good.result(), pack_bits(t.columns["elevation_0"] < 3000.0))
+    with pytest.raises(StreamQueryError) as ei:
+        bad.result()
+    assert isinstance(ei.value.__cause__, KeyError)
+    other = stream.submit(Atom("still_missing", "lt", 1.0))
+    stream.drain()
+    with pytest.raises(StreamQueryError) as ei2:
+        other.result()
+    assert ei2.value is not ei.value   # never a shared exception object
+    assert stream.stats.quarantined_queries == 2
+    assert stream.stats.failed == 2
 
 
 # -- plan-cache tape reuse ----------------------------------------------------

@@ -1,0 +1,182 @@
+"""Tombstone deletes: live-mask semantics, cache survival, compaction.
+
+The delete contract: :meth:`Table.delete` marks rows dead without moving
+anything or bumping ``table.version`` — every atom cache, device upload,
+and zone map stays valid, and the live mask is ANDed into results at
+materialize time only.  Compaction is the single row-moving mutation and
+invalidates through the normal version/delta contract (``delta_since``
+answers None across it).
+"""
+import numpy as np
+import pytest
+
+from repro.columnar import (QuerySession, StreamSession, make_forest_table,
+                            pack_bits, random_tree, run_query, unpack_bits)
+
+PLANNERS = ("shallowfish", "deepfish", "optimal")
+ENGINES = ("numpy", "jax", "tape")
+
+
+def _fresh(seed=7, n=4000):
+    return make_forest_table(n, n_dup=1, seed=seed)
+
+
+def _tree(table, seed):
+    return random_tree(table, 6, 3, np.random.default_rng(seed))
+
+
+# -- differential sweep: planners x engines x interleaved append/delete -------
+
+@pytest.mark.parametrize("planner", PLANNERS)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_deleted_rows_never_match(planner, engine):
+    t = _fresh()
+    rng = np.random.default_rng(3)
+    dead = rng.random(t.n_records) < 0.3
+    t.delete(dead)
+    for seed in range(4):
+        tree = _tree(t, seed)
+        res, _, _ = run_query(tree, t, planner=planner, engine=engine)
+        mask = unpack_bits(res, t.n_records)
+        assert not mask[dead].any()
+        # live rows answer exactly as an undeleted twin restricted to them
+        twin = _fresh()
+        oracle, _, _ = run_query(_tree(twin, seed), twin,
+                                 planner="deepfish", engine="numpy")
+        omask = unpack_bits(oracle, twin.n_records)
+        np.testing.assert_array_equal(mask[~dead], omask[~dead])
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_interleaved_append_delete_matches_oracle(engine):
+    # delete -> append -> delete again; appended rows are live, every
+    # engine agrees with a hand-built numpy oracle at each step
+    t = _fresh(seed=5, n=3000)
+    extra = make_forest_table(3000, n_dup=1, seed=9)
+    tree_seed = 2
+    t.delete(np.arange(0, 1000))
+    t.append({name: extra.columns[name][:1500] for name in t.columns})
+    t.delete(np.arange(3200, 3400))
+    tree = _tree(t, tree_seed)
+    res, _, _ = run_query(tree, t, planner="deepfish", engine=engine)
+    mask = unpack_bits(res, t.n_records)
+    assert not mask[:1000].any() and not mask[3200:3400].any()
+    oracle, _, _ = run_query(_tree(t, tree_seed), t,
+                             planner="deepfish", engine="numpy")
+    np.testing.assert_array_equal(res, oracle)
+
+
+def test_delete_preserves_version_and_caches():
+    t = _fresh()
+    s = QuerySession(t, planner="deepfish", engine="numpy")
+    tree = _tree(t, 1)
+    s.execute([tree])
+    v0 = t.version
+    t.delete(np.arange(100, 600))
+    assert t.version == v0                  # no cache invalidation
+    assert t.tombstone_epoch == 1
+    res = s.execute([_tree(t, 1)])
+    # second batch re-used the session caches (no full re-evaluation) yet
+    # excludes the tombstoned rows
+    assert not unpack_bits(res.bitmaps[0], t.n_records)[100:600].any()
+
+
+def test_delete_idempotent_and_epoch():
+    t = _fresh(n=1000)
+    assert t.delete(np.arange(10)) == 10
+    assert t.tombstone_epoch == 1 and t.n_deleted == 10
+    assert t.delete(np.arange(10)) == 0     # already dead: no-op
+    assert t.tombstone_epoch == 1           # epoch only moves on new deaths
+    mask = np.zeros(1000, dtype=bool)
+    mask[5:15] = True
+    assert t.delete(mask) == 5
+    assert t.tombstone_epoch == 2 and t.n_deleted == 15
+    with pytest.raises(ValueError):
+        t.delete(np.zeros(999, dtype=bool))  # mask length must match
+    with pytest.raises(IndexError):
+        t.delete([1000])
+
+
+def test_append_after_delete_keeps_new_rows_live():
+    t = _fresh(n=2000)
+    extra = make_forest_table(500, n_dup=1, seed=11)
+    t.delete(np.arange(2000))               # everything dead
+    t.append({name: extra.columns[name] for name in t.columns})
+    res, _, _ = run_query(_tree(t, 4), t, planner="deepfish",
+                          engine="numpy")
+    mask = unpack_bits(res, t.n_records)
+    assert not mask[:2000].any()
+    lw = t.live_words()
+    live = unpack_bits(lw, t.n_records)
+    assert not live[:2000].any() and live[2000:].all()
+
+
+def test_compaction_bumps_epoch_and_version():
+    t = _fresh(n=2000)
+    # draw the tree from an untouched twin: random_tree samples atom
+    # thresholds from the table's value distribution, which compaction
+    # shifts — the twin pins both runs to the identical tree
+    twin = _fresh(n=2000)
+    before, _, _ = run_query(_tree(twin, 6), t, planner="deepfish",
+                             engine="numpy")
+    keep = np.ones(2000, dtype=bool)
+    keep[::3] = False
+    t.delete(~keep)
+    v0, e0 = t.version, t.tombstone_epoch
+    removed = t.compact()
+    assert removed == int((~keep).sum())
+    assert t.version == v0 + 1              # the cache-invalidating bump
+    assert t.tombstone_epoch == e0 + 1
+    assert t.n_records == int(keep.sum()) and t.n_deleted == 0
+    assert t.delta_since(v0) is None        # rows moved: no delta survives
+    # post-compact results equal the pre-compact live projection
+    after, _, _ = run_query(_tree(twin, 6), t, planner="deepfish",
+                            engine="numpy")
+    np.testing.assert_array_equal(
+        unpack_bits(after, t.n_records),
+        unpack_bits(before, 2000)[keep])
+
+
+def test_maybe_compact_threshold():
+    t = _fresh(n=1000)
+    t.delete(np.arange(100))
+    assert t.maybe_compact(0.25) == 0       # 10% dead: below threshold
+    t.delete(np.arange(100, 300))
+    assert t.maybe_compact(0.25) == 300     # 30% dead: compacts
+    assert t.n_records == 700
+
+
+def test_stream_delete_and_auto_compact():
+    t = _fresh(n=4000)
+    twin = _fresh(n=4000)       # pins identical trees across compaction
+    stream = StreamSession(t, engine="numpy", max_pending=64,
+                           auto_compact=0.25)
+    f0 = stream.submit(_tree(twin, 8))
+    stream.drain()
+    base = f0.mask()
+    assert stream.delete(np.arange(0, 200)) == 200   # 5%: no compaction
+    assert stream.stats.compactions == 0
+    f1 = stream.submit(_tree(twin, 8))
+    stream.drain()
+    m1 = f1.mask()
+    assert not m1[:200].any()
+    np.testing.assert_array_equal(m1[200:], base[200:])
+    n1, lw1 = f1.snapshot
+    assert n1 == 4000 and lw1 is not None
+    stream.delete(np.arange(200, 1300))              # >25%: compacts
+    assert stream.stats.compactions == 1
+    assert stream.stats.compacted_rows == 1300 and t.n_records == 2700
+    f2 = stream.submit(_tree(twin, 8))
+    stream.drain()
+    np.testing.assert_array_equal(f2.mask(), base[1300:])
+    assert f2.snapshot[1] is None           # compacted: no tombstones left
+
+
+def test_live_words_matches_packed_complement():
+    t = _fresh(n=1000)
+    assert t.live_words() is None
+    rng = np.random.default_rng(0)
+    dead = rng.random(1000) < 0.5
+    t.delete(dead)
+    np.testing.assert_array_equal(t.live_words(), pack_bits(~dead))
+    assert abs(t.deleted_fraction - dead.mean()) < 1e-9
