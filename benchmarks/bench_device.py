@@ -19,7 +19,11 @@ round-trip per plan step) on
   alongside as ``norewrite_*`` for reference.
 
 plus a differential sweep asserting the two engines produce bit-identical
-bitmaps.  Wall-clock is best-of ``--repeats`` after a warmup run (the tape
+bitmaps, and — with ``--sharded`` — a multi-device section run in a
+subprocess under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(sharded-tape execution over {1, 2, 8} shards: bit-identicality, the
+one-collective-sync contract, no-retrace appends, shard-local delta
+re-upload).  Wall-clock is best-of ``--repeats`` after a warmup run (the tape
 engine's compile cost is reported separately as ``tape_cold_ms``).  Writes
 ``BENCH_device.json`` (``--out``), which doubles as the committed baseline
 for the CI regression gate (``benchmarks/check_regression.py``).
@@ -31,12 +35,16 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
-from repro.columnar import (BitmapBackend, DeviceTapeBackend, JaxBlockBackend,
-                            QuerySession, Table, make_forest_table,
+from repro.columnar import (BitmapBackend, DeviceTapeBackend, ExecConfig,
+                            JaxBlockBackend, QuerySession,
+                            ShardedTapeBackend, Table, make_forest_table,
                             random_tree, rewrite_string_atoms, run_query)
 from repro.columnar.device import _TAPE_PROGRAMS
 from repro.columnar.table import annotate_selectivities
@@ -423,6 +431,108 @@ def bench_fragmented(table, repeats: int, block: int) -> dict:
     }
 
 
+def bench_sharded(rows: int, repeats: int, block: int) -> dict:
+    """Sharded tape execution across the host-device mesh (child process).
+
+    Runs ONLY under ``--sharded-child``: the parent spawns this file in a
+    subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    because the device count is locked at first jax init and the forced
+    split (8 single-threaded host devices) would distort every
+    single-device section's timings.  Sweeps shard counts {1, 2, 8} over
+    one query suite, asserting bit-identicality against the numpy oracle,
+    ONE collective sync per query (one bundled sync per lockstep batch),
+    zero retraces across an append, and a shard-local delta re-upload.
+
+    The committed baseline section is produced at 500k rows: the forced
+    host-platform split deadlocks in the XLA CPU collective rendezvous
+    at 1M-row shard sizes on single-core hosts, and the gates are exact
+    contract checks (not timing comparisons), so the smaller scale loses
+    nothing.
+    """
+    import jax
+
+    table = make_forest_table(rows, n_dup=2, seed=7)
+    rng = np.random.default_rng(2)
+    trees = [random_tree(table, 6, 3, rng) for _ in range(6)]
+    oracles = [_oracle_bitmap(table, t) for t in trees]
+    model = PerAtomCostModel()
+    tapes = [compile_tape(deepfish(t, model,
+                                   total_records=table.n_records))
+             for t in trees]
+
+    out = {"rows": table.n_records, "devices": jax.device_count(),
+           "queries": len(trees), "block": block}
+    identical, one_sync = True, True
+    be8 = None
+    for s in (1, 2, 8):
+        be = ShardedTapeBackend(table, block=block, shards=s)
+        for tp in tapes:
+            be.run_tape(tp)                       # warm compiles + uploads
+        s0 = be.host_syncs
+        got = [be.run_tape(tp) for tp in tapes]
+        one_sync &= (be.host_syncs - s0 == len(tapes))
+        identical &= all(np.array_equal(a, b)
+                         for a, b in zip(got, oracles))
+        ms = _best_of(lambda: [be.run_tape(tp) for tp in tapes],
+                      repeats) * 1e3
+        out[f"shards{s}_ms"] = round(ms, 3)
+        if s == 8:
+            be8 = be
+
+    def _total_traces():
+        return sum(p._cache_size() for p in _TAPE_PROGRAMS.values()
+                   if hasattr(p, "_cache_size"))
+
+    # append a small tail: under 8 shards the dirty blocks land on ONE
+    # shard and the jitted programs are all reused (masks are data)
+    progs0, traces0 = len(_TAPE_PROGRAMS), _total_traces()
+    src = make_forest_table(max(rows // 64, 1), n_dup=2, seed=31)
+    table.append({k: src.columns[k] for k in table.columns})
+    be8.refresh()
+    out["delta_upload_shards"] = be8.delta_upload_shards
+    post_ok = all(np.array_equal(be8.run_tape(tp),
+                                 _oracle_bitmap(table, t))
+                  for tp, t in zip(tapes, trees))
+    out["programs_compiled_on_append"] = (len(_TAPE_PROGRAMS) - progs0
+                                          + _total_traces() - traces0)
+
+    # lockstep batch under sharding: ONE bundled collective sync
+    sess = QuerySession(table, config=ExecConfig(
+        planner="deepfish", engine="tape", block=block, batched=True,
+        shards=8, persist_atom_cache=False))
+    sess.execute(trees)                           # warm plans + columns
+    s0 = sess._backend.host_syncs
+    res = sess.execute(trees)
+    out["lockstep_syncs_per_batch"] = res.backend.host_syncs - s0
+    lockstep_ok = all(np.array_equal(b, _oracle_bitmap(table, t))
+                      for b, t in zip(res.bitmaps, trees))
+
+    out["one_sync_per_query"] = bool(one_sync)
+    out["identical"] = bool(identical and post_ok and lockstep_ok)
+    return out
+
+
+def _run_sharded_child(args) -> dict:
+    """Spawn this file with ``--sharded-child`` under the forced 8-device
+    host platform and parse its RESULT line."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    cmd = [sys.executable, os.path.abspath(__file__), "--sharded-child",
+           "--rows", str(args.rows), "--block", str(args.block),
+           "--repeats", str(args.repeats)]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=3600)
+    if proc.returncode != 0:
+        raise SystemExit("FAIL: sharded child crashed:\n"
+                         + proc.stderr[-3000:])
+    lines = [ln for ln in proc.stdout.splitlines()
+             if ln.startswith("RESULT ")]
+    if not lines:
+        raise SystemExit("FAIL: sharded child produced no RESULT line:\n"
+                         + proc.stdout[-2000:])
+    return json.loads(lines[-1][len("RESULT "):])
+
+
 def _workload(table, n_queries, n_templates, n_atoms, depth, seed):
     rng = np.random.default_rng(seed)
     pool = [random_tree(table, n_atoms, depth, rng)
@@ -435,15 +545,13 @@ def bench_batch(table, queries, repeats: int, block: int) -> dict:
     lockstep (tape_lockstep).  Cross-batch atom caching is disabled so each
     timed batch performs real kernel work; columns/plans/programs stay warm
     across repeats."""
+    base = ExecConfig(planner="deepfish", engine="jax", block=block,
+                      persist_atom_cache=False)
     sessions = {
-        "jax": QuerySession(table, planner="deepfish", engine="jax",
-                            block=block, persist_atom_cache=False),
-        "tape": QuerySession(table, planner="deepfish", engine="tape",
-                            block=block, persist_atom_cache=False),
-        "tape_lockstep": QuerySession(table, planner="deepfish",
-                                      engine="tape", block=block,
-                                      batched=True,
-                                      persist_atom_cache=False),
+        "jax": QuerySession(table, config=base),
+        "tape": QuerySession(table, config=base.replace(engine="tape")),
+        "tape_lockstep": QuerySession(table, config=base.replace(
+            engine="tape", batched=True)),
     }
     out, results = {}, {}
     for name, sess in sessions.items():
@@ -474,9 +582,10 @@ def bench_differential(table, n_seeds: int, block: int) -> dict:
         rng = np.random.default_rng(seed)
         tree = random_tree(table, int(rng.integers(4, 9)),
                            int(rng.integers(2, 4)), rng)
-        base, _, _ = run_query(tree, table, planner="deepfish", engine="jax")
-        got, _, be = run_query(tree, table, planner="deepfish",
-                               engine="tape")
+        base, _, _ = run_query(tree, table, config=ExecConfig(
+            planner="deepfish", engine="jax"))
+        got, _, be = run_query(tree, table, config=ExecConfig(
+            planner="deepfish", engine="tape"))
         if not np.array_equal(base, got) or be.host_syncs != 1:
             mismatches += 1
     return {"seeds": n_seeds, "mismatches": mismatches,
@@ -552,8 +661,9 @@ def bench_drift(rows: int, block: int, rounds: int = 5) -> dict:
                 normalize(And([Atom("z", "lt", vz),
                                Atom("w", "lt", 0.7)]))]
 
-    sess = QuerySession(table, planner="deepfish", engine="tape",
-                        block=block, batched=True, feedback_absorb=True)
+    sess = QuerySession(table, config=ExecConfig(
+        planner="deepfish", engine="tape", block=block, batched=True,
+        feedback_absorb=True))
     eq_key = ("cat", "eq", 0.0)
     eq_qerrs, max_qerrs = [], []
     evictions = 0
@@ -634,6 +744,11 @@ def main():
                     help="run the Q-Error feedback-loop drift workload "
                          "(default: on)")
     ap.add_argument("--no-drift", dest="drift", action="store_false")
+    ap.add_argument("--sharded", action="store_true",
+                    help="also run the multi-device sharded-tape section "
+                         "(spawns a subprocess with 8 forced host devices)")
+    ap.add_argument("--sharded-child", action="store_true",
+                    help=argparse.SUPPRESS)
     ap.add_argument("--smoke", action="store_true",
                     help="CI preset: small table, tiny batch")
     args = ap.parse_args()
@@ -642,6 +757,11 @@ def main():
         # noisy for the CI regression gate's speedup floors
         args.rows, args.batch, args.repeats = 50_000, 8, 2
         args.templates, args.diff_seeds = 2, 2
+
+    if args.sharded_child:
+        print("RESULT " + json.dumps(
+            bench_sharded(args.rows, args.repeats, args.block)))
+        return
 
     table = make_forest_table(args.rows, n_dup=2, seed=7)
     rng = np.random.default_rng(0)
@@ -717,6 +837,20 @@ def main():
     print(f"differential sweep: {diff['seeds']} seeds, "
           f"{diff['mismatches']} mismatches")
 
+    sharded = None
+    if args.sharded:
+        sharded = _run_sharded_child(args)
+        print(f"sharded ({sharded['devices']} devices, "
+              f"{sharded['queries']} queries): 1 shard "
+              f"{sharded['shards1_ms']:.1f} ms  vs  2 "
+              f"{sharded['shards2_ms']:.1f} ms  vs  8 "
+              f"{sharded['shards8_ms']:.1f} ms; "
+              f"one_sync={sharded['one_sync_per_query']}, lockstep "
+              f"{sharded['lockstep_syncs_per_batch']} sync/batch, "
+              f"{sharded['programs_compiled_on_append']} recompiles on "
+              f"append, delta on {sharded['delta_upload_shards']} "
+              f"shard(s)  identical={sharded['identical']}")
+
     drift = None
     if args.drift:
         drift = bench_drift(args.rows, args.block)
@@ -769,6 +903,14 @@ def main():
             fragmented["tape_device_dispatches"] == 1
             and fragmented["tape_host_syncs_per_query"] == 1
             and fragmented["host_fallbacks"] == 0)
+    if sharded is not None:
+        report["sharded"] = sharded
+        report["acceptance"]["sharded_one_collective_sync"] = bool(
+            sharded["identical"]
+            and sharded["one_sync_per_query"]
+            and sharded["lockstep_syncs_per_batch"] == 1
+            and sharded["programs_compiled_on_append"] == 0
+            and sharded["delta_upload_shards"] == 1)
     if drift is not None:
         report["drift"] = drift
         report["acceptance"]["drift_feedback_loop_closes"] = bool(
@@ -794,6 +936,11 @@ def main():
     if not report["acceptance"]["selective_pruning_pays"]:
         raise SystemExit("FAIL: zone pruning did not prune/pay on the "
                          "selective workload (or appends retraced)")
+    if sharded is not None and not report["acceptance"][
+            "sharded_one_collective_sync"]:
+        raise SystemExit("FAIL: sharded execution diverged, lost the "
+                         "one-collective-sync contract, retraced on "
+                         "append, or re-uploaded beyond the dirty shard")
     if drift is not None and not report["acceptance"][
             "drift_feedback_loop_closes"]:
         raise SystemExit("FAIL: the Q-Error feedback loop did not close on "

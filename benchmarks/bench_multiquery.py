@@ -18,8 +18,8 @@ import time
 
 import numpy as np
 
-from repro.columnar import (LRUPlanCache, QuerySession, make_forest_table,
-                            random_tree, run_query)
+from repro.columnar import (ExecConfig, LRUPlanCache, QuerySession,
+                            make_forest_table, random_tree, run_query)
 from repro.core.predicate import DICT_SEL_STEP
 
 
@@ -41,9 +41,10 @@ def bench_dict_buckets(args) -> dict:
                             args.seed + 1)
     out = {}
     for name, step in (("tight", DICT_SEL_STEP), ("coarse", None)):
-        session = QuerySession(table, planner=args.planner, engine="numpy",
-                               plan_cache=LRUPlanCache(dict_sel_step=step),
-                               persist_atom_cache=False)
+        session = QuerySession(table, config=ExecConfig(
+            planner=args.planner,
+            plan_cache=LRUPlanCache(dict_sel_step=step),
+            persist_atom_cache=False))
         best_s, res = float("inf"), None
         for _ in range(max(args.repeats, 2)):     # >= 1 warm pass
             res = session.execute(queries)
@@ -103,13 +104,13 @@ def main():
 
     # -- baseline: Q independent plan+execute calls ---------------------------
     t0 = time.perf_counter()
-    base = [run_query(t, table, planner=args.planner, engine=args.engine)[0]
-            for t in queries]
+    cfg = ExecConfig(planner=args.planner, engine=args.engine)
+    base = [run_query(t, table, config=cfg)[0] for t in queries]
     base_s = time.perf_counter() - t0
 
     # -- batched session (plan cache warm across repeats) ---------------------
-    session = QuerySession(table, planner=args.planner, engine=args.engine,
-                           plan_cache=LRUPlanCache())
+    session = QuerySession(table, config=cfg.replace(
+        plan_cache=LRUPlanCache()))
     best_s, res = float("inf"), None
     for _ in range(args.repeats):
         r = session.execute(queries)

@@ -34,9 +34,9 @@ import time
 
 import numpy as np
 
-from repro.columnar import (DrainPolicy, LatencyWindow, QuerySession,
-                            StreamSession, Table, make_forest_table,
-                            random_tree, run_query)
+from repro.columnar import (DrainPolicy, ExecConfig, LatencyWindow,
+                            QuerySession, StreamSession, Table,
+                            make_forest_table, random_tree, run_query)
 from repro.core import And, Atom, normalize
 from repro.runtime import faults
 
@@ -57,8 +57,9 @@ def bench_stream(args, engine: str) -> dict:
 
     # max_pending is one past the batch so the timed drain() below is the
     # one that runs the batch (admission alone must stay cheap)
-    stream = StreamSession(table, engine=engine, block=args.block,
-                           max_pending=args.batch + 1)
+    cfg = StreamSession.DEFAULT_CONFIG.replace(engine=engine,
+                                               block=args.block)
+    stream = StreamSession(table, config=cfg, max_pending=args.batch + 1)
 
     stream_ms = naive_ms = 0.0
     reupload_bytes = naive_upload_bytes = 0.0
@@ -90,8 +91,9 @@ def bench_stream(args, engine: str) -> dict:
                                else be.host_syncs - sum(syncs_per_batch))
 
         # naive: rebuild everything for the same snapshot
-        naive = QuerySession(table, planner="deepfish", engine=engine,
-                             block=args.block, batched=True)
+        naive = QuerySession(table, config=ExecConfig(
+            planner="deepfish", engine=engine, block=args.block,
+            batched=True))
         t0 = time.perf_counter()
         nres = naive.execute(queries)
         if rnd:
@@ -102,8 +104,8 @@ def bench_stream(args, engine: str) -> dict:
                          zip(res.bitmaps, nres.bitmaps))
         if rnd in (0, args.rounds - 1):
             for q in queries[:2]:
-                want, _, _ = run_query(q, table, planner="deepfish",
-                                       engine="numpy")
+                want, _, _ = run_query(q, table, config=ExecConfig(
+                    planner="deepfish"))
                 identical &= np.array_equal(
                     res.bitmaps[queries.index(q)], want)
 
@@ -179,8 +181,10 @@ def bench_selective_stream(args) -> dict:
     for warm, zp in ((True, True), (True, False),
                      (False, True), (False, False)):
         table = Table(mk(rows, 0, seed=5))
-        stream = StreamSession(table, engine=args.engine, block=block,
-                               max_pending=args.batch + 1, zone_prune=zp)
+        cfg = StreamSession.DEFAULT_CONFIG.replace(
+            engine=args.engine, block=block, zone_prune=zp)
+        stream = StreamSession(table, config=cfg,
+                               max_pending=args.batch + 1)
         ms = 0.0
         syncs = []
         res = None
@@ -217,8 +221,8 @@ def bench_selective_stream(args) -> dict:
     ub, _, _ = finals["unpruned"]
     identical = all(np.array_equal(a, b) for a, b in zip(pb, ub))
     for j in (0, 1, 2):
-        want, _, _ = run_query(pq[j], ptable, planner="deepfish",
-                               engine="numpy")
+        want, _, _ = run_query(pq[j], ptable, config=ExecConfig(
+            planner="deepfish"))
         identical &= np.array_equal(pb[j], want)
     out["identical"] = bool(identical)
     return out
@@ -236,9 +240,9 @@ def bench_rebind(args) -> dict:
     # feedback off: runtime-corrected selectivities legitimately re-key (and
     # so replan) queries between passes — that loop is measured by the drift
     # section; this microsection isolates pure tape rebinding
-    sess = QuerySession(table, planner="deepfish", engine="tape",
-                        block=args.block, batched="auto",
-                        persist_atom_cache=False, feedback=False)
+    sess = QuerySession(table, config=ExecConfig(
+        planner="deepfish", engine="tape", block=args.block,
+        batched="auto", persist_atom_cache=False, feedback=False))
     t0 = time.perf_counter()
     sess.execute(queries)                    # cold: trace + compile + jit
     cold_ms = (time.perf_counter() - t0) * 1e3
@@ -269,8 +273,10 @@ def _first_drain_probe(args) -> None:
     rows = min(args.rows, 120_000)
     table = make_forest_table(rows, n_dup=1, seed=7)
     queries = _probe_queries(table, args)
-    stream = StreamSession(table, engine=args.engine, block=args.block,
-                           max_pending=len(queries) + 1, batched="auto",
+    cfg = StreamSession.DEFAULT_CONFIG.replace(
+        engine=args.engine, block=args.block, batched="auto")
+    stream = StreamSession(table, config=cfg,
+                           max_pending=len(queries) + 1,
                            cache_dir=args.first_drain_probe)
     futs = [stream.submit(q) for q in queries]
     t0 = time.perf_counter()
@@ -325,9 +331,10 @@ def bench_slo(args) -> dict:
     # per-query tapes (batched="auto") so the deadline drains' varying batch
     # compositions reuse cached compiled tapes instead of retracing
     policy = DrainPolicy(max_wait_ms=40.0, interactive_wait_ms=4.0)
-    with StreamSession(table, engine=args.engine, block=args.block,
-                       max_pending=args.batch, background=True,
-                       batched="auto", policy=policy) as stream:
+    cfg = StreamSession.DEFAULT_CONFIG.replace(
+        engine=args.engine, block=args.block, batched="auto")
+    with StreamSession(table, config=cfg, max_pending=args.batch,
+                       background=True, policy=policy) as stream:
         for f in [stream.submit(q) for q in pool]:      # jit/plan warmup
             f.result(timeout=300.0)
         stream.stats.latency = LatencyWindow()          # drop warmup samples
@@ -348,13 +355,15 @@ def bench_slo(args) -> dict:
 
     # -- graceful degradation under an injected device fault -----------------
     faults.fault_plane().clear()
-    with StreamSession(table, engine=args.engine, block=args.block,
+    cfg = StreamSession.DEFAULT_CONFIG.replace(engine=args.engine,
+                                               block=args.block)
+    with StreamSession(table, config=cfg,
                        max_pending=args.batch + 1) as clean:
         cf = [clean.submit(q) for q in queries]
         clean.drain()
         baseline = [f.result() for f in cf]
 
-    with StreamSession(table, engine=args.engine, block=args.block,
+    with StreamSession(table, config=cfg,
                        max_pending=args.batch + 1) as faulty:
         wf = [faulty.submit(q) for q in queries]
         faulty.drain()                                  # clean device drain
@@ -376,7 +385,9 @@ def bench_slo(args) -> dict:
         }
 
     # -- the one-bundled-sync contract survives tombstones -------------------
-    with StreamSession(table, engine=args.engine, block=args.block,
+    cfg = StreamSession.DEFAULT_CONFIG.replace(engine=args.engine,
+                                               block=args.block)
+    with StreamSession(table, config=cfg,
                        max_pending=args.batch + 1) as ts:
         for q in queries:
             ts.submit(q)

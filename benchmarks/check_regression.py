@@ -13,6 +13,11 @@ contract (exact, noise-free — these ARE the paper-level guarantees):
     checks against a full baseline (64-query batch)
   * ``host_fallbacks == 0`` on the numeric and dict-string workloads (the
     dictionary rewrite keeps mixed plans device-resident)
+  * the sharded section (``bench_device.py --sharded``) keeps the
+    collective one-sync contract on an 8-device mesh: bit-identical to the
+    single-device run, one collective sync per query (one bundled sync per
+    lockstep batch), zero retraces across appends, and the delta re-upload
+    confined to the dirty shard
   * the drift workload's Q-Error feedback loop closes: realized
     selectivities correct the estimator (``qerror_reduction``), stale
     cached plans are evicted-and-replanned (``drift_evictions > 0``), the
@@ -149,6 +154,28 @@ def check_device(gate: Gate, fresh: dict, base: dict, tol: float) -> None:
         gate.check("selective.speedup > 1 in committed baseline",
                    (bselective or {}).get("speedup", 0.0) > 1.0,
                    f"baseline={(bselective or {}).get('speedup')}")
+
+    # -- contract: sharded execution keeps the one-collective-sync path ------
+    sharded = fresh.get("sharded")
+    gate.check("sharded section present", sharded is not None,
+               "run bench_device.py with --sharded")
+    if sharded is not None:
+        gate.check("sharded.identical", bool(sharded.get("identical")))
+        gate.check("sharded.one_sync_per_query",
+                   bool(sharded.get("one_sync_per_query")),
+                   f"fresh={sharded.get('one_sync_per_query')}")
+        gate.check("sharded.lockstep_syncs_per_batch == 1",
+                   sharded.get("lockstep_syncs_per_batch") == 1,
+                   f"fresh={sharded.get('lockstep_syncs_per_batch')}")
+        gate.check("sharded: appends do not retrace",
+                   sharded.get("programs_compiled_on_append", -1) == 0,
+                   f"fresh={sharded.get('programs_compiled_on_append')}")
+        gate.check("sharded: small append re-uploads one shard",
+                   sharded.get("delta_upload_shards") == 1,
+                   f"fresh={sharded.get('delta_upload_shards')}")
+        gate.check("sharded.devices == 8",
+                   sharded.get("devices") == 8,
+                   f"fresh={sharded.get('devices')}")
 
     # -- contract: the Q-Error feedback loop closes under drift --------------
     drift = fresh.get("drift")

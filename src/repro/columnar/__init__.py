@@ -28,14 +28,17 @@ Shared results are bit-identical to per-query execution on every engine —
 from .bitmap import (WORD, bitmap_and, bitmap_andnot, bitmap_empty,
                      bitmap_full, bitmap_or, extend_bitmap, pack_bits,
                      popcount, unpack_bits)
+from .config import ConfigError, ExecConfig
 from .device import DeviceTapeBackend
-from .executor import BitmapBackend, JaxBlockBackend, run_query
+from .drainer import BackgroundDrainer, DrainPolicy, LatencyWindow
+from .executor import (BitmapBackend, JaxBlockBackend, resolve_backend,
+                       run_query)
 from .forest import make_forest_table
 from .ingest import ZoneMap
 from .multiquery import (BatchResult, BatchStats, LRUPlanCache, PlanCacheStats,
                          QuerySession)
-from .drainer import BackgroundDrainer, DrainPolicy, LatencyWindow
 from .queries import random_query_suite, random_tree
+from .shard import ShardedTapeBackend
 from .stream import (StreamBackpressure, StreamClosed, StreamFuture,
                      StreamQueryError, StreamSession, StreamStats)
 from .table import (DictColumn, Table, annotate_selectivities,
@@ -46,7 +49,9 @@ __all__ = [
     "bitmap_andnot", "bitmap_full", "bitmap_empty", "extend_bitmap", "WORD",
     "Table", "DictColumn", "annotate_selectivities", "empirical_selectivity",
     "rewrite_string_atoms", "make_forest_table",
-    "BitmapBackend", "JaxBlockBackend", "DeviceTapeBackend", "run_query",
+    "BitmapBackend", "JaxBlockBackend", "DeviceTapeBackend",
+    "ShardedTapeBackend", "run_query", "resolve_backend",
+    "ExecConfig", "ConfigError",
     "ZoneMap", "random_tree", "random_query_suite",
     "QuerySession", "LRUPlanCache", "BatchResult", "BatchStats",
     "PlanCacheStats", "StreamFuture", "StreamSession", "StreamStats",

@@ -91,6 +91,7 @@ from ..core.tape import (ATOM, CHAIN, CMP_OPCODE, EMPTY, FULL, IN_OPCODE,
 from .bitmap import (WORD, bitmap_full, extend_bitmap, live_block_count,
                      n_words, next_pow2, pack_bits, popcount, unpack_bits)
 from .executor import _ZonePruner
+from .ingest import dirty_tail
 from .table import Table
 
 _CMP_OPCODE = CMP_OPCODE
@@ -374,6 +375,87 @@ def _jitted_prims():
 _TAPE_PROGRAMS: "OrderedDict[tuple, object]" = OrderedDict()
 _TAPE_PROGRAM_CAP = 256
 
+
+def _tape_forward(ops, meta, result, n_slots, prune, skip, pallas, interpret,
+                  cols, values, lmasks, zmasks, full_bits, full_pops):
+    """The whole-tape op loop, as a pure function of device arrays.
+
+    This is the body :meth:`DeviceTapeBackend._tape_program` jits, factored
+    out so :class:`~repro.columnar.shard.ShardedTapeBackend` can wrap the
+    *same* forward in ``jax.shard_map``: every array argument is block-major
+    on its leading (or, for zmasks, trailing) axis, so a shard running this
+    over its block slice computes exactly its rows of the result and its
+    partial sums of the counters — the sharded program reduces them with
+    one ``all_gather``/``psum`` collective and the single-sync contract
+    survives sharding unchanged.
+
+    Returns ``(bits[result], rec, blk, prn, out)`` — result bitmap plus the
+    per-costed-op record / touched-block / pruned-block / realized-output
+    counter vectors that ride the one bundled transfer.
+    """
+    import jax.numpy as jnp
+    bits: List[object] = [None] * n_slots
+    pops: List[object] = [None] * n_slots
+    recs, blks, prns, outs = [], [], [], []
+    mi = 0
+    for oi, op in enumerate(ops):
+        if op.kind == FULL:
+            b, p = full_bits, full_pops
+        elif op.kind == EMPTY:
+            b = jnp.zeros_like(full_bits)
+            p = jnp.zeros_like(full_pops)
+        elif op.kind == SETOP:
+            b, p = _setop_impl(bits[op.a], bits[op.b], op.setop,
+                               pallas, interpret)
+        else:
+            cixs, vixs, opcodes = meta[oi]
+            sb, sp = bits[op.a], pops[op.a]
+            # records_evaluated stays the PRE-prune popcount (the
+            # paper metric describes the plan, not the pruning);
+            # blocks split into touched (live MAYBE) and pruned
+            recs.append(sp.sum())
+            zone = zmasks[mi] if prune else None
+            mi += 1
+            if zone is None:
+                blks.append((sp > 0).sum())
+                prns.append(jnp.int32(0))
+            else:
+                live = sp > 0
+                maybe = zone == ZONE_MAYBE
+                blks.append((live & maybe).sum())
+                prns.append((live & ~maybe).sum())
+            if opcodes[0] == IN_OPCODE:
+                b, p = _lookup_impl(cols[cixs[0]], sb, sp,
+                                    lmasks[vixs[0]], pallas,
+                                    interpret, zone=zone,
+                                    skip=skip)
+            elif op.kind == ATOM:
+                b, p = _atom_impl(cols[cixs[0]], sb, sp,
+                                  values[vixs[0]], opcodes[0],
+                                  pallas, interpret, zone=zone,
+                                  skip=skip)
+            else:
+                stack = jnp.stack([cols[c] for c in cixs], axis=1)
+                vals = jnp.stack([values[v] for v in vixs])
+                b, p = _chain_impl(stack, sb, sp, vals, opcodes,
+                                   op.conj, pallas, interpret,
+                                   zone=zone, skip=skip)
+            # realized output popcount — already computed for the
+            # dead-block skip, so surfacing it is free: the Q-Error
+            # feedback loop's ground truth rides the existing sync
+            outs.append(p.sum())
+        bits[op.dst] = b
+        pops[op.dst] = p
+    rec = (jnp.stack(recs) if recs
+           else jnp.zeros((0,), dtype=jnp.int32))
+    blk = (jnp.stack(blks) if blks
+           else jnp.zeros((0,), dtype=jnp.int32))
+    prn = (jnp.stack(prns) if prns
+           else jnp.zeros((0,), dtype=jnp.int32))
+    out = (jnp.stack(outs) if outs
+           else jnp.zeros((0,), dtype=jnp.int32))
+    return bits[result], rec, blk, prn, out
+
 #: bound on a backend's undrained observation log — sessions drain it every
 #: batch; standalone benchmark loops must not grow it without bound
 _OP_LOG_CAP = 4096
@@ -445,6 +527,17 @@ class DeviceTapeBackend(SetBackend):
         self._fb_out: List[object] = []
 
     # -- conversions -----------------------------------------------------------
+    def _place(self, arr, kind: str):
+        """Host array -> device array, the single placement point every
+        upload funnels through.  ``kind`` names the layout: ``col``
+        (f32[N, 32, W] bit-major column blocks), ``bits`` (u32[N, W] packed
+        bitmap), ``pops`` (i32[N]), ``zmask`` (i32[M, N] verdict rows).
+        The base backend places on the default device;
+        :class:`~repro.columnar.shard.ShardedTapeBackend` overrides this to
+        pin each kind's block axis to the 1-D shard mesh."""
+        import jax.numpy as jnp
+        return jnp.asarray(arr)
+
     def _col_bitmajor(self, name: str):
         """Column as bit-major f32[N, 32, W] device blocks (None if the
         column is not numeric).  Resolves derived dictionary-code columns
@@ -452,7 +545,6 @@ class DeviceTapeBackend(SetBackend):
         int32 codes and run the same fused comparison kernels."""
         col = self._jcols.get(name)
         if col is None:
-            import jax.numpy as jnp
             raw = self.table.column_data(name)
             if not np.issubdtype(raw.dtype, np.number):
                 self._jcols[name] = False
@@ -460,8 +552,8 @@ class DeviceTapeBackend(SetBackend):
             arr = np.zeros(self._padded, dtype=np.float32)
             arr[: self.n] = raw.astype(np.float32)
             self.uploaded_bytes += arr.nbytes
-            col = jnp.asarray(arr.reshape(self.nblocks, self.wpb, 32)
-                              .transpose(0, 2, 1))
+            col = self._place(arr.reshape(self.nblocks, self.wpb, 32)
+                              .transpose(0, 2, 1), "col")
             self._jcols[name] = col
         elif col is False:
             return None
@@ -553,14 +645,11 @@ class DeviceTapeBackend(SetBackend):
             if col is False:
                 continue               # non-numeric: still host-resident
             raw = self.table.column_data(name)
-            tail = np.zeros((self.nblocks - dirty) * self.block,
-                            dtype=np.float32)
-            tail[: n_new - dirty * self.block] = \
-                raw[dirty * self.block:].astype(np.float32)
+            tail = dirty_tail(raw, dirty, self.nblocks, self.block)
             up += tail.nbytes
-            tail = jnp.asarray(
+            tail = self._place(
                 tail.reshape(self.nblocks - dirty, self.wpb, 32)
-                .transpose(0, 2, 1))
+                .transpose(0, 2, 1), "col")
             self._jcols[name] = (jnp.concatenate([col[:dirty], tail])
                                  if dirty else tail)
         self.uploaded_bytes += up
@@ -581,16 +670,16 @@ class DeviceTapeBackend(SetBackend):
         if bits.shape[0] < self.nblocks:
             bits = jnp.pad(bits, ((0, self.nblocks - bits.shape[0]), (0, 0)))
         self.device_dispatches += 1
-        bits = bits | jnp.asarray(words.reshape(self.nblocks, self.wpb))
+        bits = bits | self._place(words.reshape(self.nblocks, self.wpb),
+                                  "bits")
         return _DevSet(bits, ref.popcount_ref(bits))
 
     def _from_flat(self, words: np.ndarray) -> _DevSet:
         """Host flat packed words -> device blocked set."""
-        import jax.numpy as jnp
         from ..kernels import ref
         padded = np.zeros(self.nblocks * self.wpb, dtype=np.uint32)
         padded[: n_words(self.n)] = words
-        bits = jnp.asarray(padded.reshape(self.nblocks, self.wpb))
+        bits = self._place(padded.reshape(self.nblocks, self.wpb), "bits")
         return _DevSet(bits, ref.popcount_ref(bits))
 
     def _flat_device(self, d: _DevSet):
@@ -611,9 +700,10 @@ class DeviceTapeBackend(SetBackend):
 
     def empty(self) -> _DevSet:
         if self._empty is None:
-            import jax.numpy as jnp
-            bits = jnp.zeros((self.nblocks, self.wpb), dtype=jnp.uint32)
-            pops = jnp.zeros((self.nblocks,), dtype=jnp.int32)
+            bits = self._place(np.zeros((self.nblocks, self.wpb),
+                                        dtype=np.uint32), "bits")
+            pops = self._place(np.zeros((self.nblocks,),
+                                        dtype=np.int32), "pops")
             self._empty = _DevSet(bits, pops)
         return self._empty
 
@@ -989,13 +1079,10 @@ class DeviceTapeBackend(SetBackend):
         """
         if self._zones is None:
             return None, False
-        import jax.numpy as jnp
         atoms = tape.tree.atoms
         rows = []
         any_decided = False
-        for op in tape.ops:
-            if op.kind not in (ATOM, CHAIN):
-                continue
+        for op in tape.costed_ops():
             z = self._zone_mask([atoms[a] for a in op.aids], conj=op.conj)
             if z is None:
                 z = np.full(self.nblocks, ZONE_MAYBE, np.int32)
@@ -1003,8 +1090,10 @@ class DeviceTapeBackend(SetBackend):
                 any_decided = True
             rows.append(z)
         if not rows:
-            return jnp.zeros((0, self.nblocks), dtype=jnp.int32), False
-        return jnp.asarray(np.stack(rows)), any_decided
+            return self._place(np.zeros((0, self.nblocks), dtype=np.int32),
+                               "zmask"), False
+        return self._place(np.stack(rows).astype(np.int32),
+                           "zmask"), any_decided
 
     def _tape_program(self, tape: PlanTape, meta, skip: bool = False):
         """Build (or fetch) the jitted whole-tape program for ``tape``.
@@ -1030,68 +1119,9 @@ class DeviceTapeBackend(SetBackend):
         pallas, interpret = self.pallas, self.interpret
 
         def program(cols, values, lmasks, zmasks, full_bits, full_pops):
-            import jax.numpy as jnp
-            bits: List[object] = [None] * n_slots
-            pops: List[object] = [None] * n_slots
-            recs, blks, prns, outs = [], [], [], []
-            mi = 0
-            for oi, op in enumerate(ops):
-                if op.kind == FULL:
-                    b, p = full_bits, full_pops
-                elif op.kind == EMPTY:
-                    b = jnp.zeros_like(full_bits)
-                    p = jnp.zeros_like(full_pops)
-                elif op.kind == SETOP:
-                    b, p = _setop_impl(bits[op.a], bits[op.b], op.setop,
-                                       pallas, interpret)
-                else:
-                    cixs, vixs, opcodes = meta[oi]
-                    sb, sp = bits[op.a], pops[op.a]
-                    # records_evaluated stays the PRE-prune popcount (the
-                    # paper metric describes the plan, not the pruning);
-                    # blocks split into touched (live MAYBE) and pruned
-                    recs.append(sp.sum())
-                    zone = zmasks[mi] if prune else None
-                    mi += 1
-                    if zone is None:
-                        blks.append((sp > 0).sum())
-                        prns.append(jnp.int32(0))
-                    else:
-                        live = sp > 0
-                        maybe = zone == ZONE_MAYBE
-                        blks.append((live & maybe).sum())
-                        prns.append((live & ~maybe).sum())
-                    if opcodes[0] == IN_OPCODE:
-                        b, p = _lookup_impl(cols[cixs[0]], sb, sp,
-                                            lmasks[vixs[0]], pallas,
-                                            interpret, zone=zone,
-                                            skip=skip)
-                    elif op.kind == ATOM:
-                        b, p = _atom_impl(cols[cixs[0]], sb, sp,
-                                          values[vixs[0]], opcodes[0],
-                                          pallas, interpret, zone=zone,
-                                          skip=skip)
-                    else:
-                        stack = jnp.stack([cols[c] for c in cixs], axis=1)
-                        vals = jnp.stack([values[v] for v in vixs])
-                        b, p = _chain_impl(stack, sb, sp, vals, opcodes,
-                                           op.conj, pallas, interpret,
-                                           zone=zone, skip=skip)
-                    # realized output popcount — already computed for the
-                    # dead-block skip, so surfacing it is free: the Q-Error
-                    # feedback loop's ground truth rides the existing sync
-                    outs.append(p.sum())
-                bits[op.dst] = b
-                pops[op.dst] = p
-            rec = (jnp.stack(recs) if recs
-                   else jnp.zeros((0,), dtype=jnp.int32))
-            blk = (jnp.stack(blks) if blks
-                   else jnp.zeros((0,), dtype=jnp.int32))
-            prn = (jnp.stack(prns) if prns
-                   else jnp.zeros((0,), dtype=jnp.int32))
-            out = (jnp.stack(outs) if outs
-                   else jnp.zeros((0,), dtype=jnp.int32))
-            return bits[result], rec, blk, prn, out
+            return _tape_forward(ops, meta, result, n_slots, prune, skip,
+                                 pallas, interpret, cols, values, lmasks,
+                                 zmasks, full_bits, full_pops)
 
         prog = jax.jit(program)
         _TAPE_PROGRAMS[key] = prog
@@ -1115,7 +1145,7 @@ class DeviceTapeBackend(SetBackend):
         atoms = tape.tree.atoms
         full = self.full()
         if all(device_ok):
-            costed = [op for op in tape.ops if op.kind in (ATOM, CHAIN)]
+            costed = tape.costed_ops()
             # a K-atom CHAIN evaluates K atoms on all of src's live blocks:
             # counts scale by K, matching the fused +evaluations trade
             ks = np.asarray([len(op.aids) for op in costed],

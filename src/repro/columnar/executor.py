@@ -33,6 +33,8 @@ from ..core.sets import SetBackend, Stats
 from .bitmap import (WORD, bitmap_and, bitmap_andnot, bitmap_empty,
                      bitmap_full, bitmap_or, extend_bitmap, live_block_count,
                      n_words, next_pow2, pack_bits, popcount, unpack_bits)
+from .config import UNSET, ConfigError, ExecConfig, config_from_kwargs
+from .ingest import dirty_tail
 from .table import Table, rewrite_string_atoms
 
 _OPCODE = {"lt": 0, "le": 1, "gt": 2, "ge": 3, "eq": 4, "ne": 5}
@@ -299,10 +301,7 @@ class JaxBlockBackend(_HostOpLog, SetBackend):
         up = 0
         for name, col in list(self._jcols.items()):
             raw = self.table.column_data(name)
-            tail = np.zeros((self.nblocks - dirty) * self.block,
-                            dtype=np.float32)
-            tail[: n_new - dirty * self.block] = \
-                raw[dirty * self.block:].astype(np.float32)
+            tail = dirty_tail(raw, dirty, self.nblocks, self.block)
             up += tail.nbytes
             tail = jnp.asarray(tail.reshape(self.nblocks - dirty,
                                             self.block))
@@ -516,17 +515,78 @@ class JaxBlockBackend(_HostOpLog, SetBackend):
         return res
 
 
-def run_query(tree: PredicateTree, table: Table, planner: str = "shallowfish",
-              engine: str = "numpy", model=None, backend=None,
-              rewrite_strings: bool = True) -> tuple:
+def resolve_backend(table: Table, config: ExecConfig, reuse=None):
+    """The single backend factory every entry point funnels through.
+
+    Maps ``config.engine`` (plus the shard axis) to its backend class,
+    validates ``reuse`` against the config (table identity, backend class,
+    per-step engine flavor), and constructs a fresh backend from the
+    config's block / zone_prune / shards / mesh knobs when ``reuse`` is
+    None.  Replaces the three isinstance-matching copies the legacy
+    ``run_query`` carried; every mismatch is a :class:`ConfigError`
+    (a ``ValueError`` subclass, so old callers' excepts keep working).
+    """
+    eng = config.engine
+    if reuse is not None and reuse.table is not table:
+        raise ConfigError("backend was built for a different table")
+    if eng in ("tape", "tape-pallas"):
+        from .device import DeviceTapeBackend
+        if config.sharded:
+            from .shard import ShardedTapeBackend
+            if reuse is not None:
+                if not isinstance(reuse, ShardedTapeBackend):
+                    raise ConfigError(
+                        f"sharded engine {eng!r} (shards="
+                        f"{config.shards}) needs a ShardedTapeBackend")
+                return reuse
+            return ShardedTapeBackend(table, block=config.block,
+                                      zone_prune=config.zone_prune,
+                                      shards=config.shards,
+                                      mesh=config.mesh)
+        if reuse is not None:
+            if not isinstance(reuse, DeviceTapeBackend):
+                raise ConfigError(
+                    f"engine {eng!r} needs a DeviceTapeBackend")
+            return reuse
+        return DeviceTapeBackend(
+            table, block=config.block,
+            kernels="pallas" if eng == "tape-pallas" else "jax",
+            zone_prune=config.zone_prune)
+    if eng == "numpy":
+        if reuse is not None:
+            if not isinstance(reuse, BitmapBackend):
+                raise ConfigError("engine 'numpy' needs a BitmapBackend")
+            return reuse
+        return BitmapBackend(table)
+    if reuse is not None:
+        if not (isinstance(reuse, JaxBlockBackend)
+                and reuse.engine == eng):
+            raise ConfigError(f"engine {eng!r} needs a matching "
+                              "JaxBlockBackend")
+        return reuse
+    return JaxBlockBackend(table, block=config.block, engine=eng,
+                           zone_prune=config.zone_prune)
+
+
+def run_query(tree: PredicateTree, table: Table, planner=UNSET, engine=UNSET,
+              model=UNSET, backend=None, rewrite_strings=UNSET,
+              config: Optional[ExecConfig] = None) -> tuple:
     """Plan + execute; returns (record bitmap, plan, backend-with-stats).
+
+    The construction path is ``config=ExecConfig(...)``; the legacy
+    ``planner`` / ``engine`` / ``model`` / ``rewrite_strings`` kwargs keep
+    working through the deprecation shim (one warning per kwarg name per
+    process — see :mod:`repro.columnar.config`).
 
     Engines: ``numpy`` (oracle), ``jax`` / ``pallas`` (per-step block
     engine), ``tape`` / ``tape-pallas`` (plan compiled to a device tape and
     executed as one device program with a single host sync — see
-    ``core.tape`` / ``columnar.device``).  ``backend`` optionally reuses an
-    existing engine backend (keeps device-resident columns warm across
-    calls); it must match ``engine``.
+    ``core.tape`` / ``columnar.device``).  ``ExecConfig(engine="tape",
+    shards=S)`` runs the same tape ``shard_map``-ped over a 1-D device
+    mesh with one *collective* sync (``columnar.shard``).  ``backend``
+    optionally reuses an existing engine backend (keeps device-resident
+    columns warm across calls); it must match the config —
+    :func:`resolve_backend` validates it.
 
     ``rewrite_strings`` (default on) rewrites dict-encodable string atoms
     into numeric comparisons over the columns' dictionary codes before
@@ -536,37 +596,23 @@ def run_query(tree: PredicateTree, table: Table, planner: str = "shallowfish",
     """
     from ..core import deepfish, nooropt, optimal_plan, shallowfish
     from ..core.cost import PerAtomCostModel
-    model = model or PerAtomCostModel()
-    if rewrite_strings:
+    cfg = config_from_kwargs(config, planner=planner, engine=engine,
+                             model=model, rewrite_strings=rewrite_strings)
+    cost_model = cfg.model or PerAtomCostModel()
+    if cfg.rewrite_strings:
         tree = rewrite_string_atoms(tree, table)
+    name = cfg.planner
+    if name == "auto":
+        name = "shallowfish" if tree.depth <= 2 else "deepfish"
     planners = {"shallowfish": shallowfish, "deepfish": deepfish,
                 "optimal": optimal_plan, "nooropt": nooropt}
-    plan = planners[planner](tree, model, total_records=table.n_records)
-    if backend is not None and backend.table is not table:
-        raise ValueError("backend was built for a different table")
-    if engine in ("tape", "tape-pallas"):
+    plan = planners[name](tree, cost_model, total_records=table.n_records)
+    be = resolve_backend(table, cfg, reuse=backend)
+    if cfg.engine in ("tape", "tape-pallas"):
         from ..core.tape import compile_tape
-        from .device import DeviceTapeBackend
-        if backend is not None and not isinstance(backend,
-                                                  DeviceTapeBackend):
-            raise ValueError(f"engine {engine!r} needs a DeviceTapeBackend")
-        be = backend or DeviceTapeBackend(
-            table, kernels="pallas" if engine == "tape-pallas" else "jax")
         result = be.run_tape(compile_tape(plan))
-        lw = table.live_words()
-        return (result if lw is None else result & lw), plan, be
-    if engine == "numpy":
-        if backend is not None and not isinstance(backend, BitmapBackend):
-            raise ValueError("engine 'numpy' needs a BitmapBackend")
-        be = backend or BitmapBackend(table)
     else:
-        if backend is not None and not (
-                isinstance(backend, JaxBlockBackend)
-                and backend.engine == engine):
-            raise ValueError(f"engine {engine!r} needs a matching "
-                             "JaxBlockBackend")
-        be = backend or JaxBlockBackend(table, engine=engine)
-    result = execute_plan(plan, be)
+        result = execute_plan(plan, be)
     # tombstone deletes apply at materialize time on every engine: the
     # engines evaluate the predicate over all physical rows (caches stay
     # prefix-valid), the live mask ANDs the dead rows away at the end

@@ -65,6 +65,21 @@ class ZoneMap:
         return len(self.mins)
 
 
+def dirty_tail(raw: np.ndarray, dirty: int, nblocks: int,
+               block: int) -> np.ndarray:
+    """Host ``f32[(nblocks - dirty) * block]`` delta re-upload buffer: rows
+    of blocks ``[dirty, nblocks)`` of ``raw``, zero-padded to the block
+    grid.  The one place the block-epoch contract's "upload only the dirty
+    tail" arithmetic lives — :class:`~repro.columnar.executor.
+    JaxBlockBackend`, :class:`~repro.columnar.device.DeviceTapeBackend`,
+    and :class:`~repro.columnar.shard.ShardedTapeBackend` all reshape this
+    buffer into their own device layouts.
+    """
+    tail = np.zeros((nblocks - dirty) * block, dtype=np.float32)
+    tail[: len(raw) - dirty * block] = raw[dirty * block:].astype(np.float32)
+    return tail
+
+
 def _block_bounds(col: np.ndarray, block: int, start_block: int = 0):
     """(mins, maxs, nulls) for blocks ``start_block..`` of ``col``.
 

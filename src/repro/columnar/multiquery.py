@@ -52,7 +52,8 @@ from ..core.predicate import (Atom, DICT_SEL_STEP, Node, PredicateTree,
                               normalize, tree_copy)
 from ..core.sets import SetBackend
 from ..runtime import faults as _faults
-from .executor import BitmapBackend, JaxBlockBackend
+from .config import UNSET, ExecConfig, config_from_kwargs
+from .executor import resolve_backend
 from .table import Table, annotate_selectivities, rewrite_string_atoms
 
 _PLANNERS = {"shallowfish": shallowfish, "deepfish": deepfish,
@@ -396,6 +397,16 @@ class QuerySession:
 
     Parameters
     ----------
+    The construction path is ``QuerySession(table,
+    config=ExecConfig(...))`` — see :class:`~repro.columnar.config.
+    ExecConfig`.  Every kwarg below keeps working as a legacy spelling
+    through the deprecation shim (one warning per kwarg name per process);
+    mixing ``config=`` with legacy kwargs raises
+    :class:`~repro.columnar.config.ConfigError`.  ``ExecConfig(engine=
+    "tape", shards=S)`` additionally selects the block-sharded
+    multi-device backend (:class:`~repro.columnar.shard.
+    ShardedTapeBackend`).
+
     table:            the columnar table every query in a batch targets
     planner:          shallowfish | deepfish | optimal | nooropt | auto
                       (auto = shallowfish for depth <= 2, else deepfish)
@@ -470,41 +481,45 @@ class QuerySession:
 
     _ENGINES = ("numpy", "jax", "pallas", "tape", "tape-pallas")
 
-    def __init__(self, table: Table, planner: str = "shallowfish",
-                 engine: str = "numpy", model: Optional[CostModel] = None,
-                 plan_cache: Optional[LRUPlanCache] = None,
-                 share_threshold: int = 2,
-                 batched: Union[bool, str] = "auto", block: int = 8192,
-                 annotate: bool = True, persist_atom_cache: bool = True,
-                 rewrite_strings: bool = True, zone_prune: bool = True,
-                 share_margin: Optional[float] = 1.0,
-                 feedback: Union[bool, FeedbackStore] = True,
-                 feedback_absorb: bool = False):
-        if planner not in ("auto",) + tuple(_PLANNERS):
-            raise ValueError(f"unknown planner {planner!r}")
-        if engine not in self._ENGINES:
-            raise ValueError(f"unknown engine {engine!r}")
+    def __init__(self, table: Table, planner=UNSET, engine=UNSET,
+                 model=UNSET, plan_cache=UNSET, share_threshold=UNSET,
+                 batched=UNSET, block=UNSET, annotate=UNSET,
+                 persist_atom_cache=UNSET, rewrite_strings=UNSET,
+                 zone_prune=UNSET, share_margin=UNSET, feedback=UNSET,
+                 feedback_absorb=UNSET,
+                 config: Optional[ExecConfig] = None):
+        cfg = config_from_kwargs(
+            config, planner=planner, engine=engine, model=model,
+            plan_cache=plan_cache, share_threshold=share_threshold,
+            batched=batched, block=block, annotate=annotate,
+            persist_atom_cache=persist_atom_cache,
+            rewrite_strings=rewrite_strings, zone_prune=zone_prune,
+            share_margin=share_margin, feedback=feedback,
+            feedback_absorb=feedback_absorb)
+        self.config = cfg
         self.table = table
-        self.planner = planner
-        self.engine = engine
-        self.model = model or PerAtomCostModel()
+        self.planner = cfg.planner
+        self.engine = cfg.engine
+        self.model = cfg.model or PerAtomCostModel()
         # explicit None-check: an empty LRUPlanCache is falsy (len == 0)
-        self.plan_cache = plan_cache if plan_cache is not None else LRUPlanCache()
-        self.share_threshold = share_threshold
-        self.batched = batched
-        self.block = block
-        self.annotate = annotate
-        self.persist_atom_cache = persist_atom_cache
-        self.rewrite_strings = rewrite_strings
-        self.zone_prune = zone_prune
-        self.share_margin = share_margin
-        if feedback is True:
+        self.plan_cache = (cfg.plan_cache if cfg.plan_cache is not None
+                           else LRUPlanCache())
+        self.share_threshold = cfg.share_threshold
+        self.batched = cfg.batched
+        self.block = cfg.block
+        self.annotate = cfg.annotate
+        self.persist_atom_cache = cfg.persist_atom_cache
+        self.rewrite_strings = cfg.rewrite_strings
+        self.zone_prune = cfg.zone_prune
+        self.share_margin = cfg.share_margin
+        if cfg.feedback is True:
             self.feedback: Optional[FeedbackStore] = FeedbackStore()
-        elif feedback:
-            self.feedback = feedback
+        elif cfg.feedback:
+            self.feedback = cfg.feedback
         else:
             self.feedback = None
-        self.feedback_absorb = feedback_absorb and self.feedback is not None
+        self.feedback_absorb = (cfg.feedback_absorb
+                                and self.feedback is not None)
         self.last_result: Optional[BatchResult] = None
         self._atom_cache: Dict[tuple, object] = {}
         self._cache_version = self._table_fingerprint()
@@ -524,11 +539,12 @@ class QuerySession:
     def _make_backend(self, appended_from: Optional[int] = None
                       ) -> SetBackend:
         if self.engine == "numpy":
-            return BitmapBackend(self.table)
+            return resolve_backend(self.table, self.config)
         # the block/device engines hold uploaded columns: reuse one backend
         # across batches until a table write invalidates it; a *pure append*
         # (proven via Table.delta_since) refreshes the backend in place —
-        # only the dirty tail blocks re-upload
+        # only the dirty tail blocks re-upload (shard-local on the sharded
+        # backend)
         fp = self._table_fingerprint()
         if self._backend is not None:
             if self._backend_version == fp:
@@ -538,16 +554,7 @@ class QuerySession:
                 self._backend.refresh()
                 self._backend_version = fp
                 return self._backend
-        if self.engine in ("tape", "tape-pallas"):
-            from .device import DeviceTapeBackend
-            be = DeviceTapeBackend(
-                self.table, block=self.block,
-                kernels="pallas" if self.engine == "tape-pallas" else "jax",
-                zone_prune=self.zone_prune)
-        else:
-            be = JaxBlockBackend(self.table, block=self.block,
-                                 engine=self.engine,
-                                 zone_prune=self.zone_prune)
+        be = resolve_backend(self.table, self.config)
         self._backend = be
         self._backend_version = fp
         return be

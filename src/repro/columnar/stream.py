@@ -65,6 +65,7 @@ import numpy as np
 from ..core.predicate import Node, PredicateTree
 from ..runtime import faults as _faults
 from .bitmap import unpack_bits
+from .config import UNSET, ExecConfig, config_from_kwargs
 from .drainer import LANES, BackgroundDrainer, DrainPolicy, LatencyWindow
 from .multiquery import BatchResult, BatchStats, QuerySession
 from .table import Table
@@ -223,9 +224,15 @@ class StreamSession:
     """Admit queries into an in-flight batch interleaved with appends
     and deletes.
 
-    Parameters mirror :class:`QuerySession` (``engine="tape"`` +
-    ``batched=True`` by default: drains run the device-resident lockstep
-    executor, one bundled host sync per batch).  Serving knobs:
+    Execution is configured with ``config=ExecConfig(...)`` exactly like
+    :class:`QuerySession`; the stream defaults differ (``engine="tape"`` +
+    ``batched=True``: drains run the device-resident lockstep executor,
+    one bundled host sync per batch — one bundled *collective* sync under
+    ``shards > 1``).  Every legacy execution kwarg is an explicit
+    parameter routed through the deprecation shim — the old blind
+    ``**session_kwargs`` forwarding is gone, so a typo'd kwarg is a
+    ``TypeError`` instead of silently reaching :class:`QuerySession`.
+    Serving knobs:
 
     ``max_pending``
         in-flight batch bound; admission at it drains (inline without a
@@ -249,9 +256,14 @@ class StreamSession:
         compaction (None = manual only).
     """
 
-    def __init__(self, table: Table, planner: str = "deepfish",
-                 engine: str = "tape", max_pending: int = 64,
-                 batched: Union[bool, str] = True,
+    #: stream-flavored execution defaults (vs ExecConfig's conservative
+    #: numpy/auto): drains lockstep the device tape engine
+    DEFAULT_CONFIG = ExecConfig(planner="deepfish", engine="tape",
+                                batched=True)
+
+    def __init__(self, table: Table, planner=UNSET,
+                 engine=UNSET, max_pending: int = 64,
+                 batched=UNSET,
                  background: bool = False,
                  policy: Optional[DrainPolicy] = None,
                  max_queue: Optional[int] = None,
@@ -259,7 +271,11 @@ class StreamSession:
                  max_retries: int = 2, retry_backoff_s: float = 0.01,
                  cache_dir: Optional[str] = None,
                  auto_compact: Optional[float] = None,
-                 **session_kwargs):
+                 model=UNSET, plan_cache=UNSET, share_threshold=UNSET,
+                 block=UNSET, annotate=UNSET, persist_atom_cache=UNSET,
+                 rewrite_strings=UNSET, zone_prune=UNSET,
+                 share_margin=UNSET, feedback=UNSET, feedback_absorb=UNSET,
+                 config: Optional[ExecConfig] = None):
         if max_pending < 1:
             raise ValueError("max_pending must be >= 1")
         if overflow not in ("block", "raise"):
@@ -283,8 +299,17 @@ class StreamSession:
         # streaming atoms promote on evidence (their |R| touch amortizes
         # across future drains at delta-splice cost) while one-off atoms
         # still face the full per-batch check.
-        self.session = QuerySession(table, planner=planner, engine=engine,
-                                    batched=batched, **session_kwargs)
+        cfg = config_from_kwargs(
+            config, defaults=self.DEFAULT_CONFIG,
+            planner=planner, engine=engine, batched=batched, model=model,
+            plan_cache=plan_cache, share_threshold=share_threshold,
+            block=block, annotate=annotate,
+            persist_atom_cache=persist_atom_cache,
+            rewrite_strings=rewrite_strings, zone_prune=zone_prune,
+            share_margin=share_margin, feedback=feedback,
+            feedback_absorb=feedback_absorb)
+        self.config = cfg
+        self.session = QuerySession(table, config=cfg)
         self.restore_info: Optional[dict] = None
         if cache_dir:
             from . import persist as _persist
@@ -487,10 +512,11 @@ class StreamSession:
         degraded batch is an emergency serving, not a statistics
         source."""
         if self._fallback_session is None:
-            self._fallback_session = QuerySession(
-                self.table, planner=self.session.planner, engine="numpy",
-                plan_cache=self.session.plan_cache, batched=False,
-                feedback=False)
+            fcfg = self.session.config.replace(
+                engine="numpy", batched=False, feedback=False,
+                shards=1, mesh=None, model=self.session.model,
+                plan_cache=self.session.plan_cache)
+            self._fallback_session = QuerySession(self.table, config=fcfg)
         return self._fallback_session
 
     def _execute_resilient(self, queries: list

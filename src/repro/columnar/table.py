@@ -226,6 +226,12 @@ class Table:
     def __getitem__(self, name: str) -> np.ndarray:
         return self.columns[name]
 
+    def n_blocks(self, block: int) -> int:
+        """Real (unpadded) block count at block size ``block`` — the unit
+        the zone maps, delta re-upload accounting, and the shard block
+        partition all agree on."""
+        return (self.n_records + block - 1) // block
+
     _MUTLOG_CAP = 256
 
     def _log_mutation(self, kind: str, payload) -> None:

@@ -151,6 +151,12 @@ class PlanTape:
     def n_atom_ops(self) -> int:
         return sum(1 for op in self.ops if op.kind in (ATOM, CHAIN))
 
+    def costed_ops(self) -> Tuple["TapeOp", ...]:
+        """ATOM/CHAIN ops in tape order — the ops that pay a column touch.
+        Zone-verdict mask rows, feedback observations, and per-op popcount
+        bundles are all indexed by position in this sequence."""
+        return tuple(op for op in self.ops if op.kind in (ATOM, CHAIN))
+
     @property
     def key(self) -> tuple:
         """Structural identity (no comparison values): two tapes with equal

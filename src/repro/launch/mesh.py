@@ -21,3 +21,23 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
     if pod:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_shard_mesh(shards: int):
+    """1-D ``("shards",)`` mesh for block-sharded table execution
+    (:class:`repro.columnar.shard.ShardedTapeBackend`).
+
+    Raises :class:`repro.columnar.config.ConfigError` when the process has
+    fewer than ``shards`` devices — multi-device CPU runs must set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
+    first jax import (see ``tests/test_shard.py`` for the subprocess
+    pattern).
+    """
+    from ..columnar.config import ConfigError
+    avail = jax.device_count()
+    if shards > avail:
+        raise ConfigError(
+            f"shards={shards} but only {avail} jax device(s) visible; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "before the first jax import to simulate host devices")
+    return jax.make_mesh((shards,), ("shards",))

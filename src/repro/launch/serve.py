@@ -56,9 +56,10 @@ def main():
         # reusing cached work below the append boundary, tombstone deletes
         # for revoked requests, and — with --cache-dir — plan/tape/XLA
         # caches that survive the process for warm restarts
-        from ..columnar import DrainPolicy, StreamSession, Table
+        from ..columnar import DrainPolicy, ExecConfig, StreamSession, Table
         engine = args.engine if args.engine != "numpy" else "tape"
-        with StreamSession(Table(dict(requests)), engine=engine,
+        scfg = StreamSession.DEFAULT_CONFIG.replace(engine=engine)
+        with StreamSession(Table(dict(requests)), config=scfg,
                            max_pending=8 * len(rules), background=True,
                            policy=DrainPolicy(max_wait_ms=20.0,
                                               interactive_wait_ms=2.0),

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..columnar.bitmap import unpack_bits
+from ..columnar.config import ExecConfig
 from ..columnar.multiquery import BatchResult, LRUPlanCache, QuerySession
 from ..columnar.table import Table
 from ..core import Node
@@ -72,20 +73,17 @@ class RequestRouter:
         """requests: columnar dict of per-request metadata arrays.
         Returns a (n_rules, n_requests) boolean route matrix."""
         arrays = {k: np.asarray(v) for k, v in requests.items()}
+        cfg = ExecConfig(planner=self.planner, engine=self.engine,
+                         plan_cache=self.plan_cache,
+                         share_threshold=self.share_threshold)
         if not self.persistent:
             table = Table(arrays)
-            session = QuerySession(table, planner=self.planner,
-                                   engine=self.engine,
-                                   plan_cache=self.plan_cache,
-                                   share_threshold=self.share_threshold)
+            session = QuerySession(table, config=cfg)
             self.last_result = session.execute(self.exprs)
             return self.last_result.masks(table.n_records)
         if self.table is None:
             self.table = Table(arrays)
-            self._session = QuerySession(
-                self.table, planner=self.planner, engine=self.engine,
-                plan_cache=self.plan_cache,
-                share_threshold=self.share_threshold)
+            self._session = QuerySession(self.table, config=cfg)
             start = 0
         else:
             start = self.table.append(arrays)

@@ -37,6 +37,8 @@ DEFAULT_RULES: Dict[str, Axes] = {
                            # (saved remat carries shard over "model")
     "layers": None,
     "seq": None,
+    "blocks": "shards",    # columnar block axis on the 1-D table-shard mesh
+                           # (repro.columnar.shard.ShardedTapeBackend)
 }
 
 _CTX = threading.local()

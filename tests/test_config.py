@@ -1,0 +1,215 @@
+"""ExecConfig: the unified construction path for every execution surface.
+
+* config-equivalence sweep — every legacy kwarg spelling is bit-identical
+  to its ``ExecConfig`` spelling across engines, for ``run_query``,
+  ``QuerySession``, and ``StreamSession``,
+* invalid combinations raise ONE error type (:class:`ConfigError`, a
+  ``ValueError`` subclass) from one validation point,
+* the deprecation shim warns exactly once per legacy kwarg name.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.columnar import (BitmapBackend, ConfigError, DeviceTapeBackend,
+                            ExecConfig, QuerySession, StreamSession,
+                            make_forest_table, resolve_backend, run_query)
+from repro.columnar.config import (ENGINE_NAMES, PLANNER_NAMES, UNSET,
+                                   config_from_kwargs,
+                                   reset_legacy_warnings)
+from repro.columnar.queries import random_tree
+
+
+@pytest.fixture(scope="module")
+def table():
+    return make_forest_table(12_000, n_dup=2, seed=3)
+
+
+@pytest.fixture(scope="module")
+def trees(table):
+    return [random_tree(table, 6, 3, np.random.default_rng(s))
+            for s in (1, 2, 5)]
+
+
+def _quiet(fn, *a, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*a, **kw)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: legacy kwargs == ExecConfig spelling, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["numpy", "jax", "tape"])
+def test_run_query_legacy_equals_config(table, trees, engine):
+    for tree in trees:
+        legacy, _, _ = _quiet(run_query, tree, table, planner="deepfish",
+                              engine=engine, rewrite_strings=True)
+        cfg, _, _ = run_query(tree, table, config=ExecConfig(
+            planner="deepfish", engine=engine, rewrite_strings=True))
+        assert np.array_equal(legacy, cfg)
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jax", "tape"])
+def test_session_legacy_equals_config(table, trees, engine):
+    legacy_sess = _quiet(QuerySession, table, planner="deepfish",
+                         engine=engine, block=4096, zone_prune=False,
+                         share_margin=None, persist_atom_cache=False)
+    config_sess = QuerySession(table, config=ExecConfig(
+        planner="deepfish", engine=engine, block=4096, zone_prune=False,
+        share_margin=None, persist_atom_cache=False))
+    a = legacy_sess.execute(trees)
+    b = config_sess.execute(trees)
+    for x, y in zip(a.bitmaps, b.bitmaps):
+        assert np.array_equal(x, y)
+
+
+def test_stream_legacy_equals_config(table, trees):
+    legacy = _quiet(StreamSession, table, planner="deepfish",
+                    engine="tape", batched=True, share_threshold=3)
+    config = StreamSession(table, config=StreamSession.DEFAULT_CONFIG
+                           .replace(share_threshold=3))
+    try:
+        fa = [legacy.submit(tr) for tr in trees]
+        legacy.drain()
+        fb = [config.submit(tr) for tr in trees]
+        config.drain()
+        for x, y in zip(fa, fb):
+            assert np.array_equal(x.result(), y.result())
+        assert legacy.session.share_threshold == 3
+        assert config.session.share_threshold == 3
+    finally:
+        legacy.close()
+        config.close()
+
+
+def test_defaults_match_legacy_defaults(table, trees):
+    a = QuerySession(table).execute(trees)
+    b = QuerySession(table, config=ExecConfig()).execute(trees)
+    for x, y in zip(a.bitmaps, b.bitmaps):
+        assert np.array_equal(x, y)
+
+
+def test_session_mirrors_config_attributes(table):
+    cfg = ExecConfig(planner="auto", engine="tape", block=4096,
+                     share_threshold=4, feedback=False)
+    s = QuerySession(table, config=cfg)
+    assert s.config is cfg
+    assert (s.planner, s.engine, s.block) == ("auto", "tape", 4096)
+    assert s.share_threshold == 4 and s.feedback is None
+
+
+# ---------------------------------------------------------------------------
+# one error type, one validation point
+# ---------------------------------------------------------------------------
+
+def test_config_error_is_valueerror():
+    assert issubclass(ConfigError, ValueError)
+
+
+@pytest.mark.parametrize("kwargs", [
+    {"planner": "bogus"},
+    {"engine": "bogus"},
+    {"block": 100},                       # not a multiple of 32
+    {"block": 0},
+    {"batched": "sometimes"},
+    {"share_threshold": 0},
+    {"shards": 3},                        # not a power of two
+    {"shards": 0},
+    {"engine": "numpy", "shards": 2},     # host engine cannot shard
+    {"engine": "jax", "shards": 2},
+    {"engine": "pallas", "shards": 2},
+    {"engine": "tape-pallas", "shards": 2},
+])
+def test_invalid_configs_rejected(kwargs):
+    with pytest.raises(ConfigError):
+        ExecConfig(**kwargs)
+
+
+def test_legacy_spellings_raise_same_type(table):
+    with pytest.raises(ConfigError):
+        _quiet(QuerySession, table, planner="bogus")
+    with pytest.raises(ConfigError):     # was KeyError before the redesign
+        _quiet(run_query, None, table, planner="bogus")
+    with pytest.raises(ConfigError):
+        _quiet(StreamSession, table, engine="bogus")
+
+
+def test_config_plus_legacy_kwarg_rejected(table):
+    with pytest.raises(ConfigError):
+        QuerySession(table, planner="deepfish", config=ExecConfig())
+    with pytest.raises(ConfigError):
+        _quiet(run_query, None, table, engine="tape", config=ExecConfig())
+
+
+def test_backend_mismatches_rejected(table, trees):
+    tape_be = resolve_backend(table, ExecConfig(engine="tape"))
+    numpy_be = resolve_backend(table, ExecConfig(engine="numpy"))
+    assert isinstance(tape_be, DeviceTapeBackend)
+    assert isinstance(numpy_be, BitmapBackend)
+    with pytest.raises(ConfigError):     # tape engine + BitmapBackend
+        run_query(trees[0], table, config=ExecConfig(engine="tape"),
+                  backend=numpy_be)
+    with pytest.raises(ConfigError):     # numpy engine + DeviceTapeBackend
+        run_query(trees[0], table, config=ExecConfig(engine="numpy"),
+                  backend=tape_be)
+    with pytest.raises(ConfigError):     # sharded config + unsharded reuse
+        resolve_backend(table, ExecConfig(engine="tape", shards=2),
+                        reuse=tape_be)
+    other = make_forest_table(1_000, n_dup=2, seed=9)
+    with pytest.raises(ConfigError):     # table identity
+        resolve_backend(other, ExecConfig(engine="tape"), reuse=tape_be)
+
+
+def test_resolve_backend_reuses_matching(table):
+    cfg = ExecConfig(engine="tape")
+    be = resolve_backend(table, cfg)
+    assert resolve_backend(table, cfg, reuse=be) is be
+
+
+def test_stream_typo_kwarg_is_typeerror(table):
+    # the blind **session_kwargs passthrough is gone
+    with pytest.raises(TypeError):
+        StreamSession(table, sare_margin=2.0)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim: exactly one warning per kwarg name
+# ---------------------------------------------------------------------------
+
+def test_deprecation_warns_exactly_once_per_kwarg(table):
+    reset_legacy_warnings()
+    try:
+        with warnings.catch_warnings(record=True) as seen:
+            warnings.simplefilter("always")
+            QuerySession(table, planner="deepfish", engine="numpy")
+            QuerySession(table, planner="shallowfish", engine="jax")
+            run_query(random_tree(table, 4, 2, np.random.default_rng(0)),
+                      table, planner="deepfish", engine="numpy")
+        deps = [w for w in seen if issubclass(w.category,
+                                              DeprecationWarning)]
+        names = sorted(str(w.message).split("=")[0] for w in deps)
+        assert names == ["engine", "planner"]
+    finally:
+        reset_legacy_warnings()
+
+
+def test_config_from_kwargs_defaults_and_unset():
+    base = ExecConfig(engine="tape", batched=True)
+    assert config_from_kwargs(None, defaults=base) is base
+    reset_legacy_warnings()
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            got = config_from_kwargs(None, defaults=base, planner="auto",
+                                     engine=UNSET)
+        assert got.planner == "auto" and got.engine == "tape"
+    finally:
+        reset_legacy_warnings()
+
+
+def test_name_tables_cover_all_surfaces():
+    assert set(QuerySession._ENGINES) == set(ENGINE_NAMES)
+    assert "auto" in PLANNER_NAMES

@@ -1,0 +1,170 @@
+"""Block-sharded tape execution in a SUBPROCESS (host-device count is
+locked at first jax init, so multi-device runs cannot share the main
+pytest process — same pattern as test_dryrun_small.py):
+
+* differential sweep: planners x shard counts {1, 2, 8} x append/delete
+  sequences, bit-identical to the single-device numpy oracle,
+* one (collective) host sync per query, one bundled sync per lockstep
+  batch, under every shard count,
+* ``programs_compiled_on_append == 0`` preserved under sharding (zone
+  masks stay runtime inputs),
+* shard-local delta re-upload: a small append lands on one shard.
+
+An in-process smoke (1 device, shards=1) covers the shard_map wrapper
+without the subprocess.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.columnar import (ExecConfig, QuerySession, ShardedTapeBackend,
+                                make_forest_table, random_tree, run_query)
+    from repro.columnar.device import _TAPE_PROGRAMS
+
+    def traces():
+        return (len(_TAPE_PROGRAMS),
+                sum(p._cache_size() for p in _TAPE_PROGRAMS.values()))
+
+    BLOCK = 4096
+    t = make_forest_table(50_000, n_dup=2, seed=7)
+    trees = [random_tree(t, 6, 3, np.random.default_rng(s))
+             for s in (1, 2, 4)]
+    planners = ("shallowfish", "deepfish")
+
+    def oracle(tree, planner="deepfish"):
+        return run_query(tree, t, config=ExecConfig(planner=planner))[0]
+
+    out = {"identical": True, "one_sync": True}
+
+    # -- differential sweep: planners x shard counts ----------------------
+    for S in (1, 2, 8):
+        be = ShardedTapeBackend(t, block=BLOCK, shards=S)
+        for pl in planners:
+            cfg = ExecConfig(planner=pl, engine="tape", block=BLOCK,
+                             shards=S)
+            for tree in trees:
+                s0 = be.host_syncs
+                got, _, _ = run_query(tree, t, config=cfg, backend=be)
+                out["identical"] &= bool(
+                    np.array_equal(got, oracle(tree, pl)))
+                out["one_sync"] &= (be.host_syncs - s0 == 1)
+        out[f"mesh_{S}"] = be.shards
+
+    # -- append / delete sequence under 8 shards --------------------------
+    be = ShardedTapeBackend(t, block=BLOCK, shards=8)
+    cfg = ExecConfig(planner="deepfish", engine="tape", block=BLOCK,
+                     shards=8)
+    for tree in trees:
+        run_query(tree, t, config=cfg, backend=be)
+    p0, c0 = traces()
+    t.append({k: np.asarray(v)[:900] for k, v in t.columns.items()})
+    be.refresh()
+    out["delta_upload_shards"] = be.delta_upload_shards
+    ok = True
+    for tree in trees:
+        got, _, _ = run_query(tree, t, config=cfg, backend=be)
+        ok &= bool(np.array_equal(got, oracle(tree)))
+    t.delete(np.arange(0, 5000, 7))
+    for tree in trees:
+        got, _, _ = run_query(tree, t, config=cfg, backend=be)
+        ok &= bool(np.array_equal(got, oracle(tree)))
+    p1, c1 = traces()
+    out["post_mutation_identical"] = ok
+    out["programs_compiled_on_append"] = (p1 - p0) + (c1 - c0)
+
+    # -- config routing + lockstep batch: one bundled collective sync -----
+    got, _, be2 = run_query(trees[0], t, config=cfg)
+    out["config_builds_sharded"] = type(be2).__name__ == "ShardedTapeBackend"
+    sess = QuerySession(t, config=cfg.replace(batched=True))
+    res = sess.execute(trees)
+    out["lockstep_identical"] = all(
+        np.array_equal(b, oracle(tr)) for b, tr in zip(res.bitmaps, trees))
+    out["lockstep_syncs"] = res.backend.host_syncs
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def shard_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")]
+    assert line, proc.stdout[-2000:]
+    return json.loads(line[-1][len("RESULT "):])
+
+
+def test_sharded_bit_identical_to_oracle(shard_results):
+    assert shard_results["identical"] is True
+    for s in (1, 2, 8):
+        assert shard_results[f"mesh_{s}"] == s
+
+
+def test_one_collective_sync_per_query(shard_results):
+    assert shard_results["one_sync"] is True
+
+
+def test_append_delete_stay_identical(shard_results):
+    assert shard_results["post_mutation_identical"] is True
+
+
+def test_appends_never_retrace_under_sharding(shard_results):
+    assert shard_results["programs_compiled_on_append"] == 0
+
+
+def test_small_append_lands_on_one_shard(shard_results):
+    assert shard_results["delta_upload_shards"] == 1
+
+
+def test_config_routes_to_sharded_backend(shard_results):
+    assert shard_results["config_builds_sharded"] is True
+
+
+def test_lockstep_batch_one_bundled_sync(shard_results):
+    assert shard_results["lockstep_identical"] is True
+    assert shard_results["lockstep_syncs"] == 1
+
+
+# ---------------------------------------------------------------------------
+# in-process smoke: the shard_map wrapper on a 1-device mesh
+# ---------------------------------------------------------------------------
+
+def test_shard_map_wrapper_single_device(forest):
+    from repro.columnar import (ExecConfig, ShardedTapeBackend, random_tree,
+                                run_query)
+    tree = random_tree(forest, 6, 3, np.random.default_rng(3))
+    want, _, _ = run_query(tree, forest, config=ExecConfig(
+        planner="deepfish"))
+    be = ShardedTapeBackend(forest, shards=1)
+    got, _, _ = run_query(tree, forest, config=ExecConfig(
+        planner="deepfish", engine="tape"), backend=be)
+    assert np.array_equal(got, want)
+    assert be.host_syncs == 1
+
+
+def test_sharded_rejects_pallas_kernels(forest):
+    from repro.columnar import ConfigError, ShardedTapeBackend
+    with pytest.raises(ConfigError):
+        ShardedTapeBackend(forest, kernels="pallas", shards=1)
+
+
+def test_too_many_shards_rejected(forest):
+    # the main process sees ONE device (conftest contract)
+    from repro.columnar import ConfigError, ShardedTapeBackend
+    with pytest.raises(ConfigError):
+        ShardedTapeBackend(forest, shards=4)
