@@ -428,6 +428,75 @@ def bench_slo(args) -> dict:
     return out
 
 
+def bench_obs_stream(args) -> dict:
+    """Observability overhead on the serving path: the same warm drain loop
+    with telemetry+trace off vs on (caller-owned registry + tracer).  The
+    on-arm additionally exercises the per-drain publish, explain retention
+    and the latency histogram — everything a live ``/metrics`` scrape
+    would see — and must stay bit-identical at one bundled sync/drain."""
+    from repro.columnar import Tracer
+    from repro.runtime.telemetry import MetricsRegistry
+
+    rows = min(args.rows, 200_000)
+    table_seed = make_forest_table(rows, n_dup=1, seed=7, strings=True)
+    rng = np.random.default_rng(2)
+    pool = [random_tree(table_seed, args.atoms, args.depth, rng)
+            for _ in range(args.templates)]
+    queries = [pool[i % len(pool)] for i in range(args.batch)]
+    rounds = max(args.rounds, 3)
+
+    def run(telemetry, trace):
+        table = make_forest_table(rows, n_dup=1, seed=7, strings=True)
+        cfg = StreamSession.DEFAULT_CONFIG.replace(
+            engine=args.engine, block=args.block,
+            telemetry=telemetry, trace=trace)
+        stream = StreamSession(table, config=cfg,
+                               max_pending=args.batch + 1)
+        times, syncs, bitmaps = [], [], []
+        for rnd in range(rounds):
+            futs = [stream.submit(q) for q in queries]
+            be_syncs0 = (stream.session._backend.host_syncs
+                         if stream.session._backend is not None else 0)
+            t0 = time.perf_counter()
+            stream.drain()
+            if rnd:                       # round 0 seeds jit/plans/uploads
+                times.append((time.perf_counter() - t0) * 1e3)
+            syncs.append(stream.session._backend.host_syncs - be_syncs0)
+            if rnd == rounds - 1:
+                bitmaps = [f.result() for f in futs]
+        stream.close()
+        # best-of the timed drains (the repo's idiom): single ~100ms+
+        # drains are noisy enough that a sum would swamp a few-percent
+        # telemetry delta in scheduler jitter
+        return min(times), max(syncs[1:]), bitmaps
+
+    run(False, False)        # untimed: process-wide jit warmup is shared
+    off_ms, off_syncs, off_bitmaps = run(False, False)
+    reg, tr = MetricsRegistry(), Tracer()
+    on_ms, on_syncs, on_bitmaps = run(reg, tr)
+    spans = tr.drain()
+    snap = reg.snapshot()
+    lat = snap.get("repro_query_latency_ms", {})
+    return {
+        "rounds": rounds,
+        "queries": args.batch,
+        "engine": args.engine,
+        "off_ms": round(off_ms, 3),
+        "on_ms": round(on_ms, 3),
+        "overhead_pct": round((on_ms / off_ms - 1.0) * 100.0, 2)
+        if off_ms else 0.0,
+        "identical": bool(all(np.array_equal(a, b) for a, b in
+                              zip(off_bitmaps, on_bitmaps))),
+        "host_syncs_per_drain_off": off_syncs,
+        "host_syncs_per_drain_on": on_syncs,
+        "metrics_registered": len(reg.names()),
+        "latency_samples": sum(s.get("count", 0)
+                               for s in lat.get("samples", [])),
+        "spans_total": len(spans),
+        "drain_spans": sum(1 for s in spans if s.name == "stream.drain"),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=1_000_000)
@@ -457,6 +526,10 @@ def main():
                          "latency percentiles, fault-injected degradation, "
                          "sync contract under tombstones, warm-vs-cold "
                          "restart")
+    ap.add_argument("--obs", dest="obs", action="store_true", default=True,
+                    help="run the observability overhead section on the "
+                         "serving path (default: on)")
+    ap.add_argument("--no-obs", dest="obs", action="store_false")
     ap.add_argument("--first-drain-probe", default=None, metavar="DIR",
                     help=argparse.SUPPRESS)   # internal: see bench_slo
     args = ap.parse_args()
@@ -501,6 +574,18 @@ def main():
           f"{rb['warm_ms']:.1f} ms ({rb['tape_cache_hits']}/{rb['queries']} "
           f"tapes rebound)")
 
+    if args.obs:
+        report["obs"] = bench_obs_stream(args)
+        ob = report["obs"]
+        print(f"obs [{ob['engine']}]: off {ob['off_ms']:.1f} ms  vs  on "
+              f"{ob['on_ms']:.1f} ms  ->  {ob['overhead_pct']:+.1f}% "
+              f"overhead, {ob['metrics_registered']} metrics, "
+              f"{ob['latency_samples']} latency samples, "
+              f"{ob['drain_spans']} drain spans, syncs/drain "
+              f"{ob['host_syncs_per_drain_off']:g}->"
+              f"{ob['host_syncs_per_drain_on']:g}  "
+              f"identical={ob['identical']}")
+
     if args.slo:
         report["slo"] = bench_slo(args)
         slo = report["slo"]
@@ -539,6 +624,15 @@ def main():
             and report["selective"]["host_fallbacks"] == 0):
         raise SystemExit("FAIL: zone pruning inactive on the selective "
                          "stream (or the compiled path fell back)")
+    if args.obs:
+        ob = report["obs"]
+        if not (ob["identical"]
+                and ob["host_syncs_per_drain_off"]
+                == ob["host_syncs_per_drain_on"]
+                and ob["latency_samples"] > 0):
+            raise SystemExit("FAIL: serving observability perturbed results "
+                             "or sync counts, or published no latency "
+                             "samples")
     if args.slo:
         slo = report["slo"]
         if not (slo["faults"]["identical"]

@@ -18,6 +18,10 @@ contract (exact, noise-free — these ARE the paper-level guarantees):
     single-device run, one collective sync per query (one bundled sync per
     lockstep batch), zero retraces across appends, and the delta re-upload
     confined to the dirty shard
+  * observability is free: with telemetry + tracing enabled the results
+    stay bit-identical and the sync/dispatch counts unchanged (fresh run),
+    and the measured overhead is <= 5% on the committed full-scale
+    baseline (device and serving sections)
   * the drift workload's Q-Error feedback loop closes: realized
     selectivities correct the estimator (``qerror_reduction``), stale
     cached plans are evicted-and-replanned (``drift_evictions > 0``), the
@@ -202,6 +206,26 @@ def check_device(gate: Gate, fresh: dict, base: dict, tol: float) -> None:
                    drift.get("plan_cost_ratio_feedback", 99.0) <= 1.05,
                    f"fresh={drift.get('plan_cost_ratio_feedback')}")
 
+    # -- contract: observability is free (zero perturbation, bounded cost) ---
+    obs, bobs = fresh.get("obs"), base.get("obs")
+    gate.check("obs section present", obs is not None)
+    if obs is not None:
+        gate.check("obs.identical (telemetry/trace on == off)",
+                   bool(obs.get("identical")))
+        gate.check("obs sync/dispatch counts unchanged",
+                   bool(obs.get("contracts_equal")),
+                   f"syncs {obs.get('host_syncs_off')}->"
+                   f"{obs.get('host_syncs_on')}, dispatches "
+                   f"{obs.get('dispatches_off')}->"
+                   f"{obs.get('dispatches_on')}")
+        # the <=5% ceiling is asserted on the committed full-scale baseline
+        # (smoke batches are small enough that a few ms of gauge publishing
+        # reads as a large percentage); the fresh run still gates identity
+        # and the sync contract exactly
+        gate.check("obs.overhead <= 5% in committed baseline",
+                   (bobs or {}).get("overhead_pct", 99.0) <= 5.0,
+                   f"baseline={(bobs or {}).get('overhead_pct')}%")
+
     # -- throughput floors ----------------------------------------------------
     for name, sec, bsec in (("single", single, bsingle),
                             ("batch", batch, bbatch),
@@ -261,6 +285,26 @@ def check_stream(gate: Gate, fresh: dict, base: dict, tol: float,
         gate.check("stream.selective.host_syncs_per_batch == 1",
                    sel.get("host_syncs_per_batch") == 1,
                    f"fresh={sel.get('host_syncs_per_batch')}")
+
+    # -- contract: serving observability is free ------------------------------
+    ob, bob = fresh.get("obs"), base.get("obs")
+    gate.check("stream.obs section present", ob is not None)
+    if ob is not None:
+        gate.check("stream.obs.identical", bool(ob.get("identical")))
+        gate.check("stream.obs syncs/drain unchanged",
+                   ob.get("host_syncs_per_drain_off")
+                   == ob.get("host_syncs_per_drain_on"),
+                   f"off={ob.get('host_syncs_per_drain_off')} "
+                   f"on={ob.get('host_syncs_per_drain_on')}")
+        gate.check("stream.obs latency histogram sampled",
+                   ob.get("latency_samples", 0) > 0,
+                   f"fresh={ob.get('latency_samples')}")
+        gate.check("stream.obs drain spans recorded",
+                   ob.get("drain_spans", 0) > 0,
+                   f"fresh={ob.get('drain_spans')}")
+        gate.check("stream.obs.overhead <= 5% in committed baseline",
+                   (bob or {}).get("overhead_pct", 99.0) <= 5.0,
+                   f"baseline={(bob or {}).get('overhead_pct')}%")
 
     # -- contract: serving SLOs (fault degradation, tombstones, restarts) ----
     slo = fresh.get("slo")

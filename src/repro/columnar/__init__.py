@@ -43,6 +43,8 @@ from .stream import (StreamBackpressure, StreamClosed, StreamFuture,
                      StreamQueryError, StreamSession, StreamStats)
 from .table import (DictColumn, Table, annotate_selectivities,
                     empirical_selectivity, rewrite_string_atoms)
+from .trace import (ExplainReport, OpObservation, SpanRecord, Tracer,
+                    explain_analyze, tracer)
 
 __all__ = [
     "pack_bits", "unpack_bits", "popcount", "bitmap_and", "bitmap_or",
@@ -57,4 +59,6 @@ __all__ = [
     "PlanCacheStats", "StreamFuture", "StreamSession", "StreamStats",
     "StreamQueryError", "StreamClosed", "StreamBackpressure",
     "BackgroundDrainer", "DrainPolicy", "LatencyWindow",
+    "Tracer", "tracer", "SpanRecord", "explain_analyze", "ExplainReport",
+    "OpObservation",
 ]

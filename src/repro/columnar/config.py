@@ -107,6 +107,14 @@ class ExecConfig:
     plan_cache: Any = None            # LRUPlanCache | None
     shards: int = 1
     mesh: Any = None                  # jax.sharding.Mesh | None
+    # observability (PR 9): both accept bool or a caller-owned object.
+    # telemetry=True publishes per-batch deltas + snapshots into the
+    # process-global MetricsRegistry; trace=True emits host wall-clock
+    # spans into the process-global Tracer ring.  Neither adds host syncs,
+    # dispatches, or retraces — device numbers ride the bundled transfer
+    # the batch already pays for (docs/architecture.md §8).
+    telemetry: Any = True             # bool | MetricsRegistry
+    trace: Any = True                 # bool | Tracer
 
     def __post_init__(self) -> None:
         if self.planner not in PLANNER_NAMES:
@@ -147,6 +155,17 @@ class ExecConfig:
             if size is not None and self.shards > 1 and size != self.shards:
                 raise ConfigError(
                     f"mesh has {size} devices but shards={self.shards}")
+        if self.telemetry not in (True, False, None) \
+                and not (hasattr(self.telemetry, "counter")
+                         and hasattr(self.telemetry, "gauge")):
+            raise ConfigError(
+                "telemetry must be a bool or a MetricsRegistry-like object "
+                f"(counter/gauge accessors), got {self.telemetry!r}")
+        if self.trace not in (True, False, None) \
+                and not hasattr(self.trace, "span"):
+            raise ConfigError(
+                "trace must be a bool or a Tracer-like object (span() "
+                f"context manager), got {self.trace!r}")
 
     def replace(self, **changes: Any) -> "ExecConfig":
         """Return a copy with ``changes`` applied (re-validated)."""

@@ -195,4 +195,12 @@ class BackgroundDrainer:
                 self.wakeups += 1
             if lanes:
                 self.deadline_drains += 1
-                self._session._drain_lanes(lanes)
+                tr = getattr(self._session, "tracer", None)
+                if tr is not None:
+                    # deadline drains run on this daemon thread; the span
+                    # parents the session's stream.drain/batch.* spans
+                    with tr.span("drainer.deadline_drain",
+                                 lanes=",".join(lanes)):
+                        self._session._drain_lanes(lanes)
+                else:
+                    self._session._drain_lanes(lanes)

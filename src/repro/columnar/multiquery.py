@@ -52,9 +52,12 @@ from ..core.predicate import (Atom, DICT_SEL_STEP, Node, PredicateTree,
                               normalize, tree_copy)
 from ..core.sets import SetBackend
 from ..runtime import faults as _faults
+from ..runtime.telemetry import (QERROR_BUCKETS, publish_scalars,
+                                 resolve_registry, scalar_snapshot)
 from .config import UNSET, ExecConfig, config_from_kwargs
 from .executor import resolve_backend
 from .table import Table, annotate_selectivities, rewrite_string_atoms
+from .trace import backend_counters, null_span, resolve_tracer
 
 _PLANNERS = {"shallowfish": shallowfish, "deepfish": deepfish,
              "optimal": optimal_plan, "nooropt": nooropt}
@@ -81,6 +84,13 @@ class PlanCacheStats:
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return scalar_snapshot(self, extra=("hit_rate",))
+
+    def publish(self, registry, labels=None) -> None:
+        publish_scalars(registry, "repro_plan_cache", self.as_dict(),
+                        labels, help="LRU plan cache lifetime counters")
 
 
 class LRUPlanCache:
@@ -295,6 +305,23 @@ class BatchStats:
     atom_qerrors: Dict[tuple, float] = field(default_factory=dict)
     plan_qerrors: List[float] = field(default_factory=list)  # per query
     drift_evictions: int = 0           # plan-cache entries evicted for drift
+    # per-batch engine counter deltas (observability PR): the backends keep
+    # *lifetime* counters (a reused device backend accumulates forever);
+    # execute() snapshots them around the batch so each BatchStats carries
+    # a reset-safe per-batch view — host_syncs here IS the one-sync
+    # contract readout for this batch
+    host_syncs: int = 0
+    device_dispatches: int = 0
+    host_fallbacks: int = 0
+    blocks_touched: float = 0.0
+    blocks_pruned: float = 0.0
+    records_evaluated: float = 0.0
+    weighted_cost: float = 0.0
+    # raw engine op log for this batch: (atom_keys, est, src, out) tuples,
+    # drained EVERY batch — with feedback off the log previously sat
+    # undrained until the cap, leaking stale observations into whichever
+    # consumer drained next (explain_analyze reads these)
+    op_observations: List[tuple] = field(default_factory=list, repr=False)
 
     @property
     def dedupe_ratio(self) -> float:
@@ -313,6 +340,68 @@ class BatchStats:
         appends (1.0 = only appended rows were touched)."""
         total = self.delta_rows_reused + self.delta_rows_evaluated
         return self.delta_rows_reused / total if total else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        """Scalar snapshot (the shared stats protocol: field names are the
+        metric suffixes; see :func:`repro.runtime.telemetry.scalar_snapshot`)."""
+        return scalar_snapshot(
+            self, extra=("dedupe_ratio", "plan_hit_rate",
+                         "delta_reuse_ratio"))
+
+    def publish(self, registry, labels=None) -> None:
+        """Increment per-batch counters + qerror histogram into
+        ``registry`` (counters take deltas — BatchStats IS a per-batch
+        delta, so everything monotone publishes as ``repro_batch_*_total``)."""
+        if registry is None:
+            return
+        lb = dict(labels or {})
+        d = self.as_dict()
+        for name in _BATCH_COUNTER_FIELDS:
+            v = d.get(name, 0)
+            if v:
+                registry.counter(f"repro_batch_{name}_total",
+                                 _BATCH_COUNTER_FIELDS[name]).inc(v, **lb)
+        registry.counter("repro_batches_total", "executed batches").inc(
+            1, **lb)
+        registry.counter("repro_queries_total", "executed queries").inc(
+            self.n_queries, **lb)
+        h = registry.histogram("repro_op_qerror", "per-op realized Q-Error",
+                               buckets=QERROR_BUCKETS)
+        for pq in self.plan_qerrors:
+            registry.histogram(
+                "repro_plan_qerror", "per-plan realized Q-Error",
+                buckets=QERROR_BUCKETS).observe(pq, **lb)
+        for keys, est, src, out in self.op_observations:
+            if src > 0:
+                h.observe(qerror(est, out / src), **lb)
+
+
+#: BatchStats fields published as per-batch counter increments (name ->
+#: help text); the rest of as_dict() is snapshot-only (gauges/ratios)
+_BATCH_COUNTER_FIELDS: Dict[str, str] = {
+    "logical_atoms": "atom applications requested by executors",
+    "physical_atoms": "column touches actually performed",
+    "atom_cache_hits": "applications served as a pure set-AND",
+    "shared_atom_keys": "atom keys promoted to the shared |R| cache",
+    "kernel_batches": "fused multi-bitmap kernel invocations",
+    "plan_cache_hits": "plan cache hits",
+    "plan_cache_misses": "plan cache misses",
+    "tape_cache_hits": "compiled tapes served by rebinding",
+    "lockstep_rounds": "lockstep executor rounds",
+    "atoms_delta_extended": "cached atom bitmaps spliced after append",
+    "delta_rows_evaluated": "appended rows (re)evaluated",
+    "delta_rows_reused": "prefix rows served from cache",
+    "upload_bytes": "host->device column bytes",
+    "feedback_observations": "per-op (est, realized) pairs logged",
+    "drift_evictions": "plan-cache entries evicted for drift",
+    "host_syncs": "bundled device->host syncs",
+    "device_dispatches": "device kernel dispatches",
+    "host_fallbacks": "host gather fallbacks",
+    "blocks_touched": "blocks touched by evaluations",
+    "blocks_pruned": "blocks decided by zone maps alone",
+    "records_evaluated": "records evaluated (the paper's cost metric)",
+    "weighted_cost": "cost-factor weighted records evaluated",
+}
 
 
 @dataclass
@@ -520,6 +609,11 @@ class QuerySession:
             self.feedback = None
         self.feedback_absorb = (cfg.feedback_absorb
                                 and self.feedback is not None)
+        # observability plane (PR 9): a registry to publish per-batch
+        # deltas into and a tracer for host wall-clock spans; both None
+        # when disabled — the hot path guards on None, not on flags
+        self.telemetry = resolve_registry(cfg.telemetry)
+        self.tracer = resolve_tracer(cfg.trace)
         self.last_result: Optional[BatchResult] = None
         self._atom_cache: Dict[tuple, object] = {}
         self._cache_version = self._table_fingerprint()
@@ -655,28 +749,42 @@ class QuerySession:
                 ) -> BatchResult:
         """Plan + execute a batch; returns per-query record bitmaps (in
         input order) plus the batch's sharing statistics."""
+        tr = self.tracer
+        if tr is None:
+            return self._execute_impl(queries)
+        with tr.span("batch.execute", queries=len(queries),
+                     engine=self.engine):
+            return self._execute_impl(queries)
+
+    def _execute_impl(self, queries: Sequence[Union[Node, PredicateTree]]
+                      ) -> BatchResult:
         t0 = time.perf_counter()
+        tr = self.tracer
+        sp = tr.span if tr is not None else null_span
         # fault-plane hook: a test can poison one query of the batch (the
         # stream layer's quarantine must fail only that query's future)
         if _faults.fault_plane().active:
             for i, q in enumerate(queries):
                 _faults.trip("query.plan", index=i, query=q)
-        if self.annotate:
-            # work on private copies: annotation overwrites atom
-            # selectivities, and caller-supplied trees (hand-set stats, UDF
-            # atoms the table cannot estimate) must stay untouched
-            trees = [normalize(tree_copy(q.root if isinstance(q, PredicateTree)
-                                         else q)) for q in queries]
-            fb = self.feedback if self.feedback_absorb else None
-            for t in trees:
-                annotate_selectivities(t, self.table, feedback=fb)
-        else:
-            trees = [q if isinstance(q, PredicateTree)
-                     else normalize(tree_copy(q)) for q in queries]
+        with sp("batch.annotate"):
+            if self.annotate:
+                # work on private copies: annotation overwrites atom
+                # selectivities, and caller-supplied trees (hand-set stats,
+                # UDF atoms the table cannot estimate) must stay untouched
+                trees = [normalize(tree_copy(q.root
+                                             if isinstance(q, PredicateTree)
+                                             else q)) for q in queries]
+                fb = self.feedback if self.feedback_absorb else None
+                for t in trees:
+                    annotate_selectivities(t, self.table, feedback=fb)
+            else:
+                trees = [q if isinstance(q, PredicateTree)
+                         else normalize(tree_copy(q)) for q in queries]
         if self.rewrite_strings:
             # after annotation: the rewrite stamps exact selectivities on
             # the code-space atoms from the dictionary value frequencies
-            trees = [rewrite_string_atoms(t, self.table) for t in trees]
+            with sp("batch.rewrite_strings"):
+                trees = [rewrite_string_atoms(t, self.table) for t in trees]
         stats = BatchStats(n_queries=len(trees))
         planners = [self._resolve_planner(t) for t in trees]
         # "auto": lockstep for the per-step block engines (their win is the
@@ -692,24 +800,30 @@ class QuerySession:
         cs = self.plan_cache.stats
         h0, m0, th0 = cs.hits, cs.misses, cs.tape_hits
         tapes: Optional[List] = None
-        if use_tapes:
-            # per-query compiled device programs: plan-cache hits rebind
-            # the cached host tape (no re-trace/DCE/slot-allocation) and
-            # share jitted programs via the tape's structural key
-            pairs = [self.plan_cache.get_or_plan(
-                         t, pl, self.model,
-                         total_records=self.table.n_records, with_tape=True)
-                     for t, pl in zip(trees, planners)]
-            plans = [p for p, _ in pairs]
-            tapes = [tp for _, tp in pairs]
-        else:
-            plans = [self.plan_cache.get_or_plan(
-                         t, pl, self.model,
-                         total_records=self.table.n_records)
-                     for t, pl in zip(trees, planners)]
-        stats.plan_cache_hits = cs.hits - h0
-        stats.plan_cache_misses = cs.misses - m0
-        stats.tape_cache_hits = cs.tape_hits - th0
+        with sp("batch.plan") as psp:
+            if use_tapes:
+                # per-query compiled device programs: plan-cache hits
+                # rebind the cached host tape (no re-trace/DCE/slot-
+                # allocation) and share jitted programs via the tape's
+                # structural key
+                pairs = [self.plan_cache.get_or_plan(
+                             t, pl, self.model,
+                             total_records=self.table.n_records,
+                             with_tape=True)
+                         for t, pl in zip(trees, planners)]
+                plans = [p for p, _ in pairs]
+                tapes = [tp for _, tp in pairs]
+            else:
+                plans = [self.plan_cache.get_or_plan(
+                             t, pl, self.model,
+                             total_records=self.table.n_records)
+                         for t, pl in zip(trees, planners)]
+            stats.plan_cache_hits = cs.hits - h0
+            stats.plan_cache_misses = cs.misses - m0
+            stats.tape_cache_hits = cs.tape_hits - th0
+            psp.set(hits=stats.plan_cache_hits,
+                    misses=stats.plan_cache_misses,
+                    tape_hits=stats.tape_cache_hits)
 
         # cross-query atom census (per-query *sets*: an atom repeated inside
         # one query does not make it shared)
@@ -741,64 +855,113 @@ class QuerySession:
         up0 = (getattr(self._backend, "uploaded_bytes", 0)
                if self._backend is not None else 0)
         reuse_backend = self._backend
-        inner = self._make_backend(appended_from)
-        if fp != self._cache_version:
-            if appended_from is None:
-                self._atom_cache.clear()
-            elif appended_from < self.table.n_records:
-                self._extend_atom_cache(appended_from, inner, stats)
-            self._cache_version = fp
+        # lifetime-counter snapshot for the per-batch delta view (the
+        # backends never reset; BatchStats carries the reset-safe deltas)
+        c0 = (backend_counters(reuse_backend)
+              if reuse_backend is not None else None)
+        with sp("batch.upload", appended_from=appended_from):
+            inner = self._make_backend(appended_from)
+            if fp != self._cache_version:
+                if appended_from is None:
+                    self._atom_cache.clear()
+                elif appended_from < self.table.n_records:
+                    self._extend_atom_cache(appended_from, inner, stats)
+                self._cache_version = fp
         sb = _SharedAtomBackend(
             inner, shared, stats,
             cache=self._atom_cache if self.persist_atom_cache else None)
         base_applications = inner.stats.atom_applications
-        if lockstep:
-            bitmaps = self._execute_lockstep(trees, plans, sb, stats)
-        elif tape_engine:
-            bitmaps = [inner.run_tape(tp) for tp in tapes]
-            stats.logical_atoms += sum(len(p.tree.atoms) for p in plans)
-        else:
-            bitmaps = [execute_plan(p, sb) for p in plans]
-        if hasattr(inner, "materialize") and bitmaps and not isinstance(
-                bitmaps[0], np.ndarray):
-            # device engines: ONE bundled host sync for the whole batch
-            bitmaps = inner.materialize(bitmaps)
-        lw = self.table.live_words()
-        if lw is not None:
-            # tombstone deletes: the engines evaluated over all physical
-            # rows (their caches stay prefix-valid — deletes never move
-            # rows); dead rows drop here, at materialize time
-            bitmaps = [b & lw for b in bitmaps]
+        base_records = inner.stats.records_evaluated
+        base_cost = inner.stats.weighted_cost
+        with sp("batch.dispatch", lockstep=lockstep, tapes=use_tapes):
+            if lockstep:
+                bitmaps = self._execute_lockstep(trees, plans, sb, stats)
+            elif tape_engine:
+                bitmaps = [inner.run_tape(tp) for tp in tapes]
+                stats.logical_atoms += sum(len(p.tree.atoms) for p in plans)
+            else:
+                bitmaps = [execute_plan(p, sb) for p in plans]
+        with sp("batch.sync"):
+            if hasattr(inner, "materialize") and bitmaps and not isinstance(
+                    bitmaps[0], np.ndarray):
+                # device engines: ONE bundled host sync for the whole batch
+                bitmaps = inner.materialize(bitmaps)
+            lw = self.table.live_words()
+            if lw is not None:
+                # tombstone deletes: the engines evaluated over all
+                # physical rows (their caches stay prefix-valid — deletes
+                # never move rows); dead rows drop here, at materialize
+                # time
+                bitmaps = [b & lw for b in bitmaps]
         stats.physical_atoms = (inner.stats.atom_applications
                                 - base_applications)
         stats.upload_bytes = (getattr(inner, "uploaded_bytes", 0)
                               - (up0 if inner is reuse_backend else 0))
+        stats.records_evaluated = (inner.stats.records_evaluated
+                                   - base_records)
+        stats.weighted_cost = inner.stats.weighted_cost - base_cost
+        c1 = backend_counters(inner)
+        if inner is reuse_backend and c0 is not None:
+            for k in c1:
+                c1[k] -= c0[k]
+        stats.host_syncs = int(c1["host_syncs"])
+        stats.device_dispatches = int(c1["device_dispatches"]
+                                      + c1["kernel_invocations"])
+        stats.host_fallbacks = int(c1["host_fallbacks"])
+        stats.blocks_touched = c1["blocks_touched"]
+        stats.blocks_pruned = c1["blocks_pruned"]
+        # drain the engine op log EVERY batch, not only under feedback:
+        # with feedback off the log used to sit undrained until its cap,
+        # leaking stale observations into whichever consumer drained next
+        # (the never-reset-between-drains audit).  explain_analyze reads
+        # these realized per-op popcounts off the BatchStats.
+        stats.op_observations = (inner.drain_op_log()
+                                 if hasattr(inner, "drain_op_log") else [])
         if self.feedback is not None:
-            self._absorb_feedback(inner, trees, plans, stats)
+            with sp("batch.feedback"):
+                self._absorb_feedback(trees, plans, stats)
         result = BatchResult(bitmaps=bitmaps, plans=plans, stats=stats,
                              backend=inner,
                              wall_s=time.perf_counter() - t0)
         self.last_result = result
+        if self.telemetry is not None:
+            self._publish_batch(stats, inner, result.wall_s)
         return result
 
+    def _publish_batch(self, stats: BatchStats, inner: SetBackend,
+                       wall_s: float) -> None:
+        """Publish the finished batch into the metrics registry: per-batch
+        deltas as counters, lifetime collaborator state as gauges.  Host
+        work only — every device number here already crossed on the
+        batch's bundled sync."""
+        reg = self.telemetry
+        labels = {"engine": self.engine, "planner": self.planner,
+                  "shards": self.config.shards}
+        stats.publish(reg, labels)
+        reg.histogram("repro_batch_wall_ms",
+                      "QuerySession.execute wall clock").observe(
+            wall_s * 1000.0, **labels)
+        self.plan_cache.stats.publish(reg)
+        inner.stats.publish(reg, labels)
+        if self.feedback is not None:
+            self.feedback.publish(reg)
+
     # -- the Q-Error feedback loop (runs after the batch's bundled sync) -------
-    def _absorb_feedback(self, inner: SetBackend,
-                         trees: Sequence[PredicateTree],
+    def _absorb_feedback(self, trees: Sequence[PredicateTree],
                          plans: Sequence[Plan], stats: BatchStats) -> None:
         """Close the loop on a finished batch: compare realized per-op
-        selectivities (drained from the engine's op log — popcounts the
-        cost accounting already computed, so zero extra syncs/dispatches)
-        against the estimates, attribute Q-Errors to atom keys and plans,
-        report servings to the plan cache's eviction-on-drift, and — with
-        ``feedback_absorb`` — merge full-truth observations back into the
-        estimator (per-key selectivities + quantile-sketch CDF anchors)."""
+        selectivities (``stats.op_observations``, drained from the engine's
+        op log — popcounts the cost accounting already computed, so zero
+        extra syncs/dispatches) against the estimates, attribute Q-Errors
+        to atom keys and plans, report servings to the plan cache's
+        eviction-on-drift, and — with ``feedback_absorb`` — merge
+        full-truth observations back into the estimator (per-key
+        selectivities + quantile-sketch CDF anchors)."""
         fb = self.feedback
         n = self.table.n_records
         key_qerr: Dict[tuple, float] = {}
         qerrs: List[float] = []
-        entries = (inner.drain_op_log()
-                   if hasattr(inner, "drain_op_log") else [])
-        for keys, est, src, out in entries:
+        for keys, est, src, out in stats.op_observations:
             if src <= 0:
                 continue
             if len(keys) == 1:

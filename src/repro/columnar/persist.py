@@ -30,6 +30,7 @@ and the quantization parameters and silently cold-starts on mismatch.
 """
 from __future__ import annotations
 
+import json
 import os
 import pickle
 from typing import Optional
@@ -44,6 +45,7 @@ FORMAT = 1
 
 PLAN_CACHE_FILE = "plan_cache.pkl"
 FEEDBACK_FILE = "feedback.pkl"
+METRICS_FILE = "metrics.json"
 XLA_CACHE_DIR = "xla"
 
 
@@ -185,6 +187,18 @@ def save_session_caches(session: QuerySession, cache_dir: str) -> dict:
         out["feedback_keys"] = save_feedback(
             session.feedback, os.path.join(cache_dir, FEEDBACK_FILE))
     return out
+
+
+def save_metrics(payload: dict, cache_dir: str) -> str:
+    """Write the final observability snapshot (``metrics.json``) next to
+    the warm-restart artifacts; returns the path.  Unlike the pickled
+    caches this is JSON — it is an audit/debug artifact for humans and
+    scrapers, never loaded back by the engine."""
+    os.makedirs(cache_dir, exist_ok=True)
+    path = os.path.join(cache_dir, METRICS_FILE)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    return path
 
 
 def load_session_caches(session: QuerySession, cache_dir: str,

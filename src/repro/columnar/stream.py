@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional, Tuple, Union
 
@@ -64,11 +65,13 @@ import numpy as np
 
 from ..core.predicate import Node, PredicateTree
 from ..runtime import faults as _faults
+from ..runtime.telemetry import LATENCY_BUCKETS_MS
 from .bitmap import unpack_bits
 from .config import UNSET, ExecConfig, config_from_kwargs
 from .drainer import LANES, BackgroundDrainer, DrainPolicy, LatencyWindow
 from .multiquery import BatchResult, BatchStats, QuerySession
 from .table import Table
+from .trace import ExplainReport, format_tree, null_span, report_from_batch
 
 
 class StreamClosed(RuntimeError):
@@ -93,6 +96,9 @@ class StreamFuture:
     def __init__(self, session: "StreamSession", lane: str = "bulk"):
         self._session = session
         self.lane = lane
+        #: admission sequence number, unique per session — the key for
+        #: :meth:`StreamSession.explain` / the server's ``/explain?id=``
+        self.id: Optional[int] = None
         self._event = threading.Event()
         self._bitmap: Optional[np.ndarray] = None
         self._n_records = 0
@@ -219,6 +225,21 @@ class StreamStats:
         self.max_qerror = max(self.max_qerror, bs.max_qerror)
         self.last_batch = bs
 
+    def as_dict(self) -> Dict[str, float]:
+        """Scalar snapshot (the shared stats protocol), including the
+        derived latency percentiles and ratios."""
+        from ..runtime.telemetry import scalar_snapshot
+        return scalar_snapshot(self, extra=("mean_batch",
+                                            "delta_reuse_ratio",
+                                            "latency_p50_ms",
+                                            "latency_p99_ms"))
+
+    def publish(self, registry, labels=None) -> None:
+        """Publish lifetime serving state as ``repro_stream_*`` gauges."""
+        from ..runtime.telemetry import publish_scalars
+        publish_scalars(registry, "repro_stream", self.as_dict(), labels,
+                        help="stream session lifetime serving state")
+
 
 class StreamSession:
     """Admit queries into an in-flight batch interleaved with appends
@@ -310,6 +331,11 @@ class StreamSession:
             feedback_absorb=feedback_absorb)
         self.config = cfg
         self.session = QuerySession(table, config=cfg)
+        # observability handles resolve once, on the inner session (the
+        # stream publishes serving-layer state into the same registry /
+        # tracer the drains publish batch state into)
+        self.telemetry = self.session.telemetry
+        self.tracer = self.session.tracer
         self.restore_info: Optional[dict] = None
         if cache_dir:
             from . import persist as _persist
@@ -325,6 +351,15 @@ class StreamSession:
         self._drain_lock = threading.Lock()
         self._admit = threading.Condition(threading.Lock())
         self._lanes: Dict[str, List[_Pending]] = {ln: [] for ln in LANES}
+        # explain retention: future.id -> ExplainReport, bounded LRU
+        # (reports are host-side bookkeeping over numbers the drain
+        # already paid for; _admit guards the dict)
+        self._next_id = 0
+        self.explain_capacity = 256
+        # id -> ExplainReport, or the (res, index, query, n_records)
+        # ingredients it is lazily built from on first explain()
+        self._explains: "OrderedDict[int, object]" = OrderedDict()
+        self._last_drain_at: Optional[float] = None     # time.monotonic()
         self._closed = False
         self._final_result: Optional[BatchResult] = None
         self._fallback_session: Optional[QuerySession] = None
@@ -369,6 +404,8 @@ class StreamSession:
             if self.max_queue is not None:
                 self._admission_control_locked()
             self.stats.submitted += 1
+            fut.id = self._next_id
+            self._next_id += 1
             self._lanes[lane].append(_Pending(query, fut,
                                               time.perf_counter()))
             inline = (self._drainer is None
@@ -474,14 +511,28 @@ class StreamSession:
                 if not batch:
                     return None
                 self._admit.notify_all()    # backpressure waiters: space
-            outcomes, res = self._execute_resilient(
-                [p.query for p in batch])
+            tr = self.tracer
+            wait_ms = (time.perf_counter()
+                       - min(p.t_admit for p in batch)) * 1000.0
+            drain_span = (tr.span("stream.drain", queries=len(batch),
+                                  lanes=",".join(lanes),
+                                  queue_wait_ms=round(wait_ms, 3))
+                          if tr is not None else null_span("stream.drain"))
+            with drain_span:
+                outcomes, res = self._execute_resilient(
+                    [p.query for p in batch])
             # snapshot stamped under _drain_lock: append/delete also hold
             # it, so n_records/live_words here are exactly what executed
             n = self.table.n_records
             lw = self.table.live_words()
             lw = lw.copy() if lw is not None else None
+            # reports are retained BEFORE futures resolve, so a caller
+            # returning from result() can explain() immediately (no race
+            # against this drain thread)
+            if res is not None:
+                self._retain_explains(batch, res, n)
             now = time.perf_counter()
+            latencies: List[Tuple[str, float]] = []
             with self._admit:
                 ok = 0
                 for p, out in zip(batch, outcomes):
@@ -490,8 +541,9 @@ class StreamSession:
                         self.stats.failed += 1
                     else:
                         p.fut._resolve(out, n, lw)
-                        self.stats.latency.add(
-                            (now - p.t_admit) * 1000.0)
+                        lat = (now - p.t_admit) * 1000.0
+                        self.stats.latency.add(lat)
+                        latencies.append((p.fut.lane, lat))
                         ok += 1
                 if res is not None:
                     self.stats.absorb(res.stats)
@@ -502,9 +554,126 @@ class StreamSession:
                     self.stats.completed += ok
                     self.stats.max_batch = max(self.stats.max_batch,
                                                len(batch))
+                self._last_drain_at = time.monotonic()
+            if self.telemetry is not None:
+                self._publish_drain(latencies)
             return res
 
+    def _retain_explains(self, batch: List[_Pending], res: BatchResult,
+                         n_records: int) -> None:
+        """Retain the ingredients for one :class:`ExplainReport` per
+        drained query, keyed by future id in a bounded LRU — the
+        ``/explain?id=`` backing store.  Reports are built lazily in
+        :meth:`explain` (an operator action, off the drain hot path):
+        everything stored here is a reference to state the drain already
+        produced, so retention costs one dict insert per query."""
+        if self.telemetry is None and self.tracer is None:
+            return
+        entries = [(p.fut.id, (res, i, p.query, n_records))
+                   for i, p in enumerate(batch)]
+        with self._admit:
+            for fid, ing in entries:
+                self._explains[fid] = ing
+                self._explains.move_to_end(fid)
+            while len(self._explains) > self.explain_capacity:
+                self._explains.popitem(last=False)
+
+    def _publish_drain(self, latencies: List[Tuple[str, float]]) -> None:
+        """Per-drain registry publication: stream gauges, the per-future
+        admit-to-result latency histogram, and drainer counters."""
+        reg = self.telemetry
+        labels = {"engine": self.config.engine,
+                  "planner": self.config.planner,
+                  "shards": self.config.shards}
+        with self._admit:
+            self.stats.publish(reg, labels)
+        hist = reg.histogram(
+            "repro_query_latency_ms",
+            "admit-to-result latency per resolved future",
+            buckets=LATENCY_BUCKETS_MS)
+        for lane, lat in latencies:
+            hist.observe(lat, lane=lane)
+        d = self._drainer
+        if d is not None:
+            reg.gauge("repro_drainer_wakeups",
+                      "background drainer deadline-loop wakeups"
+                      ).set(d.wakeups)
+            reg.gauge("repro_drainer_deadline_drains",
+                      "drains initiated by the background drainer"
+                      ).set(d.deadline_drains)
+
+    # -- observability readouts ------------------------------------------------
+    def health(self) -> Dict[str, object]:
+        """Liveness/degradation readout for a ``/healthz`` endpoint —
+        lock-cheap, never executes anything.  ``ok`` means the session is
+        accepting work and, when a background drainer was started, its
+        thread is still alive."""
+        now = time.monotonic()
+        with self._admit:
+            d = self._drainer
+            drainer_alive = bool(d is not None and d.running)
+            return {
+                "ok": not self._closed and (d is None or drainer_alive),
+                "closed": self._closed,
+                "drainer_alive": drainer_alive,
+                "last_drain_age_s": (
+                    now - self._last_drain_at
+                    if self._last_drain_at is not None else None),
+                "pending": self._total_pending_locked(),
+                "degraded_batches": self.stats.degraded_batches,
+                "quarantined_queries": self.stats.quarantined_queries,
+                "retries": self.stats.retries,
+                "failed": self.stats.failed,
+            }
+
+    def explain(self, future_or_id) -> Optional[ExplainReport]:
+        """The retained :class:`~repro.columnar.trace.ExplainReport` for
+        a drained future (or its ``.id``); None when unknown or evicted
+        (retention is a bounded LRU of ``explain_capacity`` reports, and
+        nothing is retained with both telemetry and trace off)."""
+        fid = getattr(future_or_id, "id", future_or_id)
+        with self._admit:
+            entry = self._explains.get(fid)
+            if entry is None:
+                return None
+            self._explains.move_to_end(fid)
+        if isinstance(entry, ExplainReport):
+            return entry
+        # first ask for this id: build the report from the retained drain
+        # state (outside _admit — report building is pure host work over
+        # already-transferred popcounts), then memoize it
+        res, i, query, n_records = entry
+        counters = {k: getattr(res.stats, k) for k in
+                    ("host_syncs", "device_dispatches", "host_fallbacks",
+                     "blocks_touched", "blocks_pruned")}
+        try:
+            rep = report_from_batch(res, i, format_tree(query), n_records,
+                                    self.config, counters=counters)
+        except Exception:               # pragma: no cover - defensive
+            return None
+        with self._admit:
+            if fid in self._explains:
+                self._explains[fid] = rep
+        return rep
+
+    def explain_ids(self) -> List[int]:
+        """Future ids with a retained report, oldest first."""
+        with self._admit:
+            return list(self._explains)
+
     # -- the degradation ladder ------------------------------------------------
+    def _note_rung(self, rung: str, count: int = 1) -> None:
+        """Record one degradation-ladder activation: a labeled counter in
+        the registry plus an event on the current trace span, so every
+        fault scenario is assertable from telemetry alone."""
+        if self.telemetry is not None:
+            self.telemetry.counter(
+                "repro_degradation_total",
+                "degradation-ladder rung activations"
+            ).inc(count, rung=rung)
+        if self.tracer is not None:
+            self.tracer.event("degradation", rung=rung, count=count)
+
     def _fallback(self) -> QuerySession:
         """Lazily-built host execution path: numpy engine (no device, no
         jit) over the same table, sharing the plan cache so degraded
@@ -545,6 +714,7 @@ class StreamSession:
                 if _faults.is_transient(exc) and attempt < self.max_retries:
                     with self._admit:
                         self.stats.retries += 1
+                    self._note_rung("retry")
                     time.sleep(delay)
                     delay *= 2.0
                     continue
@@ -558,6 +728,7 @@ class StreamSession:
                 res = self._fallback().execute(queries)
                 with self._admit:
                     self.stats.degraded_batches += 1
+                self._note_rung("fallback")
                 return list(res.bitmaps), res
             except BaseException:
                 pass            # fall through to per-query quarantine
@@ -578,6 +749,8 @@ class StreamSession:
         with self._admit:
             self.stats.degraded_batches += 1
             self.stats.quarantined_queries += quarantined
+        if quarantined:
+            self._note_rung("quarantine", quarantined)
         return outcomes, None
 
     # -- persistence / lifecycle -----------------------------------------------
@@ -607,7 +780,19 @@ class StreamSession:
         self._final_result = self._drain_lanes(LANES)
         if self.cache_dir:
             self.flush_caches()
+            self._flush_metrics()
         return self._final_result
+
+    def _flush_metrics(self) -> None:
+        """Final observability snapshot (``metrics.json``) next to the
+        warm-restart artifacts: stream + health state always, the full
+        registry when telemetry is on."""
+        from . import persist as _persist
+        payload = {"stream": self.stats.as_dict(),
+                   "health": self.health(),
+                   "registry": (self.telemetry.snapshot()
+                                if self.telemetry is not None else None)}
+        _persist.save_metrics(payload, self.cache_dir)
 
     def __enter__(self) -> "StreamSession":
         return self

@@ -219,3 +219,20 @@ class FeedbackStore:
         """Expected number of *future* batches containing ``key``, capped at
         ``repeat_horizon``: the amortization credit for promoting it."""
         return self.repeat_score(key) * min(self.batches, self.repeat_horizon)
+
+    # -- observability -------------------------------------------------------
+    def as_dict(self) -> Dict[str, float]:
+        """Scalar snapshot (the shared stats protocol)."""
+        return {"batches": self.batches,
+                "observations": self.observations,
+                "full_observations": self.full_observations,
+                "tracked_keys": len(self._keys),
+                "pending_anchors": len(self._pending_anchors)}
+
+    def publish(self, registry, labels=None) -> None:
+        """Publish lifetime feedback-loop state as ``repro_feedback_*``
+        gauges (the store accumulates for the session's lifetime; per-batch
+        observation deltas live on ``BatchStats``)."""
+        from ..runtime.telemetry import publish_scalars
+        publish_scalars(registry, "repro_feedback", self.as_dict(), labels,
+                        help="Q-Error feedback store state")

@@ -63,7 +63,14 @@ class SetBackend:
 
 @dataclass
 class Stats:
-    """Action accounting: the paper's two metrics (§7) live here."""
+    """Action accounting: the paper's two metrics (§7) live here.
+
+    These are *lifetime* counters on their owning backend — they are never
+    reset between batches (a reused device backend accumulates forever).
+    Per-batch views are snapshot deltas taken by the session
+    (``BatchStats.records_evaluated`` etc.); the registry sees the
+    lifetime values as gauges via :meth:`publish`.
+    """
 
     atom_applications: int = 0
     records_evaluated: float = 0.0   # sum of count(D_i): "number of evaluations"
@@ -77,6 +84,19 @@ class Stats:
         self.weighted_cost = 0.0
         self.setops = 0
         self.setop_records = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        """Scalar snapshot; field names are the shared metric suffixes
+        (the uniform stats protocol — see
+        :func:`repro.runtime.telemetry.scalar_snapshot`)."""
+        from ..runtime.telemetry import scalar_snapshot
+        return scalar_snapshot(self)
+
+    def publish(self, registry, labels=None) -> None:
+        """Publish the lifetime counters as ``repro_engine_*`` gauges."""
+        from ..runtime.telemetry import publish_scalars
+        publish_scalars(registry, "repro_engine", self.as_dict(), labels,
+                        help="engine backend lifetime accounting")
 
 
 class VertexBackend(SetBackend):

@@ -26,6 +26,10 @@ def main():
                     help="warm-restart cache directory for the --stream "
                          "demo (plan/tape/feedback + XLA compilation "
                          "caches persist across launches)")
+    ap.add_argument("--serve-port", type=int, default=None,
+                    help="with --stream: expose /metrics, /healthz and "
+                         "/explain?id= on this port for the demo's "
+                         "lifetime (0 = ephemeral)")
     args = ap.parse_args()
 
     from ..configs import get_config, get_smoke
@@ -64,6 +68,13 @@ def main():
                            policy=DrainPolicy(max_wait_ms=20.0,
                                               interactive_wait_ms=2.0),
                            cache_dir=args.cache_dir) as stream:
+            obs = None
+            if args.serve_port is not None:
+                from ..serve.httpd import ObservabilityServer
+                obs = ObservabilityServer(stream,
+                                          port=args.serve_port).start()
+                print(f"observability endpoints at {obs.url} "
+                      "(/metrics /healthz /explain?id=)")
             if args.cache_dir:
                 print(f"warm restore: {stream.restore_info}")
             admit_fut = stream.submit(rules[0], lane="interactive")
@@ -94,6 +105,8 @@ def main():
                   f"{st.latency_p50_ms:.1f} ms / p99 "
                   f"{st.latency_p99_ms:.1f} ms, degraded "
                   f"{st.degraded_batches}")
+            if obs is not None:
+                obs.stop()
         if args.cache_dir:
             print(f"caches flushed to {args.cache_dir} for the next launch")
 

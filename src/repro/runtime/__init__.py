@@ -7,10 +7,14 @@ manager, so it loads lazily on first attribute access.
 """
 from .faults import (DeviceFault, FaultPlane, TransientFault, fault_plane,
                      inject, is_device_fault, is_transient)
+from .telemetry import (Counter, Gauge, Histogram, MetricsRegistry,
+                        parse_prometheus, registry)
 
 __all__ = ["TrainLoop", "StragglerWatchdog", "FailureInjector",
            "FaultPlane", "DeviceFault", "TransientFault", "fault_plane",
-           "inject", "is_device_fault", "is_transient"]
+           "inject", "is_device_fault", "is_transient",
+           "MetricsRegistry", "Counter", "Gauge", "Histogram",
+           "registry", "parse_prometheus"]
 
 _LOOP_EXPORTS = ("TrainLoop", "StragglerWatchdog", "FailureInjector")
 

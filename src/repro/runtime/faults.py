@@ -111,6 +111,16 @@ class FaultPlane:
                 if spec.fired >= spec.times:
                     self._specs.remove(spec)
                 self.stats.fired[site] = self.stats.fired.get(site, 0) + 1
+                try:
+                    # observability: armed trips are test/bench events,
+                    # so the global registry is the right sink (best
+                    # effort — a broken registry must not mask the fault)
+                    from .telemetry import registry
+                    registry().counter(
+                        "repro_faults_fired_total",
+                        "armed fault-plane trips by site").inc(1, site=site)
+                except Exception:       # pragma: no cover - defensive
+                    pass
                 raise spec.exc()
 
 

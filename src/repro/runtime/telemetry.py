@@ -1,0 +1,409 @@
+"""Process-global metrics plane: counters, gauges, bounded histograms.
+
+The repo computes every number the paper's argument rests on —
+``records_evaluated``, ``weighted_cost``, sync counts, Q-Errors, pruned
+blocks — but before this module they lived in three unrelated stats
+dataclasses and per-backend attributes that only benchmarks read.  This
+module is the single place they are *published*: a thread-safe registry of
+named metrics exportable as a JSON snapshot or Prometheus text exposition.
+
+Design rules (docs/architecture.md §8):
+
+* **Stdlib only, import-light.**  The columnar hot path publishes here;
+  importing this module must never pull in jax/numpy.
+* **No raw-sample collections.**  Histograms bucket into a *fixed* grid at
+  observe time — memory is O(buckets) regardless of uptime (the stream
+  layer's :class:`~repro.columnar.drainer.LatencyWindow` keeps the exact
+  reservoir for SLO readout; the registry keeps the exportable summary).
+* **Host numbers only.**  Everything published is already on the host —
+  device-side numbers ride the engines' bundled popcount transfer first
+  (the PR 6 feedback plumbing) and are published *after* the sync the
+  query already paid for.  The registry adds zero syncs and zero
+  dispatches by construction.
+* **Counters take deltas, gauges take snapshots.**  Sessions publish
+  per-batch deltas into ``*_total`` counters (monotone across sessions
+  sharing the global registry) and point-in-time values into gauges.
+
+``publish_scalars`` + ``scalar_snapshot`` implement the uniform
+``as_dict()`` / ``publish(registry)`` protocol the stats surfaces share.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+import threading
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, \
+    Tuple
+
+
+class TelemetryError(ValueError):
+    """Invalid metric registration or use (name/type clash, bad buckets)."""
+
+
+#: default bucket grid for wall-clock durations (milliseconds): covers
+#: sub-ms kernel hops through multi-second degraded drains
+LATENCY_BUCKETS_MS: Tuple[float, ...] = (
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
+    1000.0, 2500.0, 5000.0)
+
+#: default bucket grid for byte volumes (powers of 4 from 1 KiB to 1 GiB)
+BYTES_BUCKETS: Tuple[float, ...] = tuple(
+    float(1024 * 4 ** i) for i in range(10))
+
+#: default bucket grid for Q-Error (1.0 = perfect estimate)
+QERROR_BUCKETS: Tuple[float, ...] = (
+    1.0, 1.1, 1.25, 1.5, 2.0, 3.0, 5.0, 10.0, 30.0, 100.0, 1000.0)
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def _label_key(labels: Mapping[str, Any]) -> Tuple[Tuple[str, str], ...]:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _escape(value: str) -> str:
+    return value.replace("\\", "\\\\").replace("\n", "\\n").replace(
+        '"', '\\"')
+
+
+def _fmt_labels(key: Tuple[Tuple[str, str], ...],
+                extra: Tuple[Tuple[str, str], ...] = ()) -> str:
+    items = key + extra
+    if not items:
+        return ""
+    body = ",".join(f'{k}="{_escape(v)}"' for k, v in items)
+    return "{" + body + "}"
+
+
+def _fmt_value(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    f = float(v)
+    return repr(int(f)) if f.is_integer() and abs(f) < 1e15 else repr(f)
+
+
+class _Metric:
+    """Shared shell: name, help text, per-labelset cells under one lock."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str, lock: threading.RLock):
+        self.name = name
+        self.help = help
+        self._lock = lock
+        self._cells: Dict[Tuple[Tuple[str, str], ...], Any] = {}
+
+    def labelsets(self) -> List[Tuple[Tuple[str, str], ...]]:
+        with self._lock:
+            return list(self._cells)
+
+
+class Counter(_Metric):
+    """Monotone accumulator.  ``inc`` rejects negative deltas."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1.0, **labels: Any) -> None:
+        if amount < 0:
+            raise TelemetryError(
+                f"counter {self.name} cannot decrease (inc({amount}))")
+        key = _label_key(labels)
+        with self._lock:
+            self._cells[key] = self._cells.get(key, 0.0) + float(amount)
+
+    def value(self, **labels: Any) -> float:
+        with self._lock:
+            return float(self._cells.get(_label_key(labels), 0.0))
+
+    def _snapshot_locked(self) -> List[dict]:
+        return [{"labels": dict(k), "value": v}
+                for k, v in sorted(self._cells.items())]
+
+    def _render_locked(self) -> List[str]:
+        return [f"{self.name}{_fmt_labels(k)} {_fmt_value(v)}"
+                for k, v in sorted(self._cells.items())]
+
+
+class Gauge(_Metric):
+    """Point-in-time value (snapshot semantics: ``set`` wins)."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels: Any) -> None:
+        with self._lock:
+            self._cells[_label_key(labels)] = float(value)
+
+    def inc(self, amount: float = 1.0, **labels: Any) -> None:
+        key = _label_key(labels)
+        with self._lock:
+            self._cells[key] = self._cells.get(key, 0.0) + float(amount)
+
+    def dec(self, amount: float = 1.0, **labels: Any) -> None:
+        self.inc(-amount, **labels)
+
+    def value(self, **labels: Any) -> float:
+        with self._lock:
+            return float(self._cells.get(_label_key(labels), 0.0))
+
+    _snapshot_locked = Counter._snapshot_locked
+    _render_locked = Counter._render_locked
+
+
+class Histogram(_Metric):
+    """Fixed-grid histogram: per-bucket counts + sum + count, no samples.
+
+    Bucket semantics match Prometheus: ``le`` upper bounds are
+    *inclusive*, an implicit ``+Inf`` bucket catches the tail, and the
+    exported per-bucket counts are cumulative.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str, lock: threading.RLock,
+                 buckets: Sequence[float]):
+        super().__init__(name, help, lock)
+        bs = tuple(float(b) for b in buckets)
+        if not bs or any(b2 <= b1 for b1, b2 in zip(bs, bs[1:])):
+            raise TelemetryError(
+                f"histogram {name} buckets must be non-empty and strictly "
+                f"increasing, got {buckets!r}")
+        if bs and bs[-1] == math.inf:
+            bs = bs[:-1]        # +Inf is implicit
+        self.buckets = bs
+
+    def observe(self, value: float, **labels: Any) -> None:
+        key = _label_key(labels)
+        v = float(value)
+        with self._lock:
+            cell = self._cells.get(key)
+            if cell is None:
+                cell = {"counts": [0] * (len(self.buckets) + 1),
+                        "sum": 0.0, "count": 0}
+                self._cells[key] = cell
+            # first bucket whose inclusive upper bound admits v (+Inf tail)
+            i = 0
+            for i, edge in enumerate(self.buckets):
+                if v <= edge:
+                    break
+            else:
+                i = len(self.buckets)
+            cell["counts"][i] += 1
+            cell["sum"] += v
+            cell["count"] += 1
+
+    def snapshot_cell(self, **labels: Any) -> Optional[dict]:
+        with self._lock:
+            cell = self._cells.get(_label_key(labels))
+            if cell is None:
+                return None
+            return {"counts": list(cell["counts"]), "sum": cell["sum"],
+                    "count": cell["count"]}
+
+    def _snapshot_locked(self) -> List[dict]:
+        out = []
+        for k, cell in sorted(self._cells.items()):
+            cum, cums = 0, []
+            for c in cell["counts"]:
+                cum += c
+                cums.append(cum)
+            out.append({"labels": dict(k),
+                        "buckets": [{"le": le, "count": c} for le, c in
+                                    zip(self.buckets + (math.inf,), cums)],
+                        "sum": cell["sum"], "count": cell["count"]})
+        return out
+
+    def _render_locked(self) -> List[str]:
+        lines = []
+        for k, cell in sorted(self._cells.items()):
+            cum = 0
+            for le, c in zip(self.buckets + (math.inf,), cell["counts"]):
+                cum += c
+                lines.append(
+                    f"{self.name}_bucket"
+                    f"{_fmt_labels(k, (('le', _fmt_value(le)),))} {cum}")
+            lines.append(f"{self.name}_sum{_fmt_labels(k)} "
+                         f"{_fmt_value(cell['sum'])}")
+            lines.append(f"{self.name}_count{_fmt_labels(k)} "
+                         f"{cell['count']}")
+        return lines
+
+
+class MetricsRegistry:
+    """Thread-safe named-metric store with get-or-create accessors.
+
+    One re-entrant lock guards registration and every cell mutation —
+    the hot path does a handful of dict ops per *batch*, not per record,
+    so a single lock is plenty (and keeps snapshot/export consistent).
+    """
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._metrics: "Dict[str, _Metric]" = {}
+
+    def _get(self, cls, name: str, help: str, **kw) -> Any:
+        if not _NAME_RE.match(name):
+            raise TelemetryError(f"invalid metric name {name!r}")
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                if "buckets" in kw and kw["buckets"] is None:
+                    kw["buckets"] = LATENCY_BUCKETS_MS
+                m = cls(name, help, self._lock, **kw)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TelemetryError(
+                    f"metric {name!r} already registered as {m.kind}")
+            elif kw.get("buckets") is not None \
+                    and tuple(float(b) for b in kw["buckets"]) != m.buckets:
+                raise TelemetryError(
+                    f"histogram {name!r} re-registered with different "
+                    "buckets")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Optional[Sequence[float]] = None) -> Histogram:
+        """Get-or-create; ``buckets=None`` means "whatever grid the
+        metric was created with" (defaulting to latency-ms at creation) —
+        only an *explicit* conflicting grid is an error."""
+        return self._get(Histogram, name, help, buckets=buckets)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        with self._lock:
+            return self._metrics.get(name)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def clear(self) -> None:
+        """Drop every metric (tests; the serving process never clears)."""
+        with self._lock:
+            self._metrics.clear()
+
+    # -- export ----------------------------------------------------------------
+    def snapshot(self) -> Dict[str, dict]:
+        """JSON-able view: ``{name: {kind, help, samples}}``."""
+        with self._lock:
+            return {name: {"kind": m.kind, "help": m.help,
+                           "samples": m._snapshot_locked()}
+                    for name, m in sorted(self._metrics.items())}
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.snapshot(), **kw)
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition format (version 0.0.4)."""
+        with self._lock:
+            lines: List[str] = []
+            for name, m in sorted(self._metrics.items()):
+                if m.help:
+                    lines.append(f"# HELP {name} {_escape(m.help)}")
+                lines.append(f"# TYPE {name} {m.kind}")
+                lines.extend(m._render_locked())
+            return "\n".join(lines) + "\n"
+
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>.*)\})?\s+(?P<value>\S+)$")
+_LABEL_PAIR_RE = re.compile(
+    r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_prometheus(text: str) -> Dict[Tuple[str, Tuple[Tuple[str, str],
+                                                         ...]], float]:
+    """Parse the text exposition format back into ``{(name, labelkey):
+    value}`` — the round-trip half of the export contract (tests, and the
+    ``/metrics`` smoke)."""
+    out: Dict[Tuple[str, Tuple[Tuple[str, str], ...]], float] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise TelemetryError(f"unparseable exposition line: {line!r}")
+        labels: Dict[str, str] = {}
+        if m.group("labels"):
+            for lm in _LABEL_PAIR_RE.finditer(m.group("labels")):
+                labels[lm.group(1)] = lm.group(2).replace(
+                    '\\"', '"').replace("\\n", "\n").replace("\\\\", "\\")
+        raw = m.group("value")
+        value = math.inf if raw == "+Inf" else (
+            -math.inf if raw == "-Inf" else float(raw))
+        out[(m.group("name"), _label_key(labels))] = value
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The process-global registry + the as_dict()/publish() protocol
+# ---------------------------------------------------------------------------
+
+_GLOBAL = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    """The process-global registry every surface publishes into by
+    default (``ExecConfig(telemetry=True)``)."""
+    return _GLOBAL
+
+
+def resolve_registry(setting: Any) -> Optional[MetricsRegistry]:
+    """Map an ``ExecConfig.telemetry`` setting to a registry or None:
+    False/None -> disabled, True -> the process-global registry, anything
+    else -> the caller-supplied registry object (identity checks, not
+    truthiness, so an empty caller registry is still honored)."""
+    if setting is None or setting is False:
+        return None
+    if setting is True:
+        return _GLOBAL
+    return setting
+
+
+def scalar_snapshot(obj: Any, extra: Iterable[str] = ()) -> Dict[str, float]:
+    """The shared ``as_dict()`` implementation: every int/float/bool
+    dataclass field of ``obj`` plus the named ``extra`` properties, in
+    declaration order.  Field names ARE the metric suffixes — one source
+    of truth for Stats/BatchStats/StreamStats and the registry hookup."""
+    out: Dict[str, float] = {}
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        if isinstance(v, bool) or isinstance(v, (int, float)):
+            out[f.name] = v
+    for name in extra:
+        v = getattr(obj, name)
+        if isinstance(v, (int, float)):
+            out[name] = v
+    return out
+
+
+def publish_scalars(reg: Optional[MetricsRegistry], prefix: str,
+                    values: Mapping[str, float],
+                    labels: Optional[Mapping[str, Any]] = None,
+                    help: str = "") -> None:
+    """Publish an ``as_dict()`` snapshot as gauges ``<prefix>_<field>``
+    (snapshot semantics: the latest publish wins per labelset)."""
+    if reg is None:
+        return
+    lb = dict(labels or {})
+    for k, v in values.items():
+        reg.gauge(f"{prefix}_{k}", help).set(float(v), **lb)
+
+
+__all__ = [
+    "TelemetryError", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "registry", "resolve_registry", "parse_prometheus", "scalar_snapshot",
+    "publish_scalars", "LATENCY_BUCKETS_MS", "BYTES_BUCKETS",
+    "QERROR_BUCKETS",
+]

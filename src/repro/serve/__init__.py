@@ -1,5 +1,7 @@
 """Serving substrate: batched prefill/decode engine + predicate-based
-request routing (the paper's engine applied to request metadata)."""
+request routing (the paper's engine applied to request metadata), plus
+the read-only observability HTTP endpoints (:mod:`.httpd`)."""
 from .engine import RequestRouter, ServeEngine
+from .httpd import ObservabilityServer
 
-__all__ = ["ServeEngine", "RequestRouter"]
+__all__ = ["ServeEngine", "RequestRouter", "ObservabilityServer"]
