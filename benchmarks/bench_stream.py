@@ -428,6 +428,117 @@ def bench_slo(args) -> dict:
     return out
 
 
+def bench_durable(args) -> dict:
+    """Durability section (``--durable``): the same append-interleaved
+    drain loop with the WAL off vs on (group commit, the serving
+    default), then a real close/recover cycle over the durable state.
+
+    The contract halves are exact: the durable arm's bitmaps are
+    bit-identical to the in-memory arm's every round, and a session
+    recovered from the snapshot + WAL tail answers the same queries
+    bit-identically to the live pre-close session.  The overhead half is
+    a timing (best-of over the timed rounds, the ``obs`` idiom): the
+    group-commit fsync discipline must stay within a few percent of the
+    in-memory drain — the ``<= 10%`` ceiling is gated on the committed
+    full-scale baseline by ``check_regression.py``."""
+    rows = min(args.rows, 400_000)
+    rounds = max(args.rounds, 3)
+    n_append = max(int(rows * args.append_frac), 1)
+    table_seed = make_forest_table(rows, n_dup=1, seed=7, strings=True)
+    rng = np.random.default_rng(4)
+    pool = [random_tree(table_seed, args.atoms, args.depth, rng)
+            for _ in range(args.templates)]
+    queries = [pool[i % len(pool)] for i in range(args.batch)]
+    cfg = StreamSession.DEFAULT_CONFIG.replace(engine=args.engine,
+                                               block=args.block)
+
+    def run(durable_dir):
+        stream = StreamSession(
+            make_forest_table(rows, n_dup=1, seed=7, strings=True),
+            config=cfg, max_pending=args.batch + 1,
+            durable=durable_dir, wal_sync="group", snapshot_every=None)
+        table = stream.table
+        times, bitmaps = [], None
+        for rnd in range(rounds):
+            t0 = time.perf_counter()
+            if rnd:         # append INSIDE the timer: WAL logging + the
+                stream.append(_rows_like(table, n_append,   # group commit
+                              seed=200 + rnd))              # are the cost
+            futs = [stream.submit(q) for q in queries]
+            stream.drain()
+            if rnd:
+                times.append((time.perf_counter() - t0) * 1e3)
+            if durable_dir and rnd == 1:
+                # one explicit mid-history snapshot, OUTSIDE the timers:
+                # every later append is a WAL-tail record, so the recovery
+                # below is a genuine snapshot + tail replay
+                stream.durability.snapshot()
+            for name in table.columns:
+                table.stats(name)
+            bitmaps = futs
+        return min(times), [f.result() for f in bitmaps], stream
+
+    run(None)[2].close()     # untimed pass: process-wide jit warmup
+    off_ms, off_bitmaps, off_stream = run(None)
+    off_stream.close()
+    data_dir = tempfile.mkdtemp(prefix="stream-durable-")
+    on_ms, on_bitmaps, on_stream = run(data_dir)
+    identical = all(np.array_equal(a, b)
+                    for a, b in zip(off_bitmaps, on_bitmaps))
+
+    # one more acknowledged append past the last snapshot, then crash the
+    # session (close) and recover: snapshot + WAL-tail replay
+    on_stream.append(_rows_like(on_stream.table, n_append, seed=999))
+    final_futs = [on_stream.submit(q) for q in queries]
+    on_stream.drain()
+    live_final = [f.result() for f in final_futs]
+    wal = on_stream.health()["wal"]
+    # crash, don't close: StreamSession.close() would cut a final snapshot
+    # (clean shutdown = zero replay).  Releasing the WAL handle after the
+    # drain's group commit is exactly the kill -9 recovery scenario — the
+    # mid-history snapshot plus a tail of acknowledged appends
+    on_stream.durability.close()
+
+    rec = StreamSession(None, config=cfg, max_pending=args.batch + 1,
+                        durable=data_dir)
+    info = rec.recovery_info
+    rec_futs = [rec.submit(q) for q in queries]
+    rec.drain()
+    recovery_identical = (
+        rec.table.n_records == rows + rounds * n_append
+        and all(np.array_equal(np.asarray(f.result()), b)
+                for f, b in zip(rec_futs, live_final)))
+    for q in queries[:2]:       # and against the planner-level oracle
+        want, _, _ = run_query(q, rec.table,
+                               config=ExecConfig(planner="deepfish"))
+        recovery_identical &= np.array_equal(
+            np.asarray(rec_futs[queries.index(q)].result()), want)
+    recovered_rows = rec.table.n_records
+    rec.close()
+    return {
+        "rows_initial": rows,
+        "rounds": rounds,
+        "append_rows": n_append,
+        "queries": args.batch,
+        "engine": args.engine,
+        "wal_sync": "group",
+        "off_ms": round(off_ms, 3),
+        "on_ms": round(on_ms, 3),
+        "overhead_pct": round((on_ms / off_ms - 1.0) * 100.0, 2)
+        if off_ms else 0.0,
+        "identical": bool(identical),
+        "wal_committed_seq": wal["committed_seq"],
+        "wal_uncommitted": wal["uncommitted"],
+        "snapshots": wal["snapshots"],
+        "recovered_rows": recovered_rows,
+        "snapshot_seq": info["snapshot_seq"],
+        "replayed_records": info["replayed_records"],
+        "truncated_records": info["truncated_records"],
+        "recovery_ms": round(info["recovery_ms"], 3),
+        "recovery_identical": bool(recovery_identical),
+    }
+
+
 def bench_obs_stream(args) -> dict:
     """Observability overhead on the serving path: the same warm drain loop
     with telemetry+trace off vs on (caller-owned registry + tracer).  The
@@ -526,6 +637,16 @@ def main():
                          "latency percentiles, fault-injected degradation, "
                          "sync contract under tombstones, warm-vs-cold "
                          "restart")
+    ap.add_argument("--durable", action="store_true",
+                    help="also run the durability section: WAL group-"
+                         "commit overhead on the steady-state stream, "
+                         "close/recover cycle with bit-identical results, "
+                         "recovery wall time")
+    ap.add_argument("--merge-durable", default=None, metavar="DEVICE_JSON",
+                    help="run ONLY the durability section and merge it as "
+                         "the 'durable' subsection of the committed device "
+                         "baseline's stream section (leaves every other "
+                         "committed figure untouched)")
     ap.add_argument("--obs", dest="obs", action="store_true", default=True,
                     help="run the observability overhead section on the "
                          "serving path (default: on)")
@@ -538,6 +659,32 @@ def main():
         args.templates = 2
     if args.first_drain_probe:
         _first_drain_probe(args)
+        return
+
+    def show_durable(du):
+        print(f"durable [{du['engine']}]: off {du['off_ms']:.1f} ms  vs  "
+              f"WAL-on {du['on_ms']:.1f} ms  ->  "
+              f"{du['overhead_pct']:+.1f}% overhead "
+              f"(group commit, seq {du['wal_committed_seq']}, "
+              f"{du['snapshots']} snapshots)  identical={du['identical']}")
+        print(f"  recovery: {du['recovered_rows']} rows from snapshot seq "
+              f"{du['snapshot_seq']} + {du['replayed_records']} replayed "
+              f"records in {du['recovery_ms']:.1f} ms  "
+              f"identical={du['recovery_identical']}")
+
+    if args.merge_durable:
+        du = bench_durable(args)
+        show_durable(du)
+        if not (du["identical"] and du["recovery_identical"]):
+            raise SystemExit("FAIL: durable stream diverged from the "
+                             "in-memory arm or recovery was not "
+                             "bit-identical; baseline NOT updated")
+        with open(args.merge_durable) as f:
+            base = json.load(f)
+        base.setdefault("stream", {})["durable"] = du
+        with open(args.merge_durable, "w") as f:
+            json.dump(base, f, indent=2)
+        print(f"updated stream.durable section of {args.merge_durable}")
         return
 
     def show(name, sec):
@@ -586,6 +733,10 @@ def main():
               f"{ob['host_syncs_per_drain_on']:g}  "
               f"identical={ob['identical']}")
 
+    if args.durable:
+        report["durable"] = bench_durable(args)
+        show_durable(report["durable"])
+
     if args.slo:
         report["slo"] = bench_slo(args)
         slo = report["slo"]
@@ -633,6 +784,14 @@ def main():
             raise SystemExit("FAIL: serving observability perturbed results "
                              "or sync counts, or published no latency "
                              "samples")
+    if args.durable:
+        du = report["durable"]
+        if not (du["identical"] and du["recovery_identical"]
+                and du["wal_uncommitted"] == 0):
+            raise SystemExit("FAIL: durable stream diverged from the "
+                             "in-memory arm, recovery was not "
+                             "bit-identical, or a drain resolved futures "
+                             "with uncommitted WAL records")
     if args.slo:
         slo = report["slo"]
         if not (slo["faults"]["identical"]

@@ -306,6 +306,40 @@ def check_stream(gate: Gate, fresh: dict, base: dict, tol: float,
                    (bob or {}).get("overhead_pct", 99.0) <= 5.0,
                    f"baseline={(bob or {}).get('overhead_pct')}%")
 
+    # -- contract: durability (WAL overhead, crash recovery) ------------------
+    dur, bdur = fresh.get("durable"), base.get("durable")
+    gate.check("stream.durable section present", dur is not None,
+               "run bench_stream.py with --durable")
+    if dur is not None:
+        gate.check("stream.durable.identical (WAL on == off)",
+                   bool(dur.get("identical")))
+        gate.check("stream.durable.recovery_identical",
+                   bool(dur.get("recovery_identical")))
+        gate.check("stream.durable: drain left no uncommitted records",
+                   dur.get("wal_uncommitted", -1) == 0,
+                   f"fresh={dur.get('wal_uncommitted')}")
+        gate.check("stream.durable: recovery replayed a snapshot + tail",
+                   dur.get("snapshot_seq", 0) > 0
+                   and dur.get("replayed_records", 0) > 0,
+                   f"snapshot_seq={dur.get('snapshot_seq')} "
+                   f"replayed={dur.get('replayed_records')}")
+        gate.check("stream.durable: clean WAL (no torn records)",
+                   dur.get("truncated_records", -1) == 0,
+                   f"fresh={dur.get('truncated_records')}")
+        # the overhead ceiling is asserted on the committed full-scale
+        # baseline (smoke drains are short enough that a single fsync
+        # reads as a large percentage); the fresh run still gates the
+        # bit-identicality contracts exactly
+        gate.check("stream.durable.overhead <= 10% in committed baseline",
+                   (bdur or {}).get("overhead_pct", 99.0) <= 10.0,
+                   f"baseline={(bdur or {}).get('overhead_pct')}%")
+        # recovery time: an absolute collapse detector, scaled off the
+        # committed baseline with a floor that absorbs cold-start noise
+        ceil_ms = max(5.0 * (bdur or {}).get("recovery_ms", 0.0), 250.0)
+        gate.check("stream.durable.recovery_ms bounded",
+                   dur.get("recovery_ms", 1e9) <= ceil_ms,
+                   f"fresh={dur.get('recovery_ms')}ms ceiling={ceil_ms:.0f}ms")
+
     # -- contract: serving SLOs (fault degradation, tombstones, restarts) ----
     slo = fresh.get("slo")
     gate.check("stream.slo section present", slo is not None,

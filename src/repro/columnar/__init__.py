@@ -45,6 +45,7 @@ from .table import (DictColumn, Table, annotate_selectivities,
                     empirical_selectivity, rewrite_string_atoms)
 from .trace import (ExplainReport, OpObservation, SpanRecord, Tracer,
                     explain_analyze, tracer)
+from .wal import Durability, DurabilityError, WriteAheadLog
 
 __all__ = [
     "pack_bits", "unpack_bits", "popcount", "bitmap_and", "bitmap_or",
@@ -61,4 +62,5 @@ __all__ = [
     "BackgroundDrainer", "DrainPolicy", "LatencyWindow",
     "Tracer", "tracer", "SpanRecord", "explain_analyze", "ExplainReport",
     "OpObservation",
+    "Durability", "DurabilityError", "WriteAheadLog",
 ]

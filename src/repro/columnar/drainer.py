@@ -48,15 +48,31 @@ class DrainPolicy:
     A lane drains when its oldest pending query exceeds its wait target,
     or immediately when total pending reaches the session's
     ``max_pending``.
+
+    ``starvation_factor`` is the bulk-lane fairness valve.  Interactive
+    preemption is *strict*: an interactive-due drain excludes the
+    still-accumulating bulk batch even when bulk is past its own
+    deadline, so under sustained interactive overload back-to-back
+    preemptions can keep pushing the bulk drain out indefinitely.  The
+    valve is the hard ceiling: once bulk's oldest admit has aged past
+    ``starvation_factor × max_wait_ms``, the next interactive drain
+    force-drains bulk in the same batch (``bulk_force_drains`` counts
+    the valve firing; the session publishes ``bulk_starved_s``, the
+    oldest pending bulk admit's age at each drain, as the SLO gauge).
     """
 
     max_wait_ms: float = 50.0
     interactive_wait_ms: float = 5.0
+    starvation_factor: float = 4.0
 
     def wait_s(self, lane: str) -> float:
         ms = self.interactive_wait_ms if lane == "interactive" \
             else self.max_wait_ms
         return ms / 1000.0
+
+    def starvation_s(self) -> float:
+        """Bulk age past which an interactive-only drain is forbidden."""
+        return self.starvation_factor * self.max_wait_ms / 1000.0
 
 
 class LatencyWindow:
@@ -125,6 +141,7 @@ class BackgroundDrainer:
             target=self._loop, name="stream-drainer", daemon=True)
         self.wakeups = 0
         self.deadline_drains = 0
+        self.bulk_force_drains = 0
 
     def start(self) -> None:
         self._thread.start()
@@ -161,20 +178,27 @@ class BackgroundDrainer:
         return deadline
 
     def _due_lanes_locked(self, now: float) -> Tuple[str, ...]:
-        """Which lanes to drain right now.  Bulk-due (or max_pending)
-        drains everything; interactive-due alone preempts — it drains
-        without flushing the still-accumulating bulk batch."""
+        """Which lanes to drain right now.  Interactive-due preempts
+        strictly — it drains without flushing the still-accumulating
+        bulk batch even when bulk is past its own deadline — *unless*
+        the oldest bulk admit has aged past the policy's starvation
+        ceiling, in which case the fairness valve force-drains bulk in
+        the same batch.  Bulk-due with interactive idle (or max_pending)
+        drains everything."""
         s = self._session
         total = sum(len(s._lanes[lane]) for lane in LANES)
         if total >= s.max_pending:
             return LANES
         bulk = s._lanes["bulk"]
-        if bulk and now - bulk[0].t_admit >= self.policy.wait_s("bulk"):
-            return LANES
         inter = s._lanes["interactive"]
         if inter and now - inter[0].t_admit >= \
                 self.policy.wait_s("interactive"):
+            if bulk and now - bulk[0].t_admit >= self.policy.starvation_s():
+                self.bulk_force_drains += 1
+                return LANES
             return ("interactive",)
+        if bulk and now - bulk[0].t_admit >= self.policy.wait_s("bulk"):
+            return LANES
         return ()
 
     def _loop(self) -> None:

@@ -342,8 +342,12 @@ def append_rows(table: Table, rows: Dict[str, Any]) -> int:
     table._stats.clear()
 
     table.version += 1
-    table._log_mutation("append", old_n)
+    # the WAL payload is the *cast* tails: replaying them through this
+    # same path reproduces the concatenated columns byte-for-byte
+    table._log_mutation("append", old_n, wal_payload={"rows": tails})
     for name in recoded:
+        # recode-on-overflow is derived from the append (replay re-derives
+        # it from the dictionary state), so it carries no WAL payload
         table._log_mutation("col", name)
     return old_n
 
@@ -373,6 +377,8 @@ def compact_table(table: Table) -> int:
     table._zones.clear()
     table._qsketch.clear()
     table.version += 1
-    table._log_mutation("compact", removed)
+    # compaction is deterministic from the tombstone state the log
+    # already reproduced, so the record needs no payload
+    table._log_mutation("compact", removed, wal_payload={})
     table.tombstone_epoch += 1
     return removed

@@ -25,14 +25,25 @@ inputs that survive restarts unchanged, so all three persist:
   first drain skips compilation too (measured ≥3x in the ``--slo`` bench).
 
 Loads are best-effort by design: a corrupt/stale/foreign cache file must
-never take a serving process down, so every reader validates a format tag
-and the quantization parameters and silently cold-starts on mismatch.
+never take a serving process down, so every reader validates a format
+tag, a CRC32 over the pickled payload (truncation and bit flips
+cold-start instead of raising mid-``pickle.load``), the quantization
+parameters, and — for durable sessions — the **data epoch**: cache files
+are stamped with the UUID of the durable data lineage they were derived
+from (:attr:`~repro.columnar.wal.Durability.epoch`), and a reader
+expecting a different epoch silently cold-starts.  Plan/feedback keys
+are content-derived, so same-lineage caches still hit on a *recovered*
+table (it is bit-identical to the state they were learned on); the epoch
+guards against pointing a durable directory's caches at someone else's
+data.  Files or readers without an epoch (non-durable sessions, legacy
+artifacts) skip the check.
 """
 from __future__ import annotations
 
 import json
 import os
 import pickle
+import zlib
 from typing import Optional
 
 from ..core.feedback import FeedbackStore
@@ -41,12 +52,52 @@ from ..core.tape import PlanTape
 from .multiquery import LRUPlanCache, QuerySession
 
 #: bump when the entry layout changes — old files then cold-start cleanly
-FORMAT = 1
+#: (2: payload CRC + data-epoch token wrap every pickled artifact)
+FORMAT = 2
 
 PLAN_CACHE_FILE = "plan_cache.pkl"
 FEEDBACK_FILE = "feedback.pkl"
 METRICS_FILE = "metrics.json"
 XLA_CACHE_DIR = "xla"
+
+
+def _dump_checked(obj, path: str, epoch: Optional[str] = None) -> None:
+    """Atomically write ``obj`` wrapped in the checked envelope: format
+    tag, CRC32 of the pickled blob, and the optional data-epoch token.
+    tmp + fsync + ``os.replace`` — a crash never leaves a half-written
+    artifact at ``path``."""
+    blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    payload = {"format": FORMAT, "crc": zlib.crc32(blob), "epoch": epoch,
+               "blob": blob}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _load_checked(path: str, epoch: Optional[str] = None):
+    """The wrapped object, or None on *any* defect — missing file,
+    truncation, bit flip (CRC mismatch), format drift, or a data-epoch
+    token that contradicts the expected one.  Never raises."""
+    try:
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+    except Exception:       # corrupt/foreign file: cold start, never crash
+        return None
+    if not isinstance(payload, dict) or payload.get("format") != FORMAT:
+        return None
+    blob = payload.get("blob")
+    if not isinstance(blob, bytes) or zlib.crc32(blob) != payload.get("crc"):
+        return None
+    fe = payload.get("epoch")
+    if fe is not None and epoch is not None and fe != epoch:
+        return None         # derived from a different data lineage
+    try:
+        return pickle.loads(blob)
+    except Exception:
+        return None
 
 
 def _tape_state(tape: PlanTape) -> Optional[dict]:
@@ -67,7 +118,8 @@ def _tape_from_state(st: dict) -> PlanTape:
                     planner=st["planner"])
 
 
-def save_plan_cache(cache: LRUPlanCache, path: str) -> int:
+def save_plan_cache(cache: LRUPlanCache, path: str,
+                    epoch: Optional[str] = None) -> int:
     """Serialize the cache's entries (LRU order preserved); returns the
     number written.  Entries that cannot pickle (UDF trees) are skipped —
     they re-plan on first touch after restart, exactly like a miss."""
@@ -84,27 +136,21 @@ def save_plan_cache(cache: LRUPlanCache, path: str) -> int:
         except Exception:
             continue                    # unpicklable key/value: skip entry
         entries.append(blob)
-    payload = {"format": FORMAT, "sel_step": cache.sel_step,
-               "cost_step": cache.cost_step,
+    payload = {"sel_step": cache.sel_step, "cost_step": cache.cost_step,
                "dict_sel_step": cache.dict_sel_step, "entries": entries}
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
-    os.replace(tmp, path)               # atomic: a crash never corrupts
+    _dump_checked(payload, path, epoch)
     return len(entries)
 
 
-def load_plan_cache(cache: LRUPlanCache, path: str) -> int:
+def load_plan_cache(cache: LRUPlanCache, path: str,
+                    epoch: Optional[str] = None) -> int:
     """Load persisted entries into ``cache``; returns the number loaded
-    (0 on any mismatch — missing file, format bump, different quantization
-    parameters: keys computed under another bucketing would never match,
-    so the load degrades to a clean cold start)."""
-    try:
-        with open(path, "rb") as f:
-            payload = pickle.load(f)
-    except Exception:       # corrupt/foreign file: cold start, never crash
-        return 0
-    if (not isinstance(payload, dict) or payload.get("format") != FORMAT
+    (0 on any mismatch — missing/truncated/bit-flipped file, format bump,
+    foreign data epoch, different quantization parameters: keys computed
+    under another bucketing would never match, so the load degrades to a
+    clean cold start)."""
+    payload = _load_checked(path, epoch)
+    if (not isinstance(payload, dict)
             or payload.get("sel_step") != cache.sel_step
             or payload.get("cost_step") != cache.cost_step
             or payload.get("dict_sel_step") != cache.dict_sel_step):
@@ -124,26 +170,17 @@ def load_plan_cache(cache: LRUPlanCache, path: str) -> int:
     return loaded
 
 
-def save_feedback(store: FeedbackStore, path: str) -> int:
+def save_feedback(store: FeedbackStore, path: str,
+                  epoch: Optional[str] = None) -> int:
     """Persist the feedback store's learned state; returns keys written."""
-    payload = {"format": FORMAT, "store": store}
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
-    os.replace(tmp, path)
+    _dump_checked(store, path, epoch)
     return len(store._keys)
 
 
-def load_feedback(path: str) -> Optional[FeedbackStore]:
-    """The persisted store, or None when absent/unreadable/stale."""
-    try:
-        with open(path, "rb") as f:
-            payload = pickle.load(f)
-    except Exception:       # corrupt/foreign file: cold start, never crash
-        return None
-    if not isinstance(payload, dict) or payload.get("format") != FORMAT:
-        return None
-    store = payload.get("store")
+def load_feedback(path: str,
+                  epoch: Optional[str] = None) -> Optional[FeedbackStore]:
+    """The persisted store, or None when absent/unreadable/stale/foreign."""
+    store = _load_checked(path, epoch)
     return store if isinstance(store, FeedbackStore) else None
 
 
@@ -178,14 +215,19 @@ def enable_compilation_cache(cache_dir: str) -> bool:
     return True
 
 
-def save_session_caches(session: QuerySession, cache_dir: str) -> dict:
-    """Flush a session's warm state to ``cache_dir``; returns counts."""
+def save_session_caches(session: QuerySession, cache_dir: str,
+                        epoch: Optional[str] = None) -> dict:
+    """Flush a session's warm state to ``cache_dir`` (stamped with the
+    data ``epoch`` when the session serves a durable table); returns
+    counts."""
     os.makedirs(cache_dir, exist_ok=True)
     out = {"plans": save_plan_cache(
-        session.plan_cache, os.path.join(cache_dir, PLAN_CACHE_FILE))}
+        session.plan_cache, os.path.join(cache_dir, PLAN_CACHE_FILE),
+        epoch)}
     if session.feedback is not None:
         out["feedback_keys"] = save_feedback(
-            session.feedback, os.path.join(cache_dir, FEEDBACK_FILE))
+            session.feedback, os.path.join(cache_dir, FEEDBACK_FILE),
+            epoch)
     return out
 
 
@@ -202,13 +244,17 @@ def save_metrics(payload: dict, cache_dir: str) -> str:
 
 
 def load_session_caches(session: QuerySession, cache_dir: str,
-                        compilation_cache: bool = True) -> dict:
+                        compilation_cache: bool = True,
+                        epoch: Optional[str] = None) -> dict:
     """Warm a fresh session from ``cache_dir`` (and wire the persistent
     compilation cache); returns counts.  Safe on an empty/missing
-    directory — everything cold-starts."""
+    directory — everything cold-starts.  ``epoch`` is the expected data
+    lineage: files stamped with a *different* one are refused (clean cold
+    start) instead of warming the session with foreign-table state."""
     out = {"plans": load_plan_cache(
-        session.plan_cache, os.path.join(cache_dir, PLAN_CACHE_FILE))}
-    fb = load_feedback(os.path.join(cache_dir, FEEDBACK_FILE))
+        session.plan_cache, os.path.join(cache_dir, PLAN_CACHE_FILE),
+        epoch)}
+    fb = load_feedback(os.path.join(cache_dir, FEEDBACK_FILE), epoch)
     if fb is not None and session.feedback is not None:
         session.feedback.__dict__.update(fb.__dict__)
         out["feedback_keys"] = len(fb._keys)

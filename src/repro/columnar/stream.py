@@ -46,6 +46,19 @@ Serving hardening on top of the cooperative PR 4 layer:
   ``auto_compact=<fraction>`` compacts when the dead fraction crosses
   the threshold (the only row-moving mutation; invalidates caches
   through the normal version/delta contract).
+* **Durable ingest** (``durable=...``): every mutation is written to a
+  checksummed write-ahead log and periodically folded into crash-
+  consistent snapshots (see :mod:`~repro.columnar.wal`).  The fsync
+  policy is *group commit per drain* by default (``wal_sync="group"``):
+  a drain fsyncs the whole buffered mutation suffix once, **before**
+  resolving its futures — results handed to callers always describe a
+  state that survives a crash — instead of paying an fsync per append
+  (``wal_sync="always"`` does, for callers whose acknowledgement
+  boundary is the ``append`` return).  Restart with ``table=None`` to
+  recover: latest valid snapshot + WAL-tail replay, bit-identical, with
+  recovery counters on the telemetry plane, ``/healthz``, and
+  :attr:`recovery_info`.  Warm-restart caches are stamped with the data
+  epoch and still hit on the recovered process.
 
 Without ``background=True`` the layer stays cooperative exactly as
 before: ``submit`` drains inline at ``max_pending`` and
@@ -55,6 +68,7 @@ single-threaded callers never deadlock.  With a drainer running,
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from collections import OrderedDict
@@ -65,7 +79,7 @@ import numpy as np
 
 from ..core.predicate import Node, PredicateTree
 from ..runtime import faults as _faults
-from ..runtime.telemetry import LATENCY_BUCKETS_MS
+from ..runtime.telemetry import DURABILITY_BUCKETS_MS, LATENCY_BUCKETS_MS
 from .bitmap import unpack_bits
 from .config import UNSET, ExecConfig, config_from_kwargs
 from .drainer import LANES, BackgroundDrainer, DrainPolicy, LatencyWindow
@@ -179,6 +193,10 @@ class StreamStats:
     # admission control
     backpressure_waits: int = 0
     backpressure_rejects: int = 0
+    # oldest still-pending bulk admit's age at the last drain (seconds) —
+    # the bulk-lane starvation gauge; stays 0.0 while bulk keeps riding
+    # along or the lane is empty
+    bulk_starved_s: float = 0.0
     # admit-to-result latency (SLO readout; milliseconds)
     latency: LatencyWindow = field(default_factory=LatencyWindow,
                                    repr=False)
@@ -275,6 +293,16 @@ class StreamSession:
     ``auto_compact``
         dead-row fraction above which :meth:`delete` triggers
         compaction (None = manual only).
+    ``durable`` / ``wal_sync`` / ``snapshot_every``
+        data-plane durability (see :mod:`~repro.columnar.wal`).
+        ``durable`` is the durability directory (or ``True`` for
+        ``<cache_dir>/data``).  A fresh directory adopts ``table``; a
+        directory with prior state requires ``table=None`` and is
+        *recovered* (:attr:`recovery_info` carries the counters).
+        ``wal_sync="group"`` (default) fsyncs once per drain before
+        futures resolve; ``"always"`` fsyncs per mutation.
+        ``snapshot_every`` bounds replay length: a snapshot is cut after
+        that many logged mutations (checked at drains and mutations).
     """
 
     #: stream-flavored execution defaults (vs ExecConfig's conservative
@@ -282,7 +310,7 @@ class StreamSession:
     DEFAULT_CONFIG = ExecConfig(planner="deepfish", engine="tape",
                                 batched=True)
 
-    def __init__(self, table: Table, planner=UNSET,
+    def __init__(self, table: Optional[Table], planner=UNSET,
                  engine=UNSET, max_pending: int = 64,
                  batched=UNSET,
                  background: bool = False,
@@ -292,6 +320,9 @@ class StreamSession:
                  max_retries: int = 2, retry_backoff_s: float = 0.01,
                  cache_dir: Optional[str] = None,
                  auto_compact: Optional[float] = None,
+                 durable: Union[bool, str, None] = None,
+                 wal_sync: str = "group",
+                 snapshot_every: Optional[int] = 512,
                  model=UNSET, plan_cache=UNSET, share_threshold=UNSET,
                  block=UNSET, annotate=UNSET, persist_atom_cache=UNSET,
                  rewrite_strings=UNSET, zone_prune=UNSET,
@@ -305,6 +336,27 @@ class StreamSession:
             max_queue = 8 * max_pending
         if max_queue is not None and max_queue < max_pending:
             raise ValueError("max_queue must be >= max_pending")
+        self._durability = None
+        self.recovery_info: Optional[dict] = None
+        if durable:
+            from .wal import Durability
+            if durable is True:
+                if not cache_dir:
+                    raise ValueError(
+                        "durable=True needs cache_dir (data lands in "
+                        "<cache_dir>/data), or pass durable=<directory>")
+                durable = os.path.join(cache_dir, "data")
+            if table is None:
+                self._durability, table, self.recovery_info = \
+                    Durability.recover(durable, sync=wal_sync,
+                                       snapshot_every=snapshot_every)
+            else:
+                self._durability = Durability(
+                    durable, sync=wal_sync, snapshot_every=snapshot_every)
+                self._durability.attach(table)
+        elif table is None:
+            raise ValueError("table=None is only valid with durable=... "
+                             "(recover from a durability directory)")
         self.table = table
         self.max_pending = max_pending
         self.max_queue = max_queue
@@ -340,7 +392,9 @@ class StreamSession:
         if cache_dir:
             from . import persist as _persist
             self.restore_info = _persist.load_session_caches(
-                self.session, cache_dir)
+                self.session, cache_dir, epoch=self._data_epoch())
+        if self.recovery_info is not None:
+            self._publish_recovery(self.recovery_info)
         self.stats = StreamStats()
         self.last_result: Optional[BatchResult] = None
         # two locks, strict order drain -> admit: _drain_lock serializes
@@ -367,6 +421,67 @@ class StreamSession:
         if background:
             self._drainer = BackgroundDrainer(self, policy or DrainPolicy())
             self._drainer.start()
+
+    # -- durability ------------------------------------------------------------
+    @property
+    def durability(self):
+        """The :class:`~repro.columnar.wal.Durability` manager, or None
+        for a non-durable session."""
+        return self._durability
+
+    def _data_epoch(self) -> Optional[str]:
+        return self._durability.epoch if self._durability is not None \
+            else None
+
+    def sync(self) -> Optional[int]:
+        """Force a WAL group commit now — every mutation admitted so far
+        becomes crash-durable.  Returns the committed sequence number
+        (None for a non-durable session).  Drains do this automatically;
+        this is the explicit acknowledgement boundary for append-heavy
+        callers between drains."""
+        if self._durability is None:
+            return None
+        with self._drain_lock:
+            ms = self._durability.commit()
+            if ms is not None:
+                self._observe_commit(ms)
+            return self._durability.wal.committed_seq
+
+    def _observe_commit(self, ms: float) -> None:
+        if self.telemetry is not None:
+            self.telemetry.histogram(
+                "repro_wal_commit_ms",
+                "WAL group-commit fsync wall time",
+                buckets=DURABILITY_BUCKETS_MS).observe(ms)
+
+    def _publish_recovery(self, info: dict) -> None:
+        """Surface recovery on the telemetry plane: ``repro_recovery_*``
+        gauges, the recovery-time histogram, and a trace event."""
+        from ..runtime.telemetry import publish_scalars
+        if self.telemetry is not None:
+            scalars = {k: v for k, v in info.items()
+                       if isinstance(v, (int, float))}
+            publish_scalars(self.telemetry, "repro_recovery", scalars,
+                            help="durable-ingest crash recovery state")
+            self.telemetry.histogram(
+                "repro_recovery_time_ms",
+                "snapshot-load + WAL-replay wall time",
+                buckets=DURABILITY_BUCKETS_MS
+            ).observe(info["recovery_ms"])
+        if self.tracer is not None:
+            self.tracer.event(
+                "recovery", snapshot_seq=info["snapshot_seq"],
+                replayed_records=info["replayed_records"],
+                truncated_records=info["truncated_records"],
+                recovery_ms=round(info["recovery_ms"], 3))
+
+    def _durable_after_mutation_locked(self) -> None:
+        """Mutation-side durability policy, caller holds ``_drain_lock``:
+        ``wal_sync="always"`` already committed inside the sink; here we
+        only fold the accumulation into a snapshot when due, so append-
+        only workloads (no drains) still bound their replay length."""
+        if self._durability is not None:
+            self._durability.maybe_snapshot()
 
     # -- introspection ---------------------------------------------------------
     @property
@@ -445,6 +560,7 @@ class StreamSession:
             with self._admit:
                 self._check_open_locked()
             start = self.table.append(rows)
+            self._durable_after_mutation_locked()
             with self._admit:
                 self.stats.appends += 1
                 self.stats.appended_rows += self.table.n_records - start
@@ -465,6 +581,7 @@ class StreamSession:
             removed = 0
             if self.auto_compact is not None:
                 removed = self.table.maybe_compact(self.auto_compact)
+            self._durable_after_mutation_locked()
             with self._admit:
                 self.stats.deletes += 1
                 self.stats.deleted_rows += new
@@ -477,6 +594,7 @@ class StreamSession:
         """Compact now (see :meth:`Table.compact`); returns rows removed."""
         with self._drain_lock:
             removed = self.table.compact()
+            self._durable_after_mutation_locked()
             with self._admit:
                 if removed:
                     self.stats.compactions += 1
@@ -510,6 +628,11 @@ class StreamSession:
                         self._lanes[lane] = []
                 if not batch:
                     return None
+                # starvation gauge: age of the oldest bulk admit this
+                # drain is leaving behind (0 when bulk drained or empty)
+                left = self._lanes["bulk"]
+                self.stats.bulk_starved_s = (
+                    time.perf_counter() - left[0].t_admit if left else 0.0)
                 self._admit.notify_all()    # backpressure waiters: space
             tr = self.tracer
             wait_ms = (time.perf_counter()
@@ -521,6 +644,13 @@ class StreamSession:
             with drain_span:
                 outcomes, res = self._execute_resilient(
                     [p.query for p in batch])
+            # group commit: ONE fsync covers every mutation this batch's
+            # snapshot saw, before any future resolves — results handed
+            # to callers always describe crash-durable state
+            if self._durability is not None:
+                ms = self._durability.commit()
+                if ms is not None:
+                    self._observe_commit(ms)
             # snapshot stamped under _drain_lock: append/delete also hold
             # it, so n_records/live_words here are exactly what executed
             n = self.table.n_records
@@ -555,6 +685,8 @@ class StreamSession:
                     self.stats.max_batch = max(self.stats.max_batch,
                                                len(batch))
                 self._last_drain_at = time.monotonic()
+            if self._durability is not None:
+                self._durability.maybe_snapshot()
             if self.telemetry is not None:
                 self._publish_drain(latencies)
             return res
@@ -601,6 +733,11 @@ class StreamSession:
             reg.gauge("repro_drainer_deadline_drains",
                       "drains initiated by the background drainer"
                       ).set(d.deadline_drains)
+            reg.gauge("repro_drainer_bulk_force_drains",
+                      "bulk drains forced by the starvation valve"
+                      ).set(d.bulk_force_drains)
+        if self._durability is not None:
+            self._durability.publish(reg, labels)
 
     # -- observability readouts ------------------------------------------------
     def health(self) -> Dict[str, object]:
@@ -612,7 +749,7 @@ class StreamSession:
         with self._admit:
             d = self._drainer
             drainer_alive = bool(d is not None and d.running)
-            return {
+            h = {
                 "ok": not self._closed and (d is None or drainer_alive),
                 "closed": self._closed,
                 "drainer_alive": drainer_alive,
@@ -624,7 +761,30 @@ class StreamSession:
                 "quarantined_queries": self.stats.quarantined_queries,
                 "retries": self.stats.retries,
                 "failed": self.stats.failed,
+                "bulk_starved_s": self.stats.bulk_starved_s,
             }
+            dur = self._durability
+            h["durable"] = dur is not None
+            if dur is not None:
+                h["wal"] = {"last_seq": dur.wal.last_seq,
+                            "committed_seq": dur.wal.committed_seq,
+                            "uncommitted": dur.wal.uncommitted,
+                            "snapshots": dur.snapshots,
+                            "records_since_snapshot":
+                                dur.records_since_snapshot}
+                # recovered=False means a fresh attach, not a failure;
+                # the counters tell operators what the restart replayed
+                h["recovery"] = (
+                    {"recovered": True,
+                     "snapshot_seq": self.recovery_info["snapshot_seq"],
+                     "replayed_records":
+                         self.recovery_info["replayed_records"],
+                     "truncated_records":
+                         self.recovery_info["truncated_records"],
+                     "recovery_ms": self.recovery_info["recovery_ms"]}
+                    if self.recovery_info is not None
+                    else {"recovered": False})
+            return h
 
     def explain(self, future_or_id) -> Optional[ExplainReport]:
         """The retained :class:`~repro.columnar.trace.ExplainReport` for
@@ -761,7 +921,8 @@ class StreamSession:
         if not self.cache_dir:
             return None
         from . import persist as _persist
-        return _persist.save_session_caches(self.session, self.cache_dir)
+        return _persist.save_session_caches(self.session, self.cache_dir,
+                                            epoch=self._data_epoch())
 
     def close(self) -> Optional[BatchResult]:
         """Shut the session down: stop the drainer, drain whatever is
@@ -778,6 +939,14 @@ class StreamSession:
         if self._drainer is not None:
             self._drainer.stop()
         self._final_result = self._drain_lanes(LANES)
+        if self._durability is not None:
+            # a clean shutdown leaves a snapshot covering the whole log:
+            # the next start replays nothing and warm caches match the
+            # exact recovered state
+            with self._drain_lock:
+                self._durability.commit()
+                self._durability.snapshot()
+                self._durability.close()
         if self.cache_dir:
             self.flush_caches()
             self._flush_metrics()

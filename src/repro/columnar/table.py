@@ -222,6 +222,10 @@ class Table:
         self._tombstones: Optional[np.ndarray] = None
         self._live_words: Optional[np.ndarray] = None
         self.tombstone_epoch = 0
+        # optional durability sink (columnar.wal.Durability): installed by
+        # attach/recover, fed full mutation payloads by _log_mutation —
+        # None means mutations are process-local, exactly as before
+        self._wal = None
 
     def __getitem__(self, name: str) -> np.ndarray:
         return self.columns[name]
@@ -234,12 +238,22 @@ class Table:
 
     _MUTLOG_CAP = 256
 
-    def _log_mutation(self, kind: str, payload) -> None:
-        self._mutlog.append((self.version, kind, payload))
-        if len(self._mutlog) > self._MUTLOG_CAP:
-            drop = len(self._mutlog) - self._MUTLOG_CAP
-            self._mutlog_base = self._mutlog[drop - 1][0]
-            del self._mutlog[:drop]
+    def _log_mutation(self, kind: str, payload, wal_payload=None) -> None:
+        """Record one mutation: into the bounded in-memory log backing
+        :meth:`delta_since`, and — when a durability sink is attached and
+        the caller supplied the full-fidelity ``wal_payload`` — into the
+        write-ahead log.  ``delete`` is WAL-only: tombstones keep every
+        prefix-keyed cache valid, so they never enter the delta log.
+        Derived mutations (a recode's ``col`` entry during replayed
+        appends) pass no ``wal_payload`` and are never re-logged."""
+        if kind != "delete":
+            self._mutlog.append((self.version, kind, payload))
+            if len(self._mutlog) > self._MUTLOG_CAP:
+                drop = len(self._mutlog) - self._MUTLOG_CAP
+                self._mutlog_base = self._mutlog[drop - 1][0]
+                del self._mutlog[:drop]
+        if self._wal is not None and wal_payload is not None:
+            self._wal.on_mutation(kind, wal_payload)
 
     def set_column(self, name: str, values: np.ndarray) -> None:
         """Add or overwrite a column (a *write*: bumps ``version`` so
@@ -253,7 +267,8 @@ class Table:
         self._stats.pop(code_column(name), None)
         self._dicts.pop(name, None)
         self.version += 1
-        self._log_mutation("col", name)
+        self._log_mutation("col", name,
+                           wal_payload={"name": name, "values": values})
 
     # -- streaming ingest ------------------------------------------------------
     def append(self, rows: Dict[str, Any]) -> int:
@@ -290,11 +305,14 @@ class Table:
             grown = np.zeros(self.n_records, dtype=bool)   # appends are live
             grown[: len(self._tombstones)] = self._tombstones
             self._tombstones = grown
-        new = int((mask & ~self._tombstones).sum())
+        new_idx = np.flatnonzero(mask & ~self._tombstones)
+        new = int(len(new_idx))
         if new:
             self._tombstones |= mask
             self._live_words = None
             self.tombstone_epoch += 1
+            self._log_mutation("delete", new,
+                               wal_payload={"rows": new_idx})
         return new
 
     @property

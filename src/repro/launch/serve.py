@@ -30,6 +30,13 @@ def main():
                     help="with --stream: expose /metrics, /healthz and "
                          "/explain?id= on this port for the demo's "
                          "lifetime (0 = ephemeral)")
+    ap.add_argument("--durable", default=None, metavar="DIR",
+                    help="with --stream: crash-safe ingest — every "
+                         "append/delete/compact lands in a checksummed "
+                         "WAL under DIR with periodic snapshots; "
+                         "relaunching against existing state RECOVERS "
+                         "the table (snapshot + log replay) instead of "
+                         "rebuilding it")
     args = ap.parse_args()
 
     from ..configs import get_config, get_smoke
@@ -60,14 +67,29 @@ def main():
         # reusing cached work below the append boundary, tombstone deletes
         # for revoked requests, and — with --cache-dir — plan/tape/XLA
         # caches that survive the process for warm restarts
-        from ..columnar import DrainPolicy, ExecConfig, StreamSession, Table
+        from ..columnar import (DrainPolicy, DurabilityError, StreamSession,
+                                Table)
         engine = args.engine if args.engine != "numpy" else "tape"
         scfg = StreamSession.DEFAULT_CONFIG.replace(engine=engine)
-        with StreamSession(Table(dict(requests)), config=scfg,
-                           max_pending=8 * len(rules), background=True,
-                           policy=DrainPolicy(max_wait_ms=20.0,
-                                              interactive_wait_ms=2.0),
-                           cache_dir=args.cache_dir) as stream:
+        skw = dict(config=scfg, max_pending=8 * len(rules),
+                   background=True,
+                   policy=DrainPolicy(max_wait_ms=20.0,
+                                      interactive_wait_ms=2.0),
+                   cache_dir=args.cache_dir, durable=args.durable)
+        stream = None
+        if args.durable:
+            try:            # a prior launch left durable state: recover it
+                stream = StreamSession(None, **skw)
+                ri = stream.recovery_info
+                print(f"recovered durable table: {ri['n_records']} rows, "
+                      f"snapshot seq {ri['snapshot_seq']} + "
+                      f"{ri['replayed_records']} WAL records replayed "
+                      f"in {ri['recovery_ms']:.1f} ms")
+            except DurabilityError:
+                pass        # fresh directory: attach below
+        if stream is None:
+            stream = StreamSession(Table(dict(requests)), **skw)
+        with stream:
             obs = None
             if args.serve_port is not None:
                 from ..serve.httpd import ObservabilityServer
@@ -105,6 +127,12 @@ def main():
                   f"{st.latency_p50_ms:.1f} ms / p99 "
                   f"{st.latency_p99_ms:.1f} ms, degraded "
                   f"{st.degraded_batches}")
+            if args.durable:
+                w = stream.health()["wal"]
+                print(f"durable: committed seq {w['committed_seq']}, "
+                      f"{w['snapshots']} snapshots this run "
+                      f"({args.durable} survives kill -9; relaunch with "
+                      f"the same --durable to recover)")
             if obs is not None:
                 obs.stop()
         if args.cache_dir:

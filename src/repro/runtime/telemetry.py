@@ -56,6 +56,13 @@ BYTES_BUCKETS: Tuple[float, ...] = tuple(
 QERROR_BUCKETS: Tuple[float, ...] = (
     1.0, 1.1, 1.25, 1.5, 2.0, 3.0, 5.0, 10.0, 30.0, 100.0, 1000.0)
 
+#: default bucket grid for durability fsync / snapshot / recovery work
+#: (milliseconds): group commits land sub-ms on local disks, snapshots
+#: and snapshot-less recoveries can run to seconds
+DURABILITY_BUCKETS_MS: Tuple[float, ...] = (
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0,
+    500.0, 1000.0, 2500.0, 5000.0, 10000.0)
+
 _NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 _LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
 
@@ -405,5 +412,5 @@ __all__ = [
     "TelemetryError", "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "registry", "resolve_registry", "parse_prometheus", "scalar_snapshot",
     "publish_scalars", "LATENCY_BUCKETS_MS", "BYTES_BUCKETS",
-    "QERROR_BUCKETS",
+    "QERROR_BUCKETS", "DURABILITY_BUCKETS_MS",
 ]

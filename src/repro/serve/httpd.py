@@ -13,10 +13,15 @@ Endpoints
     process-global one under ``ExecConfig(telemetry=True)``).
 ``/healthz``
     JSON liveness readout from :meth:`StreamSession.health` — drainer
-    thread alive, seconds since the last drain, pending depth, and the
-    degradation-ladder state (retries / degraded / quarantined / failed).
-    Status 200 when ``ok``, 503 otherwise, so a probe needs no body
-    parsing.
+    thread alive, seconds since the last drain, pending depth, the
+    degradation-ladder state (retries / degraded / quarantined / failed)
+    and the bulk-lane starvation gauge (``bulk_starved_s``).  Durable
+    sessions add a ``wal`` block (last/committed sequence, uncommitted
+    suffix, snapshot counters) and a ``recovery`` block — ``recovered:
+    true`` with snapshot seq / replayed records / recovery wall time
+    when this process was restored from a durability directory,
+    ``recovered: false`` for a fresh attach.  Status 200 when ``ok``,
+    503 otherwise, so a probe needs no body parsing.
 ``/explain?id=<future id>``
     The retained :class:`~repro.columnar.trace.ExplainReport` for one
     drained query: JSON by default, the human renderer with

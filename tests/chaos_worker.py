@@ -1,0 +1,147 @@
+"""Kill-9 chaos worker for the durability harness (``test_chaos.py``).
+
+Runs a deterministic, seed-derived mutation/query schedule against a
+durable :class:`~repro.columnar.stream.StreamSession` (numpy engine — no
+jax import, so a worker round costs subprocess-startup + real work only)
+and dies by SIGKILL: either at an injected failpoint (op boundary, torn
+WAL record, mid-snapshot) or from a background timer landing at an
+arbitrary point mid-append / mid-drain / mid-compact / mid-commit.  The
+worker *never* exits cleanly — every run ends in ``kill -9``.
+
+The schedule generators live here so the parent test imports the exact
+same functions to drive its numpy oracle: ``gen_ops(seed, n)`` is the op
+list, per-op payloads derive from the op's own seed plus the current row
+count, which is itself deterministic per applied prefix.
+
+Acknowledgement protocol: after each commit boundary (every op under
+``wal_sync="always"``; drains, snapshots and explicit syncs under
+``"group"``) the worker appends the committed WAL sequence to the ack
+file and fsyncs it.  The parent asserts recovery never rewinds past any
+acknowledged sequence — the zero-acknowledged-mutation-loss contract.
+
+Usage::
+
+    python chaos_worker.py SEED DATA_DIR ACK_FILE KILL_AT KILL_MODE \
+        N_OPS WAL_SYNC
+"""
+import json
+import os
+import signal
+import sys
+import threading
+
+import numpy as np
+
+SPECIES = ("ash", "oak", "pine", "fir", "elm")
+
+
+def gen_ops(seed: int, n: int):
+    """The op schedule: ``(kind, op_seed)`` pairs, append-heavy with
+    deletes, compactions, query drains and explicit snapshots mixed in."""
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n):
+        r = rng.random()
+        arg = int(rng.integers(1 << 30))
+        if r < 0.50:
+            ops.append(("append", arg))
+        elif r < 0.72:
+            ops.append(("delete", arg))
+        elif r < 0.80:
+            ops.append(("compact", arg))
+        elif r < 0.93:
+            ops.append(("query", arg))
+        else:
+            ops.append(("snapshot", arg))
+    return ops
+
+
+def initial_columns(seed: int):
+    rng = np.random.default_rng(seed ^ 0xC0FFEE)
+    n = 512
+    return {"a": rng.normal(size=n),
+            "b": rng.integers(0, 100, size=n).astype(np.int64),
+            "s": rng.choice(np.array(SPECIES), size=n)}
+
+
+def append_batch(op_seed: int):
+    rng = np.random.default_rng(op_seed)
+    n = int(rng.integers(32, 256))
+    vals = np.array(SPECIES + (f"ce{int(rng.integers(0, 50)):02d}",))
+    return {"a": rng.normal(size=n),
+            "b": rng.integers(0, 100, size=n).astype(np.int64),
+            "s": rng.choice(vals, size=n)}
+
+
+def delete_rows(op_seed: int, n_records: int):
+    rng = np.random.default_rng(op_seed)
+    k = int(rng.integers(1, max(2, n_records // 20)))
+    return rng.integers(0, n_records, size=k)
+
+
+def _die():
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def main() -> None:
+    seed, data_dir, ack_file = int(sys.argv[1]), sys.argv[2], sys.argv[3]
+    kill_at, kill_mode = int(sys.argv[4]), sys.argv[5]
+    n_ops, wal_sync = int(sys.argv[6]), sys.argv[7]
+
+    from repro.columnar import ExecConfig, StreamSession, Table, random_tree
+
+    table = Table(initial_columns(seed))
+    sess = StreamSession(
+        table, config=ExecConfig(planner="deepfish", engine="numpy"),
+        durable=data_dir, wal_sync=wal_sync, snapshot_every=48)
+
+    def ack():
+        with open(ack_file, "a") as f:
+            f.write(json.dumps(
+                {"seq": sess.durability.wal.committed_seq}) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    for i, (kind, arg) in enumerate(gen_ops(seed, n_ops)):
+        if i == kill_at:
+            if kill_mode == "before":
+                _die()
+            elif kill_mode == "torn":
+                # next record write emits a partial frame, fsyncs it, dies
+                sess.durability.wal._test_torn_bytes = (seed % 19) + 1
+            elif kill_mode == "snap_pre":
+                sess.durability._test_crash_point = "snapshot_pre_rename"
+            elif kill_mode == "snap_post":
+                sess.durability._test_crash_point = "snapshot_post_rename"
+            elif kill_mode == "timer":
+                delay = float(np.random.default_rng(arg).uniform(
+                    0.001, 0.08))
+                threading.Timer(delay, _die).start()
+        if kind == "append":
+            sess.append(append_batch(arg))
+        elif kind == "delete":
+            sess.delete(delete_rows(arg, table.n_records))
+        elif kind == "compact":
+            sess.compact()
+        elif kind == "query":
+            fut = sess.submit(random_tree(
+                table, 4, 2, np.random.default_rng(arg)))
+            sess.drain()
+            fut.result(timeout=30)
+            ack()
+        elif kind == "snapshot":
+            sess.durability.snapshot()
+            ack()
+        if wal_sync == "always":
+            ack()
+        if i == kill_at and kill_mode == "after":
+            _die()
+    # survived every failpoint (e.g. a snapshot hook armed but never hit):
+    # still die hard — no round ends with a clean close
+    import time
+    time.sleep(0.3)
+    _die()
+
+
+if __name__ == "__main__":
+    main()

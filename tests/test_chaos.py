@@ -1,0 +1,245 @@
+"""Crash-chaos harness: SIGKILL a durable ingest worker at randomized
+points, recover, and verify against an independent numpy oracle.
+
+Each round launches ``chaos_worker.py`` in a subprocess against a fresh
+durability directory.  The worker runs a seed-deterministic schedule of
+appends / deletes / compactions / query drains / snapshots and is killed
+-9 by one of six mechanisms:
+
+* ``before`` / ``after`` — at an op boundary (just before / just after
+  the op at ``kill_at``);
+* ``timer``   — a background timer fires at an arbitrary point mid-append
+  / mid-drain / mid-compact / mid-commit;
+* ``torn``    — the WAL failpoint writes a *partial* record frame, fsyncs
+  it, and dies (exercises truncate-at-first-torn-record);
+* ``snap_pre`` / ``snap_post`` — death immediately before / after the
+  snapshot directory rename (exercises tmp-dir discard and
+  snapshot-without-rotation replay).
+
+The parent then recovers the directory and checks three contracts:
+
+1. **Prefix consistency** — the recovered state equals the numpy oracle
+   replay of exactly ``last_seq - 1`` mutation records (the op schedule
+   and every payload are re-derivable from the seed alone, so the oracle
+   shares zero code with the recovery path beyond numpy).  Columns,
+   dtypes and tombstones are compared bit-for-bit.
+2. **Zero acknowledged loss** — the worker fsyncs every acknowledged
+   committed sequence number to an ack file; recovery must never land
+   below the largest acknowledged sequence.
+3. **Query equivalence** — random predicate trees evaluated on the
+   recovered table match the same trees on an oracle-built table,
+   bitmap-for-bitmap.
+
+``CHAOS_ROUNDS`` (default 24, ISSUE floor 20) scales the matrix; rounds
+cycle through all six kill modes under both ``wal_sync`` policies.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from chaos_worker import (append_batch, delete_rows, gen_ops,
+                          initial_columns)
+from repro.columnar import Durability, ExecConfig, StreamSession, run_query
+from repro.columnar.queries import random_tree
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKER = os.path.join(ROOT, "tests", "chaos_worker.py")
+
+N_OPS = 36
+ROUNDS = int(os.environ.get("CHAOS_ROUNDS", "24"))
+MODES = ("timer", "before", "after", "torn", "snap_pre", "snap_post")
+
+NUMPY_CFG = ExecConfig(planner="deepfish", engine="numpy")
+
+
+def _round_params():
+    out = []
+    for i in range(ROUNDS):
+        mode = MODES[i % len(MODES)]
+        wal_sync = ("group", "always")[(i // len(MODES)) % 2]
+        out.append(pytest.param(i, mode, wal_sync,
+                                id=f"r{i:02d}-{mode}-{wal_sync}"))
+    return out
+
+
+def _run_worker(seed, data_dir, ack_file, kill_at, mode, wal_sync):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, WORKER, str(seed), data_dir, ack_file,
+         str(kill_at), mode, str(N_OPS), wal_sync],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert proc.returncode == -9, (
+        f"worker must die by SIGKILL, got rc={proc.returncode}\n"
+        f"stdout={proc.stdout}\nstderr={proc.stderr}")
+
+
+def _max_acked(ack_file):
+    """Largest acknowledged sequence; torn trailing lines are ignored
+    (a kill can land between the ack write and its fsync)."""
+    acked = 0
+    if os.path.exists(ack_file):
+        with open(ack_file) as f:
+            for line in f:
+                try:
+                    acked = max(acked, int(json.loads(line)["seq"]))
+                except (ValueError, KeyError):
+                    continue
+    return acked
+
+
+def oracle_after(seed, applied):
+    """Replay exactly ``applied`` mutation records' worth of the op
+    schedule into plain numpy state.  Ops that log no WAL record (query
+    drains, explicit snapshots, all-duplicate deletes, tombstone-free
+    compactions) never change table state, so the prefix is unique."""
+    cols = {k: v.copy() for k, v in initial_columns(seed).items()}
+    tomb = np.zeros(len(cols["a"]), dtype=bool)
+    rec = 0
+    for kind, arg in gen_ops(seed, N_OPS):
+        if rec == applied:
+            break
+        if kind == "append":
+            tails = append_batch(arg)
+            n_new = len(tails["a"])
+            for k in cols:
+                cols[k] = np.concatenate(
+                    [cols[k], tails[k].astype(cols[k].dtype)])
+            tomb = np.concatenate([tomb, np.zeros(n_new, dtype=bool)])
+            rec += 1
+        elif kind == "delete":
+            idx = delete_rows(arg, len(tomb))
+            mask = np.zeros(len(tomb), dtype=bool)
+            mask[idx] = True
+            if (mask & ~tomb).any():
+                tomb |= mask
+                rec += 1
+        elif kind == "compact":
+            if tomb.any():
+                keep = ~tomb
+                cols = {k: v[keep] for k, v in cols.items()}
+                tomb = np.zeros(int(keep.sum()), dtype=bool)
+                rec += 1
+        # "query" / "snapshot" mutate nothing and log nothing
+    assert rec == applied, (
+        f"recovered sequence implies {applied} mutation records but the "
+        f"schedule only produces {rec} — recovery replayed a phantom")
+    return cols, tomb
+
+
+def _check_recovered(table, info, seed, acked):
+    assert acked <= info["last_seq"], (
+        f"acknowledged seq {acked} lost: recovery landed at "
+        f"{info['last_seq']}")
+    applied = info["last_seq"] - 1          # seq 1 is the create record
+    assert applied >= 0
+    cols, tomb = oracle_after(seed, applied)
+
+    assert set(table.columns) == set(cols)
+    assert table.n_records == len(cols["a"])
+    for name, exp in cols.items():
+        got = table.columns[name]
+        assert got.dtype == exp.dtype, name
+        assert np.array_equal(got, exp), (
+            f"column {name!r} diverged from oracle after {applied} records")
+    got_tomb = np.zeros(table.n_records, dtype=bool)
+    if table._tombstones is not None:
+        got_tomb[: len(table._tombstones)] = table._tombstones
+    assert np.array_equal(got_tomb, tomb), "tombstone mask diverged"
+
+    # query equivalence: oracle table built from scratch, no WAL involved
+    from repro.columnar import Table
+    oracle = Table({k: v.copy() for k, v in cols.items()})
+    if tomb.any():
+        oracle.delete(np.flatnonzero(tomb))
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    for _ in range(2):
+        tree = random_tree(oracle, 4, 2, rng)
+        want, _, _ = run_query(tree, oracle, config=NUMPY_CFG)
+        got, _, _ = run_query(tree, table, config=NUMPY_CFG)
+        assert np.array_equal(want, got), "recovered query result diverged"
+    return applied
+
+
+@pytest.mark.parametrize("rnd,mode,wal_sync", _round_params())
+def test_chaos_round(rnd, mode, wal_sync, tmp_path):
+    seed = 1000 + rnd
+    data_dir = str(tmp_path / "data")
+    ack_file = str(tmp_path / "acks.jsonl")
+    # snapshot-phase kills need a snapshot op after the failpoint arms:
+    # arm early for those modes
+    rng = np.random.default_rng(seed)
+    hi = 10 if mode in ("snap_pre", "snap_post") else N_OPS
+    kill_at = int(rng.integers(2, hi))
+
+    _run_worker(seed, data_dir, ack_file, kill_at, mode, wal_sync)
+    acked = _max_acked(ack_file)
+
+    if rnd % 2 == 0:
+        # full serving-layer recovery (epoch wiring, health surface)
+        sess = StreamSession(None, durable=data_dir, config=NUMPY_CFG)
+        try:
+            info = sess.recovery_info
+            assert info is not None
+            applied = _check_recovered(sess.table, info, seed, acked)
+            health = sess.health()
+            assert health["durable"] is True
+            assert health["recovery"]["recovered"] is True
+            assert health["recovery"]["replayed_records"] == \
+                info["replayed_records"]
+            # the recovered process keeps serving: mutate + query + sync
+            sess.append(append_batch(seed ^ 0xA11CE))
+            fut = sess.submit(random_tree(
+                sess.table, 4, 2, np.random.default_rng(seed)))
+            sess.drain()
+            assert fut.result(timeout=30) is not None
+            assert sess.sync() == sess.durability.wal.last_seq
+            assert sess.durability.wal.uncommitted == 0
+        finally:
+            sess.close()
+    else:
+        dur, table, info = Durability.recover(data_dir)
+        try:
+            applied = _check_recovered(table, info, seed, acked)
+            # recovery is re-entrant: a second recovery of the same (now
+            # closed) directory lands on the identical state
+        finally:
+            dur.close()
+        dur2, table2, info2 = Durability.recover(data_dir)
+        try:
+            assert info2["last_seq"] >= info["last_seq"]
+            for name, col in table.columns.items():
+                assert np.array_equal(table2.columns[name], col)
+        finally:
+            dur2.close()
+
+    # round telemetry for the aggregate log
+    _SEEN.append((mode, wal_sync, applied, info.get("snapshot_seq", 0),
+                  info.get("truncated_records", 0)))
+
+
+_SEEN = []
+
+
+def test_chaos_matrix_coverage():
+    """Runs after the rounds: the matrix must actually have exercised
+    every kill mechanism and both fsync policies, recovered from at
+    least one snapshot, replayed at least one WAL tail, and truncated at
+    least one torn record."""
+    if len(_SEEN) < min(ROUNDS, len(MODES)):
+        pytest.skip("rounds did not run (filtered?)")
+    modes = {m for m, _, _, _, _ in _SEEN}
+    syncs = {s for _, s, _, _, _ in _SEEN}
+    assert modes == set(MODES), f"kill modes not all exercised: {modes}"
+    assert syncs == {"group", "always"}
+    assert any(a > 0 for _, _, a, _, _ in _SEEN), "no round applied records"
+    assert any(sn > 0 for _, _, _, sn, _ in _SEEN), \
+        "no round recovered from a snapshot"
+    assert any(a > sn for _, _, a, sn, _ in _SEEN), \
+        "no round replayed a WAL tail past its snapshot"
+    assert any(t > 0 for _, _, _, _, t in _SEEN), \
+        "no round truncated a torn record"

@@ -104,6 +104,98 @@ def test_bulk_deadline_carries_interactive_along():
         assert s.stats.batches == 1             # one combined drain
 
 
+def test_starvation_valve_decision():
+    """The fairness valve, unit-tested on fabricated lane state:
+    interactive preemption is strict (it beats even a past-deadline
+    bulk) until bulk's oldest admit ages past the starvation ceiling,
+    where the valve force-drains both lanes and counts the firing."""
+    from repro.columnar.drainer import LANES, BackgroundDrainer
+    from repro.columnar.stream import StreamFuture, _Pending
+
+    t = _table(500)
+    s = StreamSession(t, engine="numpy", max_pending=64)
+    pol = DrainPolicy(max_wait_ms=50, interactive_wait_ms=5,
+                      starvation_factor=4.0)
+    d = BackgroundDrainer(s, pol)       # never started: decision only
+    atom = Atom("elevation_0", "lt", 3000.0)
+    now = time.perf_counter()
+
+    def pend(lane, age):
+        return [_Pending(atom, StreamFuture(s, lane), now - age)]
+
+    # interactive due, bulk young -> interactive alone
+    s._lanes["interactive"] = pend("interactive", 0.01)
+    s._lanes["bulk"] = pend("bulk", 0.01)
+    assert d._due_lanes_locked(now) == ("interactive",)
+    # bulk past its OWN deadline still loses to a due interactive
+    s._lanes["bulk"] = pend("bulk", pol.wait_s("bulk") + 0.02)
+    assert d._due_lanes_locked(now) == ("interactive",)
+    assert d.bulk_force_drains == 0
+    # ... until the starvation ceiling: valve fires, both lanes drain
+    s._lanes["bulk"] = pend("bulk", pol.starvation_s() + 0.01)
+    assert d._due_lanes_locked(now) == LANES
+    assert d.bulk_force_drains == 1
+    # interactive idle: bulk drains on its own deadline as before
+    s._lanes["interactive"] = []
+    assert d._due_lanes_locked(now) == LANES
+    s._lanes["bulk"] = pend("bulk", 0.01)
+    assert d._due_lanes_locked(now) == ()
+    s._lanes["bulk"] = []
+    s.close()
+
+
+def test_starvation_valve_bounds_bulk_latency_under_flood():
+    """Live stress: threads flood the interactive lane so every drainer
+    wakeup sees interactive due; a bulk query must still resolve within
+    the valve ceiling, and the ``bulk_starved_s`` gauge must have
+    surfaced a nonzero age while bulk sat out interactive drains."""
+    t = _table(2000)
+    pol = DrainPolicy(max_wait_ms=60, interactive_wait_ms=1,
+                      starvation_factor=3.0)
+    stop = threading.Event()
+    starved_seen = [0.0]
+    with StreamSession(t, engine="numpy", max_pending=10_000,
+                       max_queue=20_000, background=True,
+                       policy=pol) as s:
+
+        def flood():
+            while not stop.is_set():
+                try:
+                    s.submit(Atom("slope_0", "lt", 20.0),
+                             lane="interactive")
+                except StreamClosed:
+                    return
+                time.sleep(0.0002)
+
+        threads = [threading.Thread(target=flood) for _ in range(2)]
+        for th in threads:
+            th.start()
+        try:
+            time.sleep(0.05)            # flood established
+            t0 = time.perf_counter()
+            bulk = s.submit(Atom("elevation_0", "lt", 3000.0))
+
+            def poll():
+                starved_seen[0] = max(starved_seen[0],
+                                      s.health()["bulk_starved_s"])
+                return bulk.done()
+
+            assert _wait(poll, timeout=10.0)
+            waited = time.perf_counter() - t0
+        finally:
+            stop.set()
+            for th in threads:
+                th.join()
+        # ceiling (0.18s) plus generous scheduling/drain slack
+        assert waited < 5 * pol.starvation_s() + 1.0
+        # bulk sat out at least one interactive-only drain
+        assert starved_seen[0] > 0.0
+        from repro.columnar import unpack_bits
+        got = unpack_bits(bulk.result(), t.n_records)
+        np.testing.assert_array_equal(
+            got, t.eval_atom(Atom("elevation_0", "lt", 3000.0)))
+
+
 def test_max_pending_triggers_immediate_background_drain():
     t = _table()
     with StreamSession(t, engine="numpy", max_pending=4, background=True,

@@ -359,6 +359,51 @@ def test_httpd_endpoints(forest):
     ss.close()
 
 
+def test_httpd_healthz_surfaces_durability(tmp_path):
+    """A durable session's /healthz carries the WAL block and recovery
+    state; /metrics carries the ``repro_wal_*`` gauges after a drain."""
+    import numpy as np
+    from urllib.request import urlopen
+
+    from repro.columnar import make_forest_table
+    from repro.serve.httpd import ObservabilityServer
+
+    table = make_forest_table(4000, n_dup=1, seed=7)  # session-private
+    n0 = table.n_records
+    data_dir = str(tmp_path / "data")
+    reg = MetricsRegistry()
+    ss = _stream(table, reg, None, durable=data_dir)
+    rows = {n: c[:32].copy() for n, c in table.columns.items()}
+    ss.append(rows)
+    futs = [ss.submit(q) for q in _trees(table, 2, seed=4)]
+    for f in futs:
+        f.result(timeout=30)
+    with ObservabilityServer(ss) as srv:
+        health = json.loads(urlopen(f"{srv.url}/healthz",
+                                    timeout=10).read())
+        assert health["durable"] is True
+        assert health["wal"]["uncommitted"] == 0    # drain group-committed
+        assert health["wal"]["committed_seq"] >= 2  # create + append
+        assert health["recovery"] == {"recovered": False}
+        metrics = urlopen(f"{srv.url}/metrics",
+                          timeout=10).read().decode()
+        assert "repro_wal" in metrics
+        assert "repro_wal_commit_ms" in metrics
+    ss.close()
+
+    ss2 = _stream(None, reg, None, durable=data_dir)
+    with ObservabilityServer(ss2) as srv:
+        health = json.loads(urlopen(f"{srv.url}/healthz",
+                                    timeout=10).read())
+        rec = health["recovery"]
+        assert rec["recovered"] is True
+        assert rec["recovery_ms"] > 0
+    assert ss2.table.n_records == n0 + 32
+    np.testing.assert_array_equal(
+        ss2.table.columns["elevation_0"][-32:], rows["elevation_0"])
+    ss2.close()
+
+
 def test_httpd_404_and_bad_id(forest):
     from urllib.error import HTTPError
     from urllib.request import urlopen

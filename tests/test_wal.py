@@ -1,0 +1,379 @@
+"""WAL / snapshot / recovery unit contracts, plus the checked-envelope
+hardening of the derived-state caches (``columnar.persist``).
+
+The chaos harness (``test_chaos.py``) proves the end-to-end crash story;
+this file pins the unit-level invariants it rests on: record framing and
+group-commit accounting, truncate-at-first-torn-record, sequence-floor
+preservation across rotation, snapshot atomicity + corruption fallback,
+replay fidelity for every mutation kind, and the data-epoch token that
+keeps persisted plan/feedback caches honest across lineages.
+"""
+import os
+import pickle
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.columnar import (Durability, DurabilityError, ExecConfig,
+                            StreamSession, Table, WriteAheadLog, run_query)
+from repro.columnar.queries import random_tree
+
+CFG = ExecConfig(planner="deepfish", engine="numpy")
+
+
+def _table(n=200, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table({"a": rng.normal(size=n),
+                  "b": rng.integers(0, 50, size=n).astype(np.int64),
+                  "s": rng.choice(np.array(["ash", "oak", "pine"]), size=n)})
+
+
+def _assert_same_table(got: Table, want: Table):
+    assert set(got.columns) == set(want.columns)
+    assert got.n_records == want.n_records
+    assert got.version == want.version
+    for name, col in want.columns.items():
+        assert got.columns[name].dtype == col.dtype
+        np.testing.assert_array_equal(got.columns[name], col)
+    gt = np.zeros(got.n_records, bool)
+    wt = np.zeros(want.n_records, bool)
+    if got._tombstones is not None:
+        gt[: len(got._tombstones)] = got._tombstones
+    if want._tombstones is not None:
+        wt[: len(want._tombstones)] = want._tombstones
+    np.testing.assert_array_equal(gt, wt)
+
+
+# -- the log ------------------------------------------------------------------
+
+def test_wal_log_commit_replay_roundtrip(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    recs = [("append", {"rows": {"a": np.arange(3)}}),
+            ("delete", {"rows": np.array([1])}),
+            ("compact", {})]
+    for kind, payload in recs:
+        wal.log(kind, payload)
+    assert wal.uncommitted == 3 and wal.committed_seq == 0
+    assert wal.commit() is not None
+    assert wal.uncommitted == 0 and wal.committed_seq == 3
+    assert wal.commit() is None                 # idle commit is free
+    wal.close()
+
+    wal2 = WriteAheadLog(str(tmp_path / "wal"))
+    assert wal2.last_seq == 3 == wal2.committed_seq
+    replayed = list(wal2.replay())
+    assert [(s, k) for s, k, _ in replayed] == \
+        [(1, "append"), (2, "delete"), (3, "compact")]
+    np.testing.assert_array_equal(replayed[0][2]["rows"]["a"], np.arange(3))
+    assert list(wal2.replay(after_seq=2)) == replayed[2:]
+    wal2.close()
+
+
+def test_wal_sync_policies(tmp_path):
+    always = WriteAheadLog(str(tmp_path / "a"), sync="always")
+    always.log("compact", {})
+    assert always.uncommitted == 0 and always.commits == 1
+    always.close()
+    grouped = WriteAheadLog(str(tmp_path / "g"), sync="group",
+                            group_max_records=4)
+    for _ in range(3):
+        grouped.log("compact", {})
+    assert grouped.uncommitted == 3             # below the cap: buffered
+    grouped.log("compact", {})                  # cap reached: auto-commit
+    assert grouped.uncommitted == 0
+    grouped.close()
+    with pytest.raises(ValueError):
+        WriteAheadLog(str(tmp_path / "x"), sync="fsync-sometimes")
+
+
+def test_wal_truncates_torn_tail(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    for i in range(4):
+        wal.log("append", {"i": i})
+    wal.commit()
+    path = wal._tail_path
+    wal.close()
+    with open(path, "ab") as f:                 # torn final frame
+        f.write(b"\x01\x02\x03garbage")
+    wal2 = WriteAheadLog(str(tmp_path / "wal"))
+    assert wal2.last_seq == 4
+    assert wal2.truncated_records == 1 and wal2.truncated_bytes > 0
+    assert [s for s, _, _ in wal2.replay()] == [1, 2, 3, 4]
+    # the torn tail was physically removed: reopening is clean
+    wal2.log("append", {"i": 4})
+    wal2.commit()
+    wal2.close()
+    wal3 = WriteAheadLog(str(tmp_path / "wal"))
+    assert wal3.last_seq == 5 and wal3.truncated_records == 0
+    wal3.close()
+
+
+def test_wal_bitflip_drops_suffix(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    for i in range(6):
+        wal.log("append", {"i": i})
+    wal.commit()
+    path = wal._tail_path
+    wal.close()
+    data = bytearray(open(path, "rb").read())
+    data[len(data) // 2] ^= 0xFF                # flip a bit mid-log
+    open(path, "wb").write(bytes(data))
+    wal2 = WriteAheadLog(str(tmp_path / "wal"))
+    seqs = [s for s, _, _ in wal2.replay()]
+    assert wal2.truncated_records == 1
+    assert seqs == list(range(1, len(seqs) + 1))    # a clean prefix
+    assert wal2.last_seq == (seqs[-1] if seqs else 0) < 6
+    wal2.close()
+
+
+def test_wal_rotation_pins_sequence_floor(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    for i in range(5):
+        wal.log("append", {"i": i})
+    wal.rotate(covered_seq=5)                   # old segment GC'd
+    assert wal.segments_gced == 1
+    wal.close()
+    # the surviving segment is empty, but its NAME pins the floor
+    wal2 = WriteAheadLog(str(tmp_path / "wal"))
+    assert wal2.last_seq == 5
+    assert wal2.log("append", {"i": 5}) == 6
+    wal2.close()
+
+
+# -- snapshots + recovery -----------------------------------------------------
+
+def test_recover_snapshot_plus_tail(tmp_path):
+    t = _table()
+    dur = Durability(str(tmp_path / "d"), snapshot_every=None)
+    dur.attach(t)
+    t.append({"a": np.ones(8), "b": np.arange(8),
+              "s": np.array(["oak"] * 8)})
+    dur.snapshot()
+    t.delete(np.arange(4))
+    t.compact()
+    dur.commit()
+    dur.close()
+    dur2, t2, info = Durability.recover(str(tmp_path / "d"))
+    assert info["snapshot_seq"] == 2            # create + append covered
+    assert info["replayed_records"] == 2        # delete + compact tail
+    assert info["epoch"] == dur.epoch
+    _assert_same_table(t2, t)
+    dur2.close()
+
+
+def test_recover_skips_corrupt_snapshot(tmp_path):
+    t = _table()
+    dur = Durability(str(tmp_path / "d"), snapshot_every=None,
+                     keep_snapshots=2)
+    dur.attach(t)
+    t.append({"a": np.ones(4), "b": np.arange(4),
+              "s": np.array(["ash"] * 4)})
+    dur.snapshot()
+    t.delete([0, 1])
+    newest = dur.snapshot()
+    dur.close()
+    blob = bytearray(open(os.path.join(newest, "state.pkl"), "rb").read())
+    blob[10] ^= 0x40                            # bit flip: CRC mismatch
+    open(os.path.join(newest, "state.pkl"), "wb").write(bytes(blob))
+    dur2, t2, info = Durability.recover(str(tmp_path / "d"))
+    assert info["snapshots_skipped"] == 1       # fell back one snapshot
+    assert info["replayed_records"] == 1        # ... and replayed further
+    _assert_same_table(t2, t)
+    dur2.close()
+    # manifest format drift is refused the same way
+    with open(os.path.join(newest, "manifest.json"), "w") as f:
+        f.write('{"format": 999}')
+    dur3, t3, info3 = Durability.recover(str(tmp_path / "d"))
+    assert info3["snapshots_skipped"] == 1
+    _assert_same_table(t3, t)
+    dur3.close()
+
+
+def test_recover_rebuilds_dicts_and_set_column(tmp_path):
+    t = _table(seed=3)
+    assert t.dict_column("s") is not None       # built dictionary state
+    dur = Durability(str(tmp_path / "d"), snapshot_every=None)
+    dur.attach(t)
+    t.append({"a": np.zeros(6), "b": np.arange(6),
+              "s": np.array(["elm", "oak", "elm", "ash", "elm", "fir"])})
+    t.set_column("b", np.arange(t.n_records).astype(np.int64))
+    dur.snapshot()
+    dur.close()
+    dur2, t2, _ = Durability.recover(str(tmp_path / "d"))
+    _assert_same_table(t2, t)
+    d1, d2 = t.dict_column("s"), t2.dict_column("s")
+    np.testing.assert_array_equal(d1.codes, d2.codes)
+    np.testing.assert_array_equal(d1.values, d2.values)
+    assert d1.sorted_n == d2.sorted_n           # same merge state
+    # and queries agree bit-for-bit on the recovered table
+    rng = np.random.default_rng(0)
+    tree = random_tree(t, 4, 2, rng)
+    np.testing.assert_array_equal(run_query(tree, t, config=CFG)[0],
+                                  run_query(tree, t2, config=CFG)[0])
+    dur2.close()
+
+
+def test_delete_is_wal_logged_but_not_mutlogged(tmp_path):
+    t = _table()
+    v0 = t.version
+    dur = Durability(str(tmp_path / "d"), snapshot_every=None)
+    dur.attach(t)
+    t.delete([1, 2, 3])
+    # tombstones never invalidate prefix caches: delta_since still
+    # answers for the pre-delete version (version bump, rows untouched)
+    assert t.delta_since(v0) is not None
+    assert all(kind != "delete" for _, kind, _ in t._mutlog)
+    dur.commit()
+    dur.close()
+    _, t2, info = Durability.recover(str(tmp_path / "d"))
+    assert info["replayed_records"] == 2        # create + delete
+    _assert_same_table(t2, t)
+
+
+def test_lifecycle_misuse_raises(tmp_path):
+    d = str(tmp_path / "d")
+    dur = Durability(d, snapshot_every=None)
+    dur.attach(_table())
+    dur.close()
+    with pytest.raises(DurabilityError):        # split-brain guard
+        Durability(d).attach(_table())
+    with pytest.raises(DurabilityError):        # nothing recoverable
+        Durability.recover(str(tmp_path / "empty"))
+    with pytest.raises(ValueError):             # recover needs durable=
+        StreamSession(None, config=CFG)
+
+
+# -- the stream acknowledgement boundary --------------------------------------
+
+def test_stream_group_commit_per_drain(tmp_path):
+    t = _table(1000, seed=1)
+    s = StreamSession(t, config=CFG, durable=str(tmp_path / "d"))
+    wal = s.durability.wal
+    commits0 = wal.commits
+    for i in range(5):
+        s.append({"a": np.ones(4) * i, "b": np.arange(4),
+                  "s": np.array(["oak"] * 4)})
+    assert wal.uncommitted == 5                 # buffered, no fsync yet
+    assert wal.commits == commits0
+    fut = s.submit(random_tree(t, 4, 2, np.random.default_rng(2)))
+    s.drain()
+    fut.result(timeout=30)
+    # ONE fsync covered all five appends, before the future resolved
+    assert wal.uncommitted == 0
+    assert wal.commits == commits0 + 1
+    s.append({"a": np.zeros(2), "b": np.arange(2),
+              "s": np.array(["ash", "elm"])})
+    assert s.sync() == wal.last_seq             # explicit boundary
+    assert wal.uncommitted == 0
+    h = s.health()
+    assert h["durable"] and h["wal"]["uncommitted"] == 0
+    assert h["recovery"] == {"recovered": False}
+    s.close()
+    # close() snapshots: restart replays nothing
+    s2 = StreamSession(None, config=CFG, durable=str(tmp_path / "d"))
+    assert s2.recovery_info["replayed_records"] == 0
+    _assert_same_table(s2.table, t)
+    s2.close()
+
+
+def test_stream_wal_sync_always_commits_each_mutation(tmp_path):
+    t = _table(300, seed=2)
+    s = StreamSession(t, config=CFG, durable=str(tmp_path / "d"),
+                      wal_sync="always")
+    wal = s.durability.wal
+    for i in range(3):
+        s.append({"a": np.ones(2) * i, "b": np.arange(2),
+                  "s": np.array(["oak", "ash"])})
+        assert wal.uncommitted == 0             # fsync per mutation
+    s.close()
+
+
+# -- persist hardening (checked envelope + data epoch) ------------------------
+
+def _warm_session(tmp_path, cache_dir):
+    t = _table(2000, seed=5)
+    s = StreamSession(t, config=CFG, cache_dir=cache_dir)
+    futs = [s.submit(random_tree(t, 4, 2, np.random.default_rng(i)))
+            for i in range(3)]
+    s.drain()
+    for f in futs:
+        f.result(timeout=30)
+    s.close()                                   # flushes checked caches
+
+
+@pytest.mark.parametrize("damage", ["truncate", "bitflip", "empty"])
+def test_persist_corrupt_cache_cold_starts(tmp_path, damage):
+    from repro.columnar import persist
+    cache_dir = str(tmp_path / "warm")
+    _warm_session(tmp_path, cache_dir)
+    for name in (persist.PLAN_CACHE_FILE, persist.FEEDBACK_FILE):
+        path = os.path.join(cache_dir, name)
+        data = open(path, "rb").read()
+        assert len(data) > 64
+        if damage == "truncate":
+            open(path, "wb").write(data[: len(data) // 2])
+        elif damage == "bitflip":
+            flipped = bytearray(data)
+            flipped[len(flipped) // 2] ^= 0x10
+            open(path, "wb").write(bytes(flipped))
+        else:
+            open(path, "wb").write(b"")
+    s = StreamSession(_table(2000, seed=5), config=CFG,
+                      cache_dir=cache_dir)
+    assert s.restore_info["plans"] == 0         # clean cold start
+    assert s.restore_info.get("feedback_keys", 0) == 0
+    fut = s.submit(random_tree(s.table, 4, 2, np.random.default_rng(0)))
+    s.drain()
+    assert fut.result(timeout=30) is not None   # ... and still serves
+    s.close()
+
+
+def test_persist_epoch_token(tmp_path):
+    from repro.columnar.persist import _dump_checked, _load_checked
+    path = str(tmp_path / "cache.pkl")
+    _dump_checked({"x": 1}, path, epoch="lineage-A")
+    assert _load_checked(path, epoch="lineage-A") == {"x": 1}
+    assert _load_checked(path, epoch="lineage-B") is None   # foreign data
+    # one-sided epochs stay compatible (legacy files / non-durable runs)
+    assert _load_checked(path, epoch=None) == {"x": 1}
+    _dump_checked({"x": 2}, path, epoch=None)
+    assert _load_checked(path, epoch="lineage-A") == {"x": 2}
+
+
+def test_persist_format_drift_refused(tmp_path):
+    from repro.columnar.persist import FORMAT, _load_checked
+    path = str(tmp_path / "cache.pkl")
+    blob = pickle.dumps({"x": 1})
+    with open(path, "wb") as f:
+        pickle.dump({"format": FORMAT - 1, "crc": zlib.crc32(blob),
+                     "epoch": None, "blob": blob}, f)
+    assert _load_checked(path) is None
+
+
+def test_durable_stream_caches_survive_recovery_same_epoch(tmp_path):
+    """Caches persisted by a durable session warm the RECOVERED session
+    (same lineage) — and are refused by a session over different data."""
+    cache_dir = str(tmp_path / "warm")
+    data_dir = str(tmp_path / "data")
+    t = _table(2000, seed=6)
+    s = StreamSession(t, config=CFG, durable=data_dir,
+                      cache_dir=cache_dir)
+    futs = [s.submit(random_tree(t, 4, 2, np.random.default_rng(i)))
+            for i in range(3)]
+    s.drain()
+    for f in futs:
+        f.result(timeout=30)
+    s.close()
+
+    s2 = StreamSession(None, config=CFG, durable=data_dir,
+                       cache_dir=cache_dir)
+    assert s2.recovery_info is not None
+    assert s2.restore_info["plans"] >= 3        # same epoch: warm start
+    s2.close()
+
+    other = StreamSession(_table(2000, seed=6), config=CFG,
+                          durable=str(tmp_path / "other"),
+                          cache_dir=cache_dir)
+    assert other.restore_info["plans"] == 0     # different lineage: cold
+    other.close()
